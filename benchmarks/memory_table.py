@@ -1,0 +1,53 @@
+"""Paper Table 4 / Fig. 7: activation memory + recompute across
+checkpointing strategies — analytical model + measured saved-residual
+bytes per remat policy on a real (small) stack."""
+import io
+import contextlib
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config
+from repro.core import memory
+from repro.models.model import build_model
+from repro.train.step import build_loss_fn
+
+_SHAPE = re.compile(r"(f32|bf16|i32|s32|bool|pred)\[([0-9,]+)\]")
+_BYTES = {"f32": 4, "bf16": 2, "i32": 4, "s32": 4, "bool": 1, "pred": 1}
+
+
+def _saved_bytes(cfg):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 256), jnp.int32),
+             "labels": jnp.ones((2, 256), jnp.int32)}
+    loss_fn = build_loss_fn(model)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        jax.ad_checkpoint.print_saved_residuals(loss_fn, params, batch)
+    total = 0
+    for ln in buf.getvalue().splitlines():
+        if "from the argument" in ln:
+            continue  # params, not activations
+        m = _SHAPE.search(ln)
+        if m:
+            n = 1
+            for d in m.group(2).split(","):
+                n *= int(d)
+            total += n * _BYTES[m.group(1)]
+    return total
+
+
+def run(emit):
+    cfg1b = get_config("llama-1b")
+    t = memory.model_totals(cfg1b, n=256)
+    for k, v in t.items():
+        emit(f"table4_elems/{k}", v, "llama-1b@n256")
+    emit("fig7/recompute_reduction_vs_gcp",
+         memory.recompute_reduction_vs_gcp(cfg1b, 256), "paper=4.6x")
+
+    base = get_config("llama-60m")
+    for policy in ("none", "full", "cola_m", "dots"):
+        b = _saved_bytes(base.with_overrides(remat=policy))
+        emit(f"measured_residual_bytes/{policy}", b, "llama-60m@2x256")

@@ -1,0 +1,66 @@
+"""Paper Table 5 / Table 7 analogue at container scale: validation loss of
+full-rank vs CoLA vs Control (width-scaled full-rank at CoLA's FLOPs) vs
+GaLore vs SLTrain vs ReLoRA on the deterministic synthetic corpus.
+
+Absolute perplexities are not comparable to the paper's C4 numbers (no C4
+offline); the *ordering and gaps* are the reproduction target:
+CoLA ≈ full-rank, Control worse, baselines ≳ full-rank (paper §5.1).
+
+Learning rates follow paper App. D: 3e-3 for full-rank/baselines (the
+Han et al. setup the paper inherits) and 6e-3 for small-scale CoLA ("for
+smaller models like CoLA-60M, an even larger learning rate such 0.006 can
+be adopted") — measured here: CoLA@6e-3 beats full-rank@3e-3 while
+CoLA@3e-3 trails it, reproducing the paper's LR sensitivity note."""
+import dataclasses
+
+import numpy as np
+
+from repro.config import TrainConfig, get_config
+from repro.train.loop import train
+
+STEPS = 150
+COLA_LR = 6e-3  # paper App. D, small-model regime
+
+
+def _cfg(param, **kw):
+    cfg = get_config("llama-60m").smoke().with_overrides(
+        parameterization=param, **kw)
+    return cfg
+
+
+def run(emit):
+    tc = TrainConfig(steps=STEPS, global_batch=8, seq_len=128,
+                     learning_rate=3e-3, log_every=0,
+                     eval_every=0)
+    results = {}
+
+    def eval_loss(cfg, tc=tc):
+        out = train(cfg, tc)
+        return out["ce_loss"]
+
+    results["full_rank"] = eval_loss(_cfg("dense"))
+    results["cola"] = eval_loss(
+        _cfg("cola"), dataclasses.replace(tc, learning_rate=COLA_LR))
+    # Control: full-rank scaled down to CoLA's FLOPs class (paper Table 7):
+    # halve d_ff and width-related dims
+    ctl = _cfg("dense")
+    ctl = dataclasses.replace(ctl, d_ff=ctl.d_ff // 2, d_model=48,
+                              head_dim=12)
+    results["control"] = eval_loss(ctl)
+    results["sltrain"] = eval_loss(_cfg("sltrain"))
+    relora = _cfg("lora")
+    relora = dataclasses.replace(
+        relora, lora=dataclasses.replace(relora.lora, relora_every=40))
+    results["relora"] = eval_loss(relora)
+    results["galore"] = eval_loss(
+        _cfg("dense"), dataclasses.replace(tc, galore_rank=8,
+                                           galore_update_every=40))
+
+    for k, v in results.items():
+        emit(f"table5_ce/{k}", v, f"ppl={np.exp(min(v, 20)):.2f}")
+    emit("table5_gap/cola_minus_full",
+         results["cola"] - results["full_rank"],
+         "paper: ~0 (34.04 vs 34.06)")
+    emit("table7_gap/control_minus_cola",
+         results["control"] - results["cola"],
+         "paper: control significantly worse")

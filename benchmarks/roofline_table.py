@@ -1,0 +1,25 @@
+"""§Roofline summary: aggregates the dry-run sweep's per-cell JSONs into
+the EXPERIMENTS.md table (runs on whatever cells exist under
+experiments/dryrun/)."""
+import glob
+import json
+import os
+
+
+def rows(variant_glob="experiments/dryrun/*/*.json"):
+    out = []
+    for path in sorted(glob.glob(variant_glob)):
+        with open(path) as f:
+            rec = json.load(f)
+        if "roofline" in rec:
+            out.append(rec)
+    return out
+
+
+def run(emit):
+    for rec in rows():
+        r = rec["roofline"]
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/{rec['variant']}"
+        emit(f"roofline_step_s/{cell}", r["step_s"],
+             f"bound={r['bound']};frac={r['roofline_fraction']:.4f};"
+             f"mem_gb={rec['peak_bytes_per_chip']/1e9:.2f}")

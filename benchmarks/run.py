@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: flops,memory,pretrain,throughput,"
+                         "inference,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (flops_table, inference_table, memory_table,
+                            pretrain_table, roofline_table, scaling_table,
+                            throughput_table)
+    tables = {
+        "flops": flops_table,
+        "memory": memory_table,
+        "throughput": throughput_table,
+        "inference": inference_table,
+        "pretrain": pretrain_table,
+        "scaling": scaling_table,
+        "roofline": roofline_table,
+    }
+    sel = args.only.split(",") if args.only else list(tables)
+    print("name,us_per_call,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{float(value):.6g},{derived}", flush=True)
+
+    for key in sel:
+        t0 = time.time()
+        tables[key].run(emit)
+        emit(f"_bench_wall_s/{key}", time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

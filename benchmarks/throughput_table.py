@@ -1,0 +1,47 @@
+"""Paper Table 9 / Fig. 8 analogue: measured train-step wall time for
+full-rank vs vanilla-GCP vs CoLA vs CoLA-M (CPU-relative; the paper's A100
+numbers translate through the FLOPs ratios validated in flops_table)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig, get_config
+from repro.models.model import build_model
+from repro.train.step import build_train_step, make_train_state
+
+
+def _step_time(cfg, iters=4):
+    model = build_model(cfg)
+    tc = TrainConfig(steps=10, global_batch=4, seq_len=256)
+    state = make_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, tc), donate_argnums=0)
+    batch = {"tokens": jnp.ones((4, 256), jnp.int32),
+             "labels": jnp.ones((4, 256), jnp.int32)}
+    state, m = step(state, batch)  # compile + warmup
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / iters
+
+
+def run(emit):
+    variants = {
+        "full_rank": dict(parameterization="dense", remat="none"),
+        "vanilla_gcp": dict(parameterization="dense", remat="full"),
+        "cola": dict(parameterization="cola", remat="none"),
+        "cola_m": dict(parameterization="cola", remat="cola_m"),
+    }
+    tokens = 4 * 256
+    times = {}
+    for name, over in variants.items():
+        cfg = get_config("llama-60m").with_overrides(**over)
+        dt = _step_time(cfg)
+        times[name] = dt
+        emit(f"table9_step_s/{name}", dt, f"tok_per_s={tokens/dt:.0f}")
+    emit("fig8/cola_speedup_vs_full", times["full_rank"] / times["cola"],
+         "paper: 1.86x on A100")
+    emit("fig8/colam_speedup_vs_gcp", times["vanilla_gcp"] / times["cola_m"],
+         "paper: CoLA-M > GCP")

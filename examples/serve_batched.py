@@ -1,0 +1,20 @@
+"""Batched serving demo across architecture families: GQA (qwen2), MLA
+(minicpm3), attention-free (rwkv6) — one engine API, per-family caches.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+
+from repro.config import get_config
+from repro.serve.engine import make_engine
+
+for arch in ("qwen2-1.5b", "minicpm3-4b", "rwkv6-7b"):
+    cfg = get_config(arch).smoke()
+    eng = make_engine(cfg, max_batch=4, max_seq=96)
+    prompts = np.random.RandomState(0).randint(
+        1, cfg.vocab_size, (4, 16)).astype(np.int32)
+    tokens, stats = eng.generate(prompts, max_new_tokens=32)
+    print(f"{arch:15s} cache={'state' if cfg.sub_quadratic() else 'kv'} "
+          f"prefill={stats['prefill_s']*1e3:7.1f}ms "
+          f"decode={stats['decode_tok_per_s']:7.1f} tok/s "
+          f"sample={tokens[0][:8].tolist()}")

@@ -1,0 +1,60 @@
+"""End-to-end training driver: CoLA vs full-rank vs Control at equal token
+budget (paper Table 5/7 shape), with checkpointing + resume.
+
+Default runs a ~3M-param model for 300 steps on CPU in a few minutes; on a
+TPU fleet pass --full for the real llama-60m at the paper's batch.
+
+    PYTHONPATH=src python examples/train_cola_vs_fullrank.py [--steps N]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.config import TrainConfig, get_config
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="full llama-60m config (TPU-scale)")
+    args = ap.parse_args()
+
+    base = get_config("llama-60m")
+    if not args.full:
+        base = base.smoke().with_overrides(num_layers=4, d_model=128,
+                                           head_dim=32)
+        base = dataclasses.replace(
+            base, cola=dataclasses.replace(base.cola, rank_attn=32,
+                                           rank_mlp=32))
+    tc = TrainConfig(steps=args.steps, global_batch=8, seq_len=128,
+                     learning_rate=3e-3, log_every=max(args.steps // 6, 1),
+                     eval_every=args.steps // 2, eval_batches=4,
+                     checkpoint_dir="/tmp/cola_example_ckpt",
+                     checkpoint_every=args.steps // 2)
+
+    results = {}
+    for name, cfg in {
+        "cola": base.with_overrides(parameterization="cola"),
+        "full_rank": base.with_overrides(parameterization="dense"),
+        "control(0.5x width)": dataclasses.replace(
+            base.with_overrides(parameterization="dense"),
+            d_ff=base.d_ff // 2, d_model=base.d_model // 2,
+            head_dim=base.resolved_head_dim // 2),
+    }.items():
+        import shutil
+        shutil.rmtree("/tmp/cola_example_ckpt", ignore_errors=True)
+        print(f"=== {name} ===")
+        out = train(cfg, tc)
+        results[name] = out["ce_loss"]
+
+    print("\nfinal losses (paper Table 5/7 shape: CoLA ≈ full-rank, "
+          "Control worse):")
+    for k, v in results.items():
+        print(f"  {k:22s} {v:.4f}  (ppl {np.exp(v):.1f})")
+
+
+if __name__ == "__main__":
+    main()

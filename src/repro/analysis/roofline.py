@@ -1,0 +1,146 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e targets).
+
+    compute_s    = HLO_FLOPs_per_chip / peak_bf16
+    memory_s     = HLO_bytes_per_chip / hbm_bw
+    collective_s = collective_bytes_per_chip / ici_bw
+
+``compiled.cost_analysis()`` on a post-SPMD executable reports *per-device*
+flops/bytes (validated in tests/test_roofline.py against a hand-computed
+sharded matmul); collective bytes come from analysis/hlo.py.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per training step —
+3 matmul passes (fwd + 2 bwd) × 2 MAC.  The ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/redundancy waste (CoLA-M recompute shows up here, as the
+paper's Table 4 predicts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.analysis.hlo import collective_bytes
+from repro.config import ModelConfig, ShapeSpec
+from repro.launch.mesh import V5E
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    peak_mem_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float
+    model_flops_ratio: float
+    coll_detail: Dict[str, float]
+    variant: str = "baseline"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction: model_flops-time / roofline step time."""
+        ideal = (self.model_flops / self.n_chips) / V5E["peak_bf16_flops"]
+        return ideal / self.step_s if self.step_s > 0 else 0.0
+
+
+# --------------------------------------------------------------------------
+# Parameter / FLOP counting for MODEL_FLOPS
+# --------------------------------------------------------------------------
+def count_params(cfg: ModelConfig, active_only: bool = False) -> float:
+    """Approximate parameter count from config arithmetic (matmul sites
+    only — embeddings excluded per Kaplan et al. convention)."""
+    import jax
+    from repro.models.model import build_model
+    from repro.models.common import ParamDef, is_def
+
+    model = build_model(cfg)
+    defs = model.defs()
+    total = 0.0
+    expert_total = 0.0
+    for path, d in jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=is_def)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = 1
+        for s in d.shape:
+            n *= s
+        if "embed" in keys[:1] or "head" in keys[:1]:
+            continue
+        if "experts" in keys:
+            expert_total += n
+        else:
+            total += n
+    if active_only and cfg.moe.enabled:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+        return total + expert_total * frac
+    return total + expert_total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N_active·tokens for a train step; 2·N_active·tokens for fwd-only."""
+    n_active = count_params(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# --------------------------------------------------------------------------
+def build_roofline(*, arch: str, shape: ShapeSpec, mesh_name: str,
+                   n_chips: int, cost: Dict, hlo_text: str,
+                   peak_mem: float, cfg: ModelConfig,
+                   variant: str = "baseline") -> Roofline:
+    # loop-aware HLO analysis (XLA's cost_analysis counts while bodies once;
+    # analysis/hlo.py rescales by known_trip_count — see its docstring)
+    from repro.analysis.hlo import analyze
+    full = analyze(hlo_text)
+    coll = full
+    flops = float(full["flops"])
+    byts = float(full["bytes"])
+    compute_s = flops / V5E["peak_bf16_flops"]
+    memory_s = byts / V5E["hbm_bw"]
+    coll_s = coll["bytes_total"] / V5E["ici_bw"]
+    bound = max((("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    ratio = (mf / n_chips) / flops if flops else 0.0
+    detail = {k: v for k, v in coll.items()
+              if k.startswith(("bytes_", "count_"))}
+    detail["bytes_total"] = coll["bytes_total"]
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=coll["bytes_total"],
+        peak_mem_per_chip=peak_mem,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bound=bound, model_flops=mf, model_flops_ratio=ratio,
+        coll_detail=detail, variant=variant)
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':6s} {'var':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>10s} {'MF_ratio':>8s} {'roofl%':>7s} {'mem_GB':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:26s} {r.shape:12s} {r.mesh:6s} {r.variant:10s} "
+            f"{r.compute_s:10.4g} {r.memory_s:10.4g} {r.collective_s:10.4g} "
+            f"{r.bound:>10s} {r.model_flops_ratio:8.3f} "
+            f"{100*r.roofline_fraction:6.1f}% "
+            f"{r.peak_mem_per_chip/1e9:7.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,315 @@
+"""Configuration system for the CoLA reproduction framework.
+
+Frozen dataclasses + a registry keyed by ``--arch`` id.  Every assigned
+architecture lives in ``repro/configs/<id>.py`` and registers a
+:class:`ModelConfig`; input-shape cells are :class:`ShapeSpec` entries shared
+across the LM family.
+
+Design notes
+------------
+* Configs are *plain data* — no jax imports here, so importing a config never
+  touches device state (required for the dry-run's XLA_FLAGS ordering).
+* ``parameterization`` selects how every linear site is realized:
+  ``dense`` (full-rank baseline), ``cola`` (the paper), ``lora`` (ReLoRA
+  baseline), ``sltrain`` (low-rank + sparse baseline).
+* ``cola_sigma`` follows paper Appendix E.1 Table 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# Enums (plain strings to keep configs JSON-serializable)
+# --------------------------------------------------------------------------
+PARAMETERIZATIONS = ("dense", "cola", "lora", "sltrain")
+ATTENTION_KINDS = ("gqa", "mla", "none")  # "none" => attention-free (rwkv)
+BLOCK_KINDS = ("attn", "mamba", "rwkv6")
+ROPE_KINDS = ("rope", "mrope", "none")
+COLA_SIGMA = ("both", "lowrank_only", "reduced", "fullrank_only")
+REMAT_POLICIES = ("none", "full", "cola_m", "dots")
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    # apply MoE every `interleave_step` layers (1 = every layer, 2 = alternate)
+    interleave_step: int = 1
+    # dense d_ff used on the non-MoE layers when interleave_step > 1
+    dense_d_ff: int = 0
+    # shared expert (llama4-style); 0 disables
+    shared_expert_d_ff: int = 0
+    # router jitter / z-loss
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek/MiniCPM3 style)."""
+    kv_lora_rank: int = 256
+    q_lora_rank: int = 768
+    qk_rope_head_dim: int = 32
+    qk_nope_head_dim: int = 64
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 => ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class ColaConfig:
+    """CoLA knobs (paper §3, App. D/E)."""
+    rank_attn: int = 0          # 0 => d_model // 4
+    rank_mlp: int = 0           # 0 => d_model // 4
+    sigma: str = "lowrank_only"  # COLA_SIGMA
+    # Use the fused Pallas auto-encoder kernel when on TPU.
+    use_fused_kernel: bool = False
+
+
+@dataclass(frozen=True)
+class LoraConfig:
+    rank: int = 128
+    alpha: float = 32.0
+    # ReLoRA merge-and-restart period (steps); 0 disables restarts.
+    relora_every: int = 0
+
+
+@dataclass(frozen=True)
+class SLTrainConfig:
+    rank: int = 128
+    sparsity: float = 0.03  # fraction of nonzeros in S
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "unnamed"
+    family: str = "dense"             # FAMILIES
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                 # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    max_seq_len: int = 4096
+    attention: str = "gqa"            # ATTENTION_KINDS
+    rope: str = "rope"                # ROPE_KINDS
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # --- block layout -------------------------------------------------
+    # Pattern of block kinds, tiled to num_layers. E.g. jamba:
+    # ("mamba",)*3 + ("attn",) + ("mamba",)*4  (1 attn per 8).
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # --- substructure ---------------------------------------------------
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    mamba: MambaConfig = field(default_factory=MambaConfig)
+    # --- parameterization (the paper's axis) ----------------------------
+    parameterization: str = "cola"    # PARAMETERIZATIONS
+    cola: ColaConfig = field(default_factory=ColaConfig)
+    lora: LoraConfig = field(default_factory=LoraConfig)
+    sltrain: SLTrainConfig = field(default_factory=SLTrainConfig)
+    # --- enc-dec (whisper) ----------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500
+    # --- vlm ----------------------------------------------------------
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    # --- numerics -------------------------------------------------------
+    dtype: str = "bfloat16"           # compute dtype
+    param_dtype: str = "float32"      # master params
+    # --- training-time behaviour ----------------------------------------
+    remat: str = "cola_m"             # REMAT_POLICIES
+    # ---------------------------------------------------------------------
+    notes: str = ""
+
+    # ----- derived ---------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def rank_attn(self) -> int:
+        return self.cola.rank_attn or (self.d_model // 4)
+
+    @property
+    def rank_mlp(self) -> int:
+        return self.cola.rank_mlp or (self.d_model // 4)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Block kind per layer, tiling block_pattern to num_layers."""
+        pat = self.block_pattern
+        reps = (self.num_layers + len(pat) - 1) // len(pat)
+        return tuple((pat * reps)[: self.num_layers])
+
+    def layer_is_moe(self, layer_idx: int) -> bool:
+        if not self.moe.enabled:
+            return False
+        step = max(1, self.moe.interleave_step)
+        # MoE on layers (step-1, 2*step-1, ...) — matches llama4/jamba refs.
+        return (layer_idx % step) == (step - 1)
+
+    def sub_quadratic(self) -> bool:
+        """True when long-context decode is feasible (SSM/hybrid/linear)."""
+        kinds = set(self.layer_kinds())
+        return bool(kinds & {"mamba", "rwkv6"}) or self.attention == "none"
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Reduced copy for CPU smoke tests -------------------------------------
+    def smoke(self) -> "ModelConfig":
+        pat = self.block_pattern
+        # keep one full pattern repetition (bounded), tiny dims
+        n_layers = min(len(pat), 8) if len(pat) > 1 else 2
+        d = 64
+        heads = 4
+        kv = min(self.num_kv_heads, heads) or heads
+        kv = heads if heads % kv else kv
+        moe = self.moe
+        if moe.enabled:
+            moe = dataclasses.replace(
+                moe, num_experts=min(4, moe.num_experts),
+                dense_d_ff=128 if moe.dense_d_ff else 0,
+                shared_expert_d_ff=128 if moe.shared_expert_d_ff else 0)
+        return dataclasses.replace(
+            self,
+            num_layers=n_layers,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=min(kv, 2) if self.num_kv_heads < self.num_heads else heads,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            max_seq_len=128,
+            moe=moe,
+            mla=MLAConfig(kv_lora_rank=32, q_lora_rank=48,
+                          qk_rope_head_dim=8, qk_nope_head_dim=16,
+                          v_head_dim=16),
+            mamba=MambaConfig(d_state=8, d_conv=4, expand=2, dt_rank=8),
+            cola=dataclasses.replace(self.cola, rank_attn=16, rank_mlp=16),
+            lora=dataclasses.replace(self.lora, rank=8),
+            sltrain=dataclasses.replace(self.sltrain, rank=8),
+            num_encoder_layers=2 if self.is_encoder_decoder else 0,
+            encoder_seq_len=32 if self.is_encoder_decoder else self.encoder_seq_len,
+            mrope_sections=(2, 3, 3),  # sums to head_dim//2 = 8
+        )
+
+
+# --------------------------------------------------------------------------
+# Input-shape cells (assigned LM shapes)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeSpec]:
+    """Which of the 4 assigned shape cells apply to this arch (spec rules)."""
+    out = []
+    for s in LM_SHAPES.values():
+        if s.name == "long_500k" and not cfg.sub_quadratic():
+            continue  # documented skip: full-attention arch
+        out.append(s)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Training hyper-params (paper Appendix D)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 256
+    learning_rate: float = 3e-3
+    min_lr_ratio: float = 0.1
+    warmup_ratio: float = 0.1
+    weight_decay: float = 0.01
+    grad_clip: float = 0.5
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    optimizer: str = "adamw"          # adamw | lamb
+    # baselines / extensions
+    galore_rank: int = 0              # 0 disables GaLore projection
+    galore_update_every: int = 200
+    grad_compression: str = "none"    # none | int8
+    # infra
+    stop_after: int = 0               # stop early (checkpoint) — emulates
+                                      # preemption without changing the
+                                      # LR-schedule horizon (tests/ops)
+    checkpoint_every: int = 0         # 0 disables
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    log_every: int = 10
+    eval_every: int = 0
+    eval_batches: int = 4
+    # data
+    data: str = "synthetic"           # synthetic | packed:<path>
+    # microbatching (grad accumulation)
+    microbatch: int = 0               # 0 = no accumulation
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    # late import so registration side-effects run
+    from repro import configs as _configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    from repro import configs as _configs  # noqa: F401
+    return sorted(_REGISTRY)

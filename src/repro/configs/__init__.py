@@ -1,0 +1,28 @@
+"""Architecture registry — importing this package registers every config."""
+from repro.configs import (  # noqa: F401
+    paper_llama,
+    jamba_v01_52b,
+    rwkv6_7b,
+    internlm2_20b,
+    llama3_2_1b,
+    minicpm3_4b,
+    qwen2_1_5b,
+    llama4_maverick_400b_a17b,
+    phi3_5_moe_42b_a6_6b,
+    whisper_tiny,
+    qwen2_vl_2b,
+)
+
+# Canonical ids of the 10 assigned architectures (dry-run sweep order).
+ASSIGNED = [
+    "jamba-v0.1-52b",
+    "rwkv6-7b",
+    "internlm2-20b",
+    "llama3.2-1b",
+    "minicpm3-4b",
+    "qwen2-1.5b",
+    "llama4-maverick-400b-a17b",
+    "phi3.5-moe-42b-a6.6b",
+    "whisper-tiny",
+    "qwen2-vl-2b",
+]

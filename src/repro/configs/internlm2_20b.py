@@ -1,0 +1,24 @@
+"""internlm2-20b [dense]: 48L d=6144 48H (GQA kv=8) d_ff=16384 vocab=92544.
+[arXiv:2403.17297]
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("internlm2-20b")
+def internlm2():
+    return ModelConfig(
+        name="internlm2-20b",
+        family="dense",
+        num_layers=48,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92544,
+        max_seq_len=32768,
+        attention="gqa",
+        rope="rope",
+        rope_theta=1e6,
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+    )

@@ -1,0 +1,36 @@
+"""jamba-v0.1-52b [hybrid]: 32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2, Mamba:attn 1:7 interleave.  [arXiv:2403.19887]
+
+Jamba layout: each period of 8 layers has 1 attention layer (index 3 within
+the period) and 7 Mamba layers; MoE replaces the MLP on every 2nd layer
+(e_step=2).  CoLA is applied to attention projections, expert FFN factors and
+Mamba in/out projections (DESIGN.md §Arch-applicability).
+"""
+from repro.config import ColaConfig, MambaConfig, MoEConfig, ModelConfig, register
+
+_PERIOD = ("mamba", "mamba", "mamba", "attn",
+           "mamba", "mamba", "mamba", "mamba")
+
+
+@register("jamba-v0.1-52b")
+def jamba():
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=65536,
+        max_seq_len=524288,
+        attention="gqa",
+        rope="none",  # jamba uses no positional embeddings (mamba provides order)
+        block_pattern=_PERIOD,
+        moe=MoEConfig(num_experts=16, top_k=2, capacity_factor=1.25,
+                      interleave_step=2, dense_d_ff=14336),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+        notes="hybrid Mamba+attn 1:7, MoE every 2nd layer",
+    )

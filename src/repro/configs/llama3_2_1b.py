@@ -1,0 +1,27 @@
+"""llama3.2-1b [dense]: 16L d=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+[hf:meta-llama/Llama-3.2-1B]
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("llama3.2-1b")
+def llama32_1b():
+    return ModelConfig(
+        name="llama3.2-1b",
+        family="dense",
+        num_layers=16,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=128256,
+        max_seq_len=131072,
+        attention="gqa",
+        rope="rope",
+        rope_theta=5e5,
+        tie_embeddings=True,
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+        notes="closest to the paper's own LLaMA family; primary hillclimb cell",
+    )

@@ -1,0 +1,35 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 128e top-1, early fusion.  [hf:meta-llama/Llama-4-*]
+
+Maverick interleaves dense and MoE layers (interleave_moe_layer_step=2) and
+adds a shared expert on MoE layers; routed/shared expert d_ff=8192, dense
+layers use d_ff=16384.  That layout reproduces the ~400B-total / ~17B-active
+budget.  Experts are CoLA auto-encoders (beyond-paper: the paper lists MoE as
+future work) sharded expert-parallel over the 'model' mesh axis.
+"""
+from repro.config import ColaConfig, MoEConfig, ModelConfig, register
+
+
+@register("llama4-maverick-400b-a17b")
+def llama4_maverick():
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        max_seq_len=131072,
+        attention="gqa",
+        rope="rope",
+        rope_theta=5e5,
+        moe=MoEConfig(num_experts=128, top_k=1, capacity_factor=1.25,
+                      interleave_step=2, dense_d_ff=16384,
+                      shared_expert_d_ff=8192),
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+        notes="early-fusion multimodal in the original; text backbone here",
+    )

@@ -1,0 +1,31 @@
+"""minicpm3-4b [dense]: 62L d=2560 40H (kv=40) d_ff=6400 vocab=73448 — MLA.
+[hf:openbmb/MiniCPM3-4B]
+
+MLA (multi-head latent attention): KV compressed into a 256-dim latent +
+32-dim rope key; CoLA applies to the dense factors of the latent projections
+and the MLP.  vocab 73448 pads to 73472 for 16-way sharding.
+"""
+from repro.config import ColaConfig, MLAConfig, ModelConfig, register
+
+
+@register("minicpm3-4b")
+def minicpm3():
+    return ModelConfig(
+        name="minicpm3-4b",
+        family="dense",
+        num_layers=62,
+        d_model=2560,
+        num_heads=40,
+        num_kv_heads=40,
+        head_dim=64,
+        d_ff=6400,
+        vocab_size=73448,
+        max_seq_len=32768,
+        attention="mla",
+        mla=MLAConfig(kv_lora_rank=256, q_lora_rank=768,
+                      qk_rope_head_dim=32, qk_nope_head_dim=64,
+                      v_head_dim=64),
+        rope="rope",
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+    )

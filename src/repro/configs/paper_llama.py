@@ -1,0 +1,53 @@
+"""The paper's own LLaMA family (Table 5): 60M / 130M / 350M / 1B / 7B.
+
+Dims follow the GaLore/SLTrain setup the paper inherits (Zhao et al. 2024,
+Table 2 therein).  CoLA ranks r follow paper Table 5 exactly
+(r/d = 128/512, 256/768, 256/1024, 512/2048, 1024/4096).
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+def _llama(name, L, d, heads, dff, r, vocab=32000, seq=1024, kv=None):
+    return ModelConfig(
+        name=name,
+        family="dense",
+        num_layers=L,
+        d_model=d,
+        num_heads=heads,
+        num_kv_heads=kv or heads,
+        d_ff=dff,
+        vocab_size=vocab,
+        max_seq_len=seq,
+        attention="gqa",
+        rope="rope",
+        parameterization="cola",
+        cola=ColaConfig(rank_attn=r, rank_mlp=r,
+                        sigma="both" if d < 1024 else "lowrank_only"),
+        block_pattern=("attn",),
+        notes="paper Table 5 config",
+    )
+
+
+@register("llama-60m")
+def llama_60m():
+    return _llama("llama-60m", 8, 512, 8, 1376, 128)
+
+
+@register("llama-130m")
+def llama_130m():
+    return _llama("llama-130m", 12, 768, 12, 2048, 256)
+
+
+@register("llama-350m")
+def llama_350m():
+    return _llama("llama-350m", 24, 1024, 16, 2736, 256)
+
+
+@register("llama-1b")
+def llama_1b():
+    return _llama("llama-1b", 24, 2048, 32, 5461, 512)
+
+
+@register("llama-7b")
+def llama_7b():
+    return _llama("llama-7b", 32, 4096, 32, 11008, 1024, seq=2048)

@@ -1,0 +1,25 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16e top-2.  [hf:microsoft/Phi-3.5-MoE-instruct]
+"""
+from repro.config import ColaConfig, MoEConfig, ModelConfig, register
+
+
+@register("phi3.5-moe-42b-a6.6b")
+def phi35_moe():
+    return ModelConfig(
+        name="phi3.5-moe-42b-a6.6b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=6400,
+        vocab_size=32064,
+        max_seq_len=131072,
+        attention="gqa",
+        rope="rope",
+        moe=MoEConfig(num_experts=16, top_k=2, capacity_factor=1.25,
+                      interleave_step=1),
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+    )

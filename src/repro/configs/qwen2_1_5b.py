@@ -1,0 +1,26 @@
+"""qwen2-1.5b [dense]: 28L d=1536 12H (GQA kv=2) d_ff=8960 vocab=151936,
+QKV bias.  [arXiv:2407.10671]
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("qwen2-1.5b")
+def qwen2():
+    return ModelConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        max_seq_len=32768,
+        attention="gqa",
+        rope="rope",
+        rope_theta=1e6,
+        qkv_bias=True,
+        tie_embeddings=True,
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+    )

@@ -1,0 +1,32 @@
+"""qwen2-vl-2b [vlm]: 28L d=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 —
+M-RoPE, dynamic resolution.  [arXiv:2409.12191]
+
+Backbone-only per spec: the vision tower is a STUB — ``input_specs()``
+provides precomputed patch embeddings plus 3D (temporal/height/width)
+M-RoPE position ids.
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("qwen2-vl-2b")
+def qwen2_vl():
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        family="vlm",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        max_seq_len=32768,
+        attention="gqa",
+        rope="mrope",
+        rope_theta=1e6,
+        qkv_bias=True,
+        tie_embeddings=True,
+        mrope_sections=(16, 24, 24),
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+        notes="vision tower stubbed: inputs are patch embeddings + 3D pos ids",
+    )

@@ -1,0 +1,30 @@
+"""rwkv6-7b [ssm]: 32L d=4096 attention-free, d_ff=14336 vocab=65536.
+Finch — data-dependent decay.  [arXiv:2404.05892]
+
+All time-mix (r/k/v/g/w/o) and channel-mix projections are CoLA
+auto-encoders; the WKV6 recurrence itself is a Pallas kernel
+(kernels/rwkv6_scan).
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("rwkv6-7b")
+def rwkv6():
+    return ModelConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=64,          # rwkv6 head_size=64 -> 64 heads at d=4096
+        num_kv_heads=64,
+        head_dim=64,
+        d_ff=14336,
+        vocab_size=65536,
+        max_seq_len=524288,
+        attention="none",
+        rope="none",
+        block_pattern=("rwkv6",),
+        parameterization="cola",
+        cola=ColaConfig(sigma="lowrank_only"),
+        notes="attention-free; O(1)-state decode; long_500k applicable",
+    )

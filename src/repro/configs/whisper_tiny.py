@@ -1,0 +1,32 @@
+"""whisper-tiny [audio]: 4L d=384 6H d_ff=1536 vocab=51865 — enc-dec,
+conv frontend STUB.  [arXiv:2212.04356]
+
+Per spec, the modality frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, frames, d_model).  4 encoder +
+4 decoder layers.  Full attention => long_500k skipped (DESIGN.md).
+CoLA rank = 96 < 128: MXU tile padding loss is quantified in the roofline.
+"""
+from repro.config import ColaConfig, ModelConfig, register
+
+
+@register("whisper-tiny")
+def whisper_tiny():
+    return ModelConfig(
+        name="whisper-tiny",
+        family="audio",
+        num_layers=4,
+        num_encoder_layers=4,
+        is_encoder_decoder=True,
+        encoder_seq_len=1500,
+        d_model=384,
+        num_heads=6,
+        num_kv_heads=6,
+        d_ff=1536,
+        vocab_size=51865,
+        max_seq_len=448,
+        attention="gqa",
+        rope="none",  # whisper uses learned/sinusoidal abs positions
+        parameterization="cola",
+        cola=ColaConfig(sigma="both"),  # tiny model: paper Table 10 regime
+        notes="conv frontend stubbed: inputs are frame embeddings",
+    )

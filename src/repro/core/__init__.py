@@ -1,0 +1,6 @@
+# The paper's primary contribution: CoLA auto-encoder layers (cola.py),
+# CoLA-M remat policies (colam.py), analytical compute/memory models
+# (flops.py / memory.py), and activation effective-rank analysis
+# (rank_analysis.py).
+from repro.core.cola import COLA_R_NAME, cola_apply, cola_defs  # noqa: F401
+from repro.core.colam import maybe_remat, remat_policy  # noqa: F401

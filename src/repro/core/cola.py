@@ -1,0 +1,100 @@
+"""CoLA: the bottleneck auto-encoder layer (paper Eq. 3).
+
+``h = B · σ(A · x)`` with ``A ∈ R^{d_in×r}`` (stored (in, out) convention),
+``B ∈ R^{r×d_out}`` and σ = SiLU.  The r-dimensional pre-activation is
+tagged with ``checkpoint_name('cola_r')`` so CoLA-M (core/colam.py) can save
+*only* the low-rank activations and recompute everything else — the paper's
+Table-4 memory recipe expressed as an XLA remat policy.
+
+σ placement follows paper Appendix E.1 (Table 10):
+* ``lowrank_only`` — σ between A and B everywhere (default for ≥350M),
+* ``both``         — additionally keep the original nonlinearity (the MLP's
+                     SwiGLU gate) on top — handled by the MLP module,
+* ``reduced``      — σ between A and B only at sites that were originally
+                     followed by a nonlinearity,
+* ``fullrank_only``— no σ between A and B (pure factorization control).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.common import ParamDef, silu
+
+# Name used by the CoLA-M remat policy.
+COLA_R_NAME = "cola_r"
+
+
+def cola_defs(d_in: int, d_out: int, rank: int,
+              in_ax: Optional[str], out_ax: Optional[str],
+              bias: bool = False) -> Dict[str, ParamDef]:
+    """ParamDefs for one auto-encoder site.
+
+    Init: A, B ~ N(0, 1/fan_in) — factorized layers need smaller init than
+    the dense site they replace (Khodak et al. 2021); 1/sqrt(fan_in) on both
+    factors gives the product W=BA spectral scale ~1/sqrt(d_in·r)·r which
+    tracks the dense 1/sqrt(d_in) for r = d/4.
+    """
+    defs = {
+        "a": ParamDef((d_in, rank), (in_ax, "rank"), init="fan_in"),
+        "b": ParamDef((rank, d_out), ("rank", out_ax), init="fan_in"),
+    }
+    if bias:
+        defs["bias_a"] = ParamDef((rank,), ("rank",), init="zeros")
+        defs["bias_b"] = ParamDef((d_out,), (out_ax,), init="zeros")
+    return defs
+
+
+def cola_apply(params, x: jax.Array, *, sigma: bool = True,
+               act_axes: Optional[Tuple[Optional[str], ...]] = None,
+               use_fused: bool = False) -> jax.Array:
+    """Apply ``B·σ(A·x)`` over the last dim of x.
+
+    act_axes: logical axes of the low-rank activation (defaults to
+    (batch, seq, rank)); drives TP sharding of the bottleneck.
+    """
+    if use_fused and x.ndim == 3 and sigma:
+        # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM.
+        from repro.kernels.cola_ae import ops as cola_ops
+        return cola_ops.cola_ae(x, params["a"], params["b"],
+                                bias_a=params.get("bias_a"),
+                                bias_b=params.get("bias_b"))
+    a = params["a"].astype(x.dtype)
+    b = params["b"].astype(x.dtype)
+    z = jnp.einsum("...d,dr->...r", x, a)
+    if "bias_a" in params:
+        z = z + params["bias_a"].astype(x.dtype)
+    if act_axes is None and z.ndim == 3:
+        act_axes = ("batch", "seq", "act_rank")
+    if act_axes is not None and len(act_axes) == z.ndim:
+        z = shard(z, *act_axes)
+    if sigma:
+        z = silu(z)
+    # The low-rank activation: the only tensor CoLA-M saves inside a block.
+    z = checkpoint_name(z, COLA_R_NAME)
+    h = jnp.einsum("...r,ro->...o", z, b)
+    if "bias_b" in params:
+        h = h + params["bias_b"].astype(x.dtype)
+    return h
+
+
+def sigma_between(cfg: ModelConfig, originally_nonlinear: bool) -> bool:
+    """Whether σ sits between A and B at this site (paper App. E.1)."""
+    mode = cfg.cola.sigma
+    if mode in ("lowrank_only", "both"):
+        return True
+    if mode == "reduced":
+        return originally_nonlinear
+    if mode == "fullrank_only":
+        return False
+    raise ValueError(mode)
+
+
+def keep_original_sigma(cfg: ModelConfig) -> bool:
+    """Whether the original nonlinearity (e.g. SwiGLU gate) is kept."""
+    return cfg.cola.sigma in ("both", "fullrank_only")

@@ -1,0 +1,48 @@
+"""CoLA-M: memory-efficient training via low-rank-activation checkpointing.
+
+The paper (§4, Table 4) saves only the r-dimensional bottleneck activations
+(7 per decoder block: q,k,v,o + gate,up,down) plus block inputs/outputs, and
+recomputes the up-projections and attention SDP during backward:
+
+    M_CoLA-M = 2nd + 7nr        C_CoLA-M = C_CoLA + 18.5ndr + 4n²d
+
+In JAX this is exactly ``jax.checkpoint`` with a ``save_only_these_names``
+policy over the ``'cola_r'`` names emitted by ``core.cola.cola_apply`` —
+block in/outputs are scan carries (always live), every r-dim tensor is
+saved, everything else (SDP included) is rematerialized.  Gradients are
+bitwise-identical to the unrematerialized program (tested in
+tests/test_colam.py).
+
+Policies:
+    none    — save everything (paper's "CoLA" row: max memory, no recompute)
+    full    — vanilla GCP: save nothing inside the block (paper's baseline)
+    cola_m  — save only low-rank activations (the paper's contribution)
+    dots    — XLA heuristic (save matmul outputs); beyond-paper comparison
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.cola import COLA_R_NAME
+
+
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "cola_m":
+        return jax.checkpoint_policies.save_only_these_names(COLA_R_NAME)
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(f"unknown remat policy '{name}'")
+
+
+def maybe_remat(fn: Callable, policy_name: str) -> Callable:
+    """Wrap a block function with jax.checkpoint per the named policy."""
+    if policy_name == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(policy_name),
+                          prevent_cse=True)

@@ -1,0 +1,102 @@
+"""Analytical compute models — paper Tables 2 & 3 (and Appendix B), exact.
+
+Per decoder layer, token batch n, width d, FFN width d_ff, rank r:
+
+    C_full    = 24nd² + 12n²d + 18ndd_ff
+    C_CoLA    = 48ndr + 12n²d + 18nr(d + d_ff)
+    C_LoRA    = 16nd² + 12n²d + 12ndd_ff + 48ndr + 18nr(d+d_ff)
+    C_SLTrain = C_full + 24d²r + 18dd_ff r
+    C_GaLore  = C_full + 16d²r + 12dd_ff r
+
+plus CoLA-M's recompute (Table 4): C_CoLA-M = C_CoLA + 18.5ndr + 4n²d and
+vanilla GCP: C_full + 23nd² + 4n²d.
+
+These are the *paper's own* accounting conventions (forward+backward with
+the 2× backward rule, lower-order terms dropped).  benchmarks/flops_table.py
+validates CoLA/full against the loop-aware HLO measurement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class LayerDims:
+    n: int        # tokens per sequence (paper's token batch)
+    d: int
+    d_ff: int
+    r: int
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, n: int) -> "LayerDims":
+        return cls(n=n, d=cfg.d_model, d_ff=cfg.d_ff, r=cfg.rank_attn)
+
+
+def full_rank(dims: LayerDims) -> float:
+    n, d, dff = dims.n, dims.d, dims.d_ff
+    return 24 * n * d**2 + 12 * n**2 * d + 18 * n * d * dff
+
+
+def cola(dims: LayerDims) -> float:
+    n, d, dff, r = dims.n, dims.d, dims.d_ff, dims.r
+    return 48 * n * d * r + 12 * n**2 * d + 18 * n * r * (d + dff)
+
+
+def cola_m(dims: LayerDims) -> float:
+    n, d, r = dims.n, dims.d, dims.r
+    return cola(dims) + 18.5 * n * d * r + 4 * n**2 * d
+
+
+def lora(dims: LayerDims) -> float:
+    n, d, dff, r = dims.n, dims.d, dims.d_ff, dims.r
+    return (16 * n * d**2 + 12 * n**2 * d + 12 * n * d * dff
+            + 48 * n * d * r + 18 * n * r * (d + dff))
+
+
+def sltrain(dims: LayerDims) -> float:
+    d, dff, r = dims.d, dims.d_ff, dims.r
+    return full_rank(dims) + 24 * d**2 * r + 18 * d * dff * r
+
+
+def galore(dims: LayerDims) -> float:
+    d, dff, r = dims.d, dims.d_ff, dims.r
+    return full_rank(dims) + 16 * d**2 * r + 12 * d * dff * r
+
+
+def vanilla_gcp(dims: LayerDims) -> float:
+    n, d = dims.n, dims.d
+    return full_rank(dims) + 23 * n * d**2 + 4 * n**2 * d
+
+
+METHODS = {
+    "full_rank": full_rank,
+    "cola": cola,
+    "cola_m": cola_m,
+    "lora": lora,
+    "relora": lora,
+    "sltrain": sltrain,
+    "galore": galore,
+    "vanilla_gcp": vanilla_gcp,
+}
+
+
+def per_layer(method: str, dims: LayerDims) -> float:
+    return METHODS[method](dims)
+
+
+def model_total(method: str, cfg: ModelConfig, n: int,
+                n_seqs: int = 1) -> float:
+    """Whole-model FLOPs (layers × per-layer × sequences); embeddings
+    excluded per the paper's convention."""
+    dims = LayerDims.from_config(cfg, n)
+    return per_layer(method, dims) * cfg.num_layers * n_seqs
+
+
+def crossover_rank(cfg: ModelConfig) -> float:
+    """Rank below which CoLA beats full-rank: r < (24d+18d_ff)·d /
+    (48d + 18(d+d_ff)) — paper's r < 0.62d for d_ff ≈ 2.5d."""
+    d, dff = cfg.d_model, cfg.d_ff
+    return (24 * d + 18 * dff) * d / (48 * d + 18 * (d + dff))

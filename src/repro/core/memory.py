@@ -1,0 +1,53 @@
+"""Analytical activation-memory models — paper Table 4 / Appendix C, exact.
+
+Per decoder layer, token batch n, width d, heads h, rank r (elements, not
+bytes; the paper's convention):
+
+    M_full        = 20nd + 2n²h
+    M_vanilla_GCP = nd
+    M_CoLA        = M_full + 14nr − 2.5nd      (σ removed at scale)
+    M_CoLA-M      = 2nd + 7nr
+
+Re-compute costs are in core/flops.py (cola_m / vanilla_gcp).
+benchmarks/memory_table.py compares these against the dry-run's
+measured per-device residual sizes.
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+
+
+def full_rank(n: int, d: int, h: int) -> float:
+    return 20 * n * d + 2 * n**2 * h
+
+
+def vanilla_gcp(n: int, d: int, h: int) -> float:
+    return float(n * d)
+
+
+def cola(n: int, d: int, h: int, r: int) -> float:
+    return full_rank(n, d, h) + 14 * n * r - 2.5 * n * d
+
+
+def cola_m(n: int, d: int, h: int, r: int) -> float:
+    return 2 * n * d + 7 * n * r
+
+
+def model_totals(cfg: ModelConfig, n: int) -> dict:
+    d, h, r = cfg.d_model, cfg.num_heads, cfg.rank_attn
+    L = cfg.num_layers
+    return {
+        "full_rank": L * full_rank(n, d, h),
+        "vanilla_gcp": L * vanilla_gcp(n, d, h),
+        "cola": L * cola(n, d, h, r),
+        "cola_m": L * cola_m(n, d, h, r),
+    }
+
+
+def recompute_reduction_vs_gcp(cfg: ModelConfig, n: int) -> float:
+    """Paper Fig. 7's headline: CoLA-M re-computes ~4.6× less than GCP."""
+    from repro.core import flops
+    dims = flops.LayerDims.from_config(cfg, n)
+    gcp_re = 23 * n * cfg.d_model**2 + 4 * n**2 * cfg.d_model
+    colam_re = 18.5 * n * cfg.d_model * dims.r + 4 * n**2 * cfg.d_model
+    return gcp_re / colam_re

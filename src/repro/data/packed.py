@@ -1,0 +1,45 @@
+"""Packed-corpus reader: a flat binary file of token ids (uint16/uint32)
+memory-mapped and sliced into fixed-length sequences.
+
+Layout: ``<path>.bin`` (token ids) + ``<path>.meta.json``
+({"dtype": "uint16"|"uint32", "num_tokens": N}).  This is the on-disk
+format real runs would use (tokenized C4); ``repro.data.packed.write_corpus``
+creates it (used by tests and by examples with synthetic text).
+Deterministic: batch = f(step, shard).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+
+def write_corpus(path: str, tokens: np.ndarray) -> None:
+    dtype = "uint16" if tokens.max() < 2**16 else "uint32"
+    tokens.astype(dtype).tofile(path + ".bin")
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"dtype": dtype, "num_tokens": int(tokens.size)}, f)
+
+
+class PackedCorpus:
+    def __init__(self, path: str, seed: int = 0):
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        self.tokens = np.memmap(path + ".bin", dtype=meta["dtype"],
+                                mode="r", shape=(meta["num_tokens"],))
+        self.seed = seed
+
+    def batch(self, step: int, batch: int, seq_len: int,
+              shard: int = 0, num_shards: int = 1) -> Dict[str, np.ndarray]:
+        s1 = seq_len + 1
+        n_seq = self.tokens.shape[0] // s1
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 131) % (2**31))
+        order = rng.permutation(n_seq)
+        base = (step * batch * num_shards + shard * batch) % n_seq
+        idx = order[(base + np.arange(batch)) % n_seq]
+        rows = np.stack([self.tokens[i * s1:(i + 1) * s1] for i in idx])
+        rows = rows.astype(np.int32)
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}

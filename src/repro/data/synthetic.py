@@ -1,0 +1,47 @@
+"""Deterministic Markov-Zipf synthetic LM corpus.
+
+The container is offline (no C4), so pre-training comparisons run on a
+synthetic stream with C4-like statistics: a Zipf(1.1) unigram marginal mixed
+with an order-1 Markov chain (a fixed permutation successor function applied
+with prob. ``markov_p``).  The chain gives models structure to learn, so
+validation loss separates full-rank vs CoLA vs baselines *relatively*, which
+is what the paper's Table 5 analogue needs (DESIGN.md §8.3).
+
+Batches are a pure function of (seed, step, shard) — checkpoint/resume and
+multi-host sharding need no iterator state beyond the integer step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+class MarkovZipf:
+    def __init__(self, vocab_size: int, seed: int = 0, alpha: float = 1.1,
+                 markov_p: float = 0.7):
+        self.vocab = vocab_size
+        self.seed = seed
+        self.markov_p = markov_p
+        rng = np.random.RandomState(seed)
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        probs = ranks ** (-alpha)
+        self.probs = probs / probs.sum()
+        self.successor = rng.permutation(vocab_size)
+
+    def batch(self, step: int, batch: int, seq_len: int,
+              shard: int = 0) -> Dict[str, np.ndarray]:
+        """(batch, seq_len+1) tokens -> {'tokens','labels'} of (b, s)."""
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 131 + shard * 7919) % (2**31))
+        s1 = seq_len + 1
+        zipf_draws = rng.choice(self.vocab, size=(batch, s1), p=self.probs)
+        use_markov = rng.random_sample((batch, s1)) < self.markov_p
+        toks = np.empty((batch, s1), np.int64)
+        toks[:, 0] = zipf_draws[:, 0]
+        for t in range(1, s1):
+            toks[:, t] = np.where(use_markov[:, t],
+                                  self.successor[toks[:, t - 1]],
+                                  zipf_draws[:, t])
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}

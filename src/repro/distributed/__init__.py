@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshEnv,
+    PSpec,
+    current_env,
+    logical_to_pspec,
+    mesh_env,
+    named_sharding_tree,
+    shard,
+    spec_tree,
+)

@@ -1,0 +1,86 @@
+"""Explicit collective helpers (shard_map level).
+
+Most collectives in this framework are *derived* by the SPMD partitioner
+from sharding constraints; these helpers exist for the paths where explicit
+scheduling wins (flash-decode over a sequence-sharded KV cache, int8
+compressed all-reduce, ring all-gather for the pipeline stage loop).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def flash_decode_attention(mesh: Mesh, q: jax.Array, k: jax.Array,
+                           v: jax.Array, lengths: jax.Array,
+                           axis: str = "model") -> jax.Array:
+    """Decode attention over a KV cache whose *sequence* dim is sharded.
+
+    q: (b, 1, h, hd) replicated over `axis`; k/v: (b, S, kv, hd) sharded on
+    dim 1.  Each rank computes partial scores over its S/n slice with a
+    numerically-stable local softmax, then partials are combined with a
+    logsumexp reduction (psum of (m, l, o) statistics) — the flash-decoding
+    schedule, written explicitly for the serve engine.
+    """
+    b, _, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+
+    def body(qb, kb, vb, ln):
+        n = jax.lax.psum(1, axis)
+        rank = jax.lax.axis_index(axis)
+        S_local = kb.shape[1]
+        base = rank * S_local
+        qg = qb.reshape(b, kv, group, hd)
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, kb).astype(jnp.float32)
+        s = s / jnp.sqrt(hd).astype(jnp.float32)
+        idx = base + jnp.arange(S_local)
+        valid = idx[None, :] < ln[:, None]                  # (b, S_local)
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)                             # (b, kv, g)
+        m = jnp.maximum(m, -1e30)  # all-masked shard guard
+        e = jnp.exp(s - m[..., None])
+        l = jnp.sum(e, axis=-1)
+        o = jnp.einsum("bkgs,bskh->bkgh", e.astype(qb.dtype), vb)
+        # logsumexp combine across shards
+        m_all = jax.lax.pmax(m, axis)
+        scale = jnp.exp(m - m_all)
+        l_all = jax.lax.psum(l * scale, axis)
+        o_all = jax.lax.psum(o * scale[..., None].astype(o.dtype), axis)
+        out = o_all / jnp.maximum(l_all, 1e-30)[..., None].astype(o.dtype)
+        return out.reshape(b, 1, h, hd)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, None, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(None)),
+        out_specs=P(None, None, None, None),
+        check_rep=False)(q, k, v, lengths)
+
+
+def ring_all_gather(mesh: Mesh, x: jax.Array, axis: str) -> jax.Array:
+    """Ring all-gather via collective_permute (N-1 hops) — the schedule a
+    bandwidth-optimal ICI all-gather uses; exercised by tests and available
+    to the pipeline loop."""
+    def body(xl):
+        n = jax.lax.psum(1, axis)
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        chunks = [xl]
+        cur = xl
+        for _ in range(n - 1):
+            cur = jax.lax.ppermute(cur, axis, perm)
+            chunks.append(cur)
+        # rank r holds [r, r-1, ..., r-n+1]; roll into canonical order
+        stacked = jnp.stack(chunks)                          # (n, ...)
+        order = (idx - jnp.arange(n)) % n
+        canon = jnp.zeros_like(stacked).at[order].set(stacked)
+        return jnp.concatenate(list(canon), axis=0)
+
+    return shard_map(body, mesh=mesh, in_specs=P(axis),
+                     out_specs=P(None), check_rep=False)(x)

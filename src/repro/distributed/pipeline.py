@@ -1,0 +1,80 @@
+"""GPipe-style pipeline parallelism over a mesh axis (optional feature).
+
+The default multi-pod layout uses the 'pod' axis as extra data parallelism
+(FSDP); this module provides the alternative: map layer *periods* onto
+pipeline stages along an axis and run the classic GPipe microbatch schedule
+with ``ppermute`` hops between stages.
+
+Implementation: stage-local parameters arrive via shard_map in_specs
+(stacked period params sharded on the leading 'layers' dim); microbatches
+stream through a ``lax.scan`` over (num_micro + num_stages - 1) ticks —
+the standard bubble.  Activations hop stages with collective_permute.
+
+This is exercised at test scale (4 stages on 4 CPU devices) and available
+from the launcher via ``--pipeline pod``; the dry-run exercises the default
+FSDP-over-pod layout, and EXPERIMENTS.md §Perf discusses when PP beats FSDP
+for the 400B cell (weights-AG-bound at small per-pod batch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(mesh: Mesh, axis: str, stage_fn: Callable,
+                     stage_params, x: jax.Array, num_micro: int
+                     ) -> jax.Array:
+    """Run x through num_stages stages of `stage_fn` laid out on `axis`.
+
+    stage_params: pytree whose leaves are stacked (num_stages, ...);
+    x: (num_micro * mb, ...) global batch. Returns the pipeline output
+    (valid on every rank, broadcast from the last stage).
+    """
+    n_stage = mesh.shape[axis]
+
+    def body(params_local, xl):
+        # params_local: leaves (1, ...) — this stage's slice
+        p = jax.tree.map(lambda w: w[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        micro = jnp.split(xl, num_micro, axis=0)
+        micro = jnp.stack(micro)                     # (num_micro, mb, ...)
+        ticks = num_micro + n_stage - 1
+        fwd_perm = [(i, i + 1) for i in range(n_stage - 1)]
+
+        def tick(carry, t):
+            buf, out = carry                          # buf: (mb, ...) in-flight
+            # stage 0 injects microbatch t (if any)
+            inject = jnp.where(t < num_micro, t, num_micro - 1)
+            x_in = jnp.where(stage == 0,
+                             micro[inject], buf)
+            y = stage_fn(p, x_in)
+            # last stage emits result for microbatch (t - n_stage + 1)
+            emit_idx = t - (n_stage - 1)
+            do_emit = (emit_idx >= 0) & (stage == n_stage - 1)
+            out = jax.lax.cond(
+                do_emit,
+                lambda o: o.at[jnp.maximum(emit_idx, 0)].set(y),
+                lambda o: o, out)
+            nxt = jax.lax.ppermute(y, axis, fwd_perm)
+            return (nxt, out), None
+
+        mb_shape = micro[0].shape
+        out0 = jnp.zeros((num_micro,) + tuple(mb_shape), x.dtype)
+        (_, out), _ = jax.lax.scan(
+            tick, (jnp.zeros(mb_shape, x.dtype), out0),
+            jnp.arange(ticks))
+        # broadcast final outputs from the last stage to all ranks
+        # (masked psum: multicast ppermute is not portable)
+        out = jnp.where(stage == n_stage - 1, out, jnp.zeros_like(out))
+        out = jax.lax.psum(out, axis)
+        return out.reshape((-1,) + tuple(mb_shape[1:]))
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pspec, P(None)),
+                     out_specs=P(None), check_rep=False)(stage_params, x)

@@ -1,0 +1,286 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every tensor dim in the framework is annotated with a *logical* axis name
+(``'batch'``, ``'rank'``, ``'ffw'``, …).  A *sharding profile* maps logical
+names to mesh-axis tuples.  Resolution degrades gracefully:
+
+* mesh axes absent from the current mesh are dropped (so one rule table
+  serves the single-pod ``('data','model')`` and multi-pod
+  ``('pod','data','model')`` meshes);
+* if the dim size is not divisible by the mesh-axes product, axes are
+  dropped from the left until it is (e.g. whisper's 6 heads on a 16-way
+  'model' axis ⇒ replicated);
+* a mesh axis already used by an earlier dim of the same tensor is skipped
+  (PartitionSpec forbids reuse).
+
+Profiles are the hillclimb lever for the collective roofline term:
+
+``baseline``  — TP on the CoLA *rank* axis (the naive port: every AE pair
+                psums its full output; 7 all-reduces/block),
+``megatron``  — output-dim TP adapted to CoLA (heads/ffw sharded; psum only
+                at o-proj and down-proj: 2 all-reduces/block at ~½ compute),
+``fsdp``      — no tensor parallelism; 'model' joins the batch axes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+PSpec = PartitionSpec
+
+# A rule value is a tuple of mesh axis names (sharded over their product).
+Rules = Dict[str, Tuple[str, ...]]
+
+_COMMON: Rules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    # sequence-sharding for *saved* activations (the scan carry between
+    # blocks): Megatron-SP semantics — residual stream lives seq-sharded
+    # over 'model', all-gathered at block entry.  Keeps the CoLA-M residual
+    # stack (periods, b, s, d) at 1/16 the footprint.
+    "seq_save": ("model",),
+    "kv_seq": ("model",),      # long-context KV cache: flash-decode sharding
+    "embed": (),
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "mrope": (),
+    "null": (),
+}
+
+PROFILES: Dict[str, Rules] = {
+    # --- naive TP on the CoLA bottleneck (paper-faithful first port) ------
+    "baseline": {
+        **_COMMON,
+        "rank": ("model",),
+        "heads": (),
+        "kv_heads": (),
+        "ffw": (),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "w_fsdp": ("data",),       # FSDP dim of weights (single-pod)
+        "w_fsdp2": ("pod", "data"),  # FSDP dim incl. pod axis (weights only)
+        "act_rank": ("model",),
+        "act_heads": (),
+        "act_ffw": (),
+    },
+    # --- Megatron-adapted CoLA: shard outer dims, psum at block exits -----
+    "megatron": {
+        **_COMMON,
+        "rank": (),                 # A factors replicated on 'model'
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffw": ("model",),
+        "expert": ("model",),
+        "vocab": ("model",),
+        "w_fsdp": ("data",),
+        "w_fsdp2": ("pod", "data"),
+        "act_rank": (),
+        "act_heads": ("model",),
+        "act_ffw": ("model",),
+    },
+    # --- pure FSDP / ZeRO-3 (model axis folded into batch) ---------------
+    "fsdp": {
+        **_COMMON,
+        "batch": ("pod", "data", "model"),
+        "seq_save": (),
+        "rank": (),
+        "heads": (),
+        "kv_heads": (),
+        "ffw": (),
+        "expert": (),
+        "vocab": (),
+        "kv_seq": (),
+        "w_fsdp": ("data", "model"),
+        "w_fsdp2": ("pod", "data", "model"),
+        "act_rank": (),
+        "act_heads": (),
+        "act_ffw": (),
+    },
+}
+
+
+@dataclass
+class MeshEnv:
+    """Active mesh + profile; threaded through via a context manager."""
+    mesh: Mesh
+    profile: str = "baseline"
+    overrides: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+
+    @property
+    def rules(self) -> Rules:
+        base = PROFILES[self.profile]
+        if self.overrides:
+            merged = dict(base)
+            merged.update(self.overrides)
+            return merged
+        return base
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+
+_tls = threading.local()
+
+
+def current_env() -> Optional[MeshEnv]:
+    return getattr(_tls, "env", None)
+
+
+@contextlib.contextmanager
+def mesh_env(mesh: Mesh, profile: str = "baseline",
+             overrides: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = current_env()
+    _tls.env = MeshEnv(mesh, profile, overrides or {})
+    try:
+        with mesh:
+            yield _tls.env
+    finally:
+        _tls.env = prev
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+def _resolve_dim(env: MeshEnv, name: Optional[str], size: Optional[int],
+                 used: set) -> Optional[Any]:
+    if name is None:
+        return None
+    rule = env.rules.get(name)
+    if rule is None:
+        raise KeyError(f"no sharding rule for logical axis '{name}' "
+                       f"(profile={env.profile})")
+    # drop axes absent from the mesh or already used
+    axes = [a for a in rule if a in env.mesh.shape and a not in used]
+    # drop from the left until the dim divides evenly
+    while axes:
+        prod = int(np.prod([env.axis_size(a) for a in axes]))
+        if size is None or (prod > 0 and size % prod == 0):
+            break
+        axes = axes[1:]
+    if not axes:
+        return None
+    used.update(axes)
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None,
+                     env: Optional[MeshEnv] = None) -> PartitionSpec:
+    """Resolve logical axis names to a PartitionSpec under the active mesh."""
+    env = env or current_env()
+    if env is None:
+        return PartitionSpec(*([None] * len(axes)))
+    used: set = set()
+    entries = []
+    for i, name in enumerate(axes):
+        size = None if shape is None else shape[i]
+        entries.append(_resolve_dim(env, name, size, used))
+    # trim trailing Nones (canonical form)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Attach a sharding constraint by logical axis names (no-op w/o mesh)."""
+    env = current_env()
+    if env is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} tensor")
+    spec = logical_to_pspec(axes, x.shape, env)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Tree helpers (params / states carry a parallel tree of logical-axes tuples)
+# --------------------------------------------------------------------------
+def spec_tree(axes_tree, shape_tree, env: Optional[MeshEnv] = None):
+    """Map a tree of logical-axes tuples + shapes -> tree of PartitionSpec."""
+    env = env or current_env()
+    return jax.tree.map(
+        lambda axes, shp: logical_to_pspec(axes, shp.shape, env),
+        axes_tree, shape_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            x is None or isinstance(x, str) for x in a),
+    )
+
+
+def named_sharding_tree(axes_tree, shape_tree, env: Optional[MeshEnv] = None):
+    env = env or current_env()
+    if env is None:
+        raise RuntimeError("named_sharding_tree requires an active mesh_env")
+    specs = spec_tree(axes_tree, shape_tree, env)
+    return jax.tree.map(lambda s: NamedSharding(env.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
+# --------------------------------------------------------------------------
+# Parameter shardings with automatic FSDP fill (ZeRO-3)
+# --------------------------------------------------------------------------
+_NO_FILL = {"layers", "null", "conv", "state", "mrope"}
+
+
+def param_pspec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                env: Optional[MeshEnv] = None) -> PartitionSpec:
+    """Like logical_to_pspec, then greedily shard the largest still-
+    unsharded eligible dim over the remaining FSDP axes ('pod','data').
+
+    This gives every weight/optimizer-state tensor a ZeRO-3 layout without
+    per-site annotations: semantic axes (rank/heads/ffw/expert/vocab) take
+    'model'; the fattest leftover dim takes the data axes.  Dims named in
+    ``_NO_FILL`` (scan/layers etc.) are never filled.
+    """
+    env = env or current_env()
+    if env is None:
+        return PartitionSpec(*([None] * len(axes)))
+    used: set = set()
+    entries = [_resolve_dim(env, name, shape[i], used)
+               for i, name in enumerate(axes)]
+    fsdp = [a for a in ("pod", "data") if a in env.mesh.shape
+            and a not in used]
+    if fsdp:
+        # candidate dims: unsharded, eligible, divisible — largest first
+        cands = sorted(
+            (i for i in range(len(axes))
+             if entries[i] is None and (axes[i] not in _NO_FILL)),
+            key=lambda i: -shape[i])
+        for i in cands:
+            axes_try = list(fsdp)
+            while axes_try:
+                prod = int(np.prod([env.axis_size(a) for a in axes_try]))
+                if shape[i] % prod == 0:
+                    entries[i] = (tuple(axes_try) if len(axes_try) > 1
+                                  else axes_try[0])
+                    fsdp = [a for a in fsdp if a not in axes_try]
+                    break
+                axes_try = axes_try[1:]
+            if not fsdp:
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def param_sharding_tree(axes_tree, shape_tree, env: Optional[MeshEnv] = None):
+    """NamedSharding tree for parameters/optimizer states (FSDP-filled)."""
+    env = env or current_env()
+    if env is None:
+        raise RuntimeError("param_sharding_tree requires an active mesh_env")
+    specs = jax.tree.map(
+        lambda axes, shp: param_pspec(axes, shp.shape, env),
+        axes_tree, shape_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            x is None or isinstance(x, str) for x in a))
+    return jax.tree.map(lambda s: NamedSharding(env.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, PartitionSpec))

@@ -1,0 +1,53 @@
+"""Straggler mitigation: per-step wall-time watchdog.
+
+On a real fleet, a straggling host shows up as step-time inflation on every
+worker (SPMD collectives synchronize).  The watchdog keeps an EWMA of step
+time and flags steps slower than ``threshold ×`` the moving average; the
+train loop logs the event and calls a user hook (e.g. emit a preemption
+request to the cluster scheduler, trigger an early checkpoint).  The
+detection logic is hardware-independent and unit-tested on CPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+
+class StepWatchdog:
+    def __init__(self, threshold: float = 2.5, ewma: float = 0.9,
+                 warmup_steps: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.avg: Optional[float] = None
+        self.seen = 0
+        self.events: List[dict] = []
+        self._t: Optional[float] = None
+
+    def start(self) -> None:
+        self._t = time.monotonic()
+
+    def stop(self, step: int) -> float:
+        dt = time.monotonic() - self._t
+        self.observe(step, dt)
+        return dt
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Feed a step time; returns True if flagged as straggler."""
+        self.seen += 1
+        if self.avg is None:
+            self.avg = dt
+            return False
+        flagged = (self.seen > self.warmup and
+                   dt > self.threshold * self.avg)
+        if flagged:
+            self.events.append({"step": step, "dt": dt, "avg": self.avg})
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.avg)
+            # don't poison the EWMA with the outlier
+            return True
+        self.avg = self.ewma_coef * self.avg + (1 - self.ewma_coef) * dt
+        return False

@@ -1,0 +1,100 @@
+"""Fused CoLA auto-encoder Pallas kernel: out = B · σ(A · x).
+
+The paper's core op (Eq. 3) as one TPU kernel.  The r-dimensional
+bottleneck ``z = σ(Ax)`` lives **entirely in VMEM scratch** — it never
+round-trips to HBM, so the AE pair's HBM traffic drops from
+``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight tiles
+(DESIGN.md §2: the paper's activation-residency idea pushed one level down
+the memory hierarchy).
+
+Grid: (T/bt, d_out/bo), TPU iterates the last dim innermost, so for each
+token tile the z-scratch is computed once (at j == 0) and reused across all
+d_out tiles.  MXU alignment: bt/bo multiples of 128 (Mosaic pads r < 128 —
+whisper's r=96 — with the padding loss quantified in the roofline).
+
+VMEM budget at the largest assigned site (internlm2 down-proj,
+d_in=16384, r=1536): x-tile (128×16384 bf16) 4 MB + A (16384×1536 bf16
+blocked over k? no — A rides whole) … A whole = 50 MB ✗ ⇒ A is blocked over
+d_in with an inner fori_loop accumulating into the z scratch; per-step
+A-block (1024, r≤1536) ≤ 3 MB.  Everything fits < 12 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_ref, *, n_k: int,
+                bk: int, sigma: bool):
+    """x_ref: (bt, d_in); a_ref: (d_in, r); b_ref: (r, bo);
+    out_ref: (bt, bo); z_ref (scratch): (bt, r) f32."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _compute_z():
+        def body(k, acc):
+            xk = x_ref[:, pl.ds(k * bk, bk)]
+            ak = a_ref[pl.ds(k * bk, bk), :]
+            return acc + jnp.dot(xk, ak, preferred_element_type=jnp.float32)
+        acc = jax.lax.fori_loop(
+            0, n_k, body,
+            jnp.zeros((x_ref.shape[0], a_ref.shape[1]), jnp.float32))
+        if sigma:
+            acc = _silu(acc)
+        z_ref[...] = acc
+
+    z = z_ref[...].astype(x_ref.dtype)
+    out_ref[...] = jnp.dot(z, b_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+def _pick_tiles(T: int, d_in: int, r: int, d_out: int):
+    bt = 128
+    while bt * 2 <= min(T, 512) and T % (bt * 2) == 0:
+        bt *= 2
+    bo = 128
+    while bo * 2 <= min(d_out, 512) and d_out % (bo * 2) == 0:
+        bo *= 2
+    bk = min(d_in, 1024)
+    while d_in % bk:
+        bk //= 2
+    return bt, bo, max(bk, 1)
+
+
+def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
+                sigma: bool = True, interpret: bool = False) -> jax.Array:
+    """x: (T, d_in) [callers flatten (b, s)]; a: (d_in, r); b: (r, d_out)."""
+    T, d_in = x.shape
+    r, d_out = b.shape
+    bt, bo, bk = _pick_tiles(T, d_in, r, d_out)
+    pad_t = (-T) % bt
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+    Tp = x.shape[0]
+    n_k = d_in // bk
+    grid = (Tp // bt, d_out // bo)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, n_k=n_k, bk=bk, sigma=sigma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bo), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b)
+    return out[:T] if pad_t else out

@@ -1,0 +1,84 @@
+"""jit'd wrapper for the fused CoLA auto-encoder with custom VJP.
+
+Forward: the Pallas kernel (or ref off-TPU).  Backward saves only
+(x, z_pre) where z_pre = A·x is r-dimensional — the CoLA-M residency
+recipe at kernel level; σ and both grad GEMMs are recomputed/evaluated
+from those:
+
+    dz = (g · Bᵀ) ⊙ σ'(z_pre);  dx = dz · Aᵀ;  dA = xᵀ·dz;  dB = σ(z)ᵀ·g
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cola_ae import ref as _ref
+
+
+def _fwd_compute(x2d, a, b, sigma, impl, interpret):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        from repro.kernels.cola_ae import kernel as _k
+        return _k.cola_ae_fwd(x2d, a, b, sigma=sigma, interpret=interpret)
+    return _ref.cola_ae(x2d, a, b, sigma=sigma)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _cola_ae2d(x2d, a, b, sigma, impl, interpret):
+    return _fwd_compute(x2d, a, b, sigma, impl, interpret)
+
+
+def _bwd_impl(sigma, impl, interpret, res, g):
+    x2d, z_pre, a, b = res
+    zp32 = z_pre.astype(jnp.float32)
+    if sigma:
+        sg = jax.nn.sigmoid(zp32)
+        z = (zp32 * sg).astype(x2d.dtype)
+        dsig = sg * (1 + zp32 * (1 - sg))
+    else:
+        z = z_pre
+        dsig = jnp.ones_like(zp32)
+    g = g.astype(x2d.dtype)
+    dzl = jnp.dot(g, b.T.astype(g.dtype)).astype(jnp.float32)  # (T, r)
+    dz = (dzl * dsig).astype(x2d.dtype)
+    dx = jnp.dot(dz, a.T.astype(dz.dtype))
+    da = jnp.dot(x2d.T, dz).astype(a.dtype)
+    db = jnp.dot(z.T, g).astype(b.dtype)
+    return dx, da, db
+
+
+def _fwd2(x2d, a, b, sigma, impl, interpret):
+    out = _fwd_compute(x2d, a, b, sigma, impl, interpret)
+    z_pre = jnp.dot(x2d, a.astype(x2d.dtype))
+    return out, (x2d, z_pre, a, b)
+
+
+_cola_ae2d.defvjp(_fwd2, _bwd_impl)
+
+
+def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
+            sigma: bool = True, bias_a: Optional[jax.Array] = None,
+            bias_b: Optional[jax.Array] = None, impl: str = "auto",
+            interpret: bool = False) -> jax.Array:
+    """Fused auto-encoder over the last dim of x (any leading dims)."""
+    if bias_a is not None or bias_b is not None:
+        # bias sites fall back to the unfused path (rare: qwen2 qkv)
+        z = jnp.einsum("...d,dr->...r", x, a.astype(x.dtype))
+        if bias_a is not None:
+            z = z + bias_a.astype(x.dtype)
+        if sigma:
+            z32 = z.astype(jnp.float32)
+            z = (z32 * jax.nn.sigmoid(z32)).astype(x.dtype)
+        h = jnp.einsum("...r,ro->...o", z, b.astype(x.dtype))
+        if bias_b is not None:
+            h = h + bias_b.astype(x.dtype)
+        return h
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), sigma,
+                     impl, interpret)
+    return out.reshape(*lead, b.shape[-1])

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused CoLA auto-encoder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
+            sigma: bool = True) -> jax.Array:
+    z = jnp.dot(x, a.astype(x.dtype))
+    if sigma:
+        z32 = z.astype(jnp.float32)
+        z = (z32 * jax.nn.sigmoid(z32)).astype(x.dtype)
+    return jnp.dot(z, b.astype(x.dtype))

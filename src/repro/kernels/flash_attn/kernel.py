@@ -1,0 +1,104 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid (b·h, nq): each step owns one (q-tile × head); the kv loop runs inside
+with running (m, l, acc) in VMEM — score tiles never touch HBM.  GQA is
+free: the k/v BlockSpec index_map maps query head → kv head (h // group),
+no k/v expansion copy.  Causality via the per-query horizon ``q_positions``
+(same contract as ref.py); fully-masked tiles are skipped with a cheap
+bounds check on the block's position range.
+
+Training uses ref.py's custom_vjp (whose fwd dispatches here on TPU via
+ops.py); serving calls this directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fwd_kernel(qpos_ref, q_ref, k_ref, v_ref, o_ref, *, kc: int,
+                skv: int, skv_valid: int, scale: float):
+    """q_ref: (bq, hd); k_ref/v_ref: (skv, hd); qpos_ref: (bq,);
+    o_ref: (bq, hd)."""
+    bq, hd = q_ref.shape
+    n_k = skv // kc
+    q = q_ref[...]
+
+    def body(kj, carry):
+        m, l, acc = carry
+        kb = k_ref[pl.ds(kj * kc, kc), :]
+        vb = v_ref[pl.ds(kj * kc, kc), :]
+        s = jnp.dot(q, kb.T, preferred_element_type=jnp.float32) * scale
+        kpos = kj * kc + jax.lax.broadcasted_iota(jnp.int32, (1, kc), 1)
+        ok = (kpos <= qpos_ref[...][:, None]) & (kpos < skv_valid)
+        s = jnp.where(ok, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        e = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(e, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            e.astype(vb.dtype), vb, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), _NEG, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, q_positions, *, q_block: int = 256,
+                        kv_block: int = 512, interpret: bool = False):
+    """q: (b, sq, h, hd); k/v: (b, skv, kvh, hd); q_positions: (b, sq)."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bq = min(q_block, sq)
+    while sq % bq:
+        bq //= 2
+    kc = min(kv_block, skv)
+    skv_pad = ((skv + kc - 1) // kc) * kc
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    # layout: (b, h, sq, hd) so each grid step is a clean 2D tile
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * kvh, skv_pad, hd)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * kvh, skv_pad, hd)
+    qpos = jnp.repeat(q_positions.astype(jnp.int32), h, axis=0)  # (b*h, sq)
+
+    grid = (b * h, sq // bq)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, kc=kc, skv=skv_pad,
+                          skv_valid=skv, scale=1.0 / np.sqrt(hd)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq), lambda bh, qi: (bh, qi)),
+            pl.BlockSpec((None, bq, hd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, skv_pad, hd), lambda bh, qi: (bh // g, 0, 0)),
+            pl.BlockSpec((None, skv_pad, hd), lambda bh, qi: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        interpret=interpret,
+    )(qpos, qt, kt, vt)
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)
+
+
+def flash_attention(q, k, v, *, causal=True, q_positions=None,
+                    interpret: bool = False):
+    b, sq = q.shape[:2]
+    skv = k.shape[1]
+    if q_positions is None:
+        if causal:
+            q_positions = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+        else:
+            q_positions = jnp.full((b, sq), skv - 1, jnp.int32)
+    return flash_attention_fwd(q, k, v, q_positions, interpret=interpret)

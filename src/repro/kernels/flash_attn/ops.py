@@ -1,0 +1,25 @@
+"""Dispatching wrapper for flash attention.
+
+``impl='ref'`` — pure-jnp custom_vjp (memory-optimal, runs everywhere; the
+production fallback off-TPU and the oracle);
+``impl='pallas'`` — the TPU kernel (kernel.py), validated in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.flash_attn import ref as _ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_positions: Optional[jax.Array] = None,
+                    impl: str = "auto", interpret: bool = False):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.flash_attention(q, k, v, causal, q_positions)
+    from repro.kernels.flash_attn import kernel as _k
+    return _k.flash_attention(q, k, v, causal=causal,
+                              q_positions=q_positions, interpret=interpret)

@@ -1,0 +1,198 @@
+"""Flash attention reference: pure-jnp, memory-optimal via custom_vjp.
+
+Forward saves only (q, k, v, out, lse); backward recomputes probabilities
+blockwise (Dao et al. 2022 recurrences) — no (sq × skv) tensor and no
+per-chunk scan residuals ever materialize.  This is both the oracle for the
+Pallas kernel and the production fallback on non-TPU backends (used by
+models/attention.py for every ≥1k-token attention).
+
+Layout: q (b, sq, h, hd); k/v (b, skv, kvh, hd); GQA via h = kvh·g.
+Masking is encoded in a per-query visibility horizon ``q_positions``
+(b, sq): KV slot s is visible to query i iff s <= q_positions[b, i]
+(plus s < true kv length).  causal=True with no explicit positions means
+q_positions = arange(sq); causal=False means full visibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e30
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    q_positions: Optional[jax.Array] = None,
+                    chunks: Tuple[int, int] = (Q_CHUNK, KV_CHUNK)):
+    b, sq = q.shape[0], q.shape[1]
+    skv = k.shape[1]
+    if q_positions is None:
+        if causal:
+            q_positions = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+        else:
+            q_positions = jnp.full((b, sq), skv - 1, jnp.int32)
+    return _flash(q, k, v, q_positions.astype(jnp.int32), chunks)
+
+
+def _chunks(n: int, c: int) -> int:
+    return (n + c - 1) // c
+
+
+def _pad_to(x: jax.Array, n: int, axis: int) -> jax.Array:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _flash(q, k, v, qpos, chunks):
+    out, _ = _fwd_impl(q, k, v, qpos, chunks)
+    return out
+
+
+def _fwd_impl(q, k, v, qpos_arr, chunks):
+    qc, kc = chunks
+    b, sq0, h, hd = q.shape
+    skv0, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    hv = v.shape[-1]
+    sq, skv = _chunks(sq0, qc) * qc, _chunks(skv0, kc) * kc
+    qp = _pad_to(q, sq, 1).reshape(b, sq, kvh, g, hd)
+    kp = _pad_to(k, skv, 1)
+    vp = _pad_to(v, skv, 1)
+    qpos_p = _pad_to(qpos_arr, sq, 1)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * qc, qc, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_p, qi * qc, qc, axis=1)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, kj * kc, kc, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, kj * kc, kc, 1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+            s = s * scale
+            # loop-varying zero: ties the mask to the data so XLA's
+            # while-loop-invariant code motion cannot hoist a precomputed
+            # (nq, nk, b, …) boolean stack out of the loop (8.6 GB at 4k).
+            lv0 = (s.reshape(-1)[0] * 0).astype(jnp.int32)
+            kpos = kj * kc + jnp.arange(kc) + lv0
+            ok = ((kpos[None, None, :] <= qpos[:, :, None]) &
+                  (kpos[None, None, :] < skv0))
+            s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            e = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(e, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", e, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, kvh, g, qc), _NEG, jnp.float32),
+                jnp.zeros((b, kvh, g, qc), jnp.float32),
+                jnp.zeros((b, kvh, g, qc, hv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse                       # (b,kvh,g,qc,hv), (b,kvh,g,qc)
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, kvh, g, sq, hv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hv)[:, :sq0]
+    lse = jnp.concatenate(list(lses), axis=3)          # (b,kvh,g,sq)
+    return out, lse
+
+
+def _fwd_vjp(q, k, v, qpos, chunks):
+    # NOTE: custom_vjp fwd receives args in original positions (nondiff
+    # included); only bwd gets nondiff args first.
+    out, lse = _fwd_impl(q, k, v, qpos, chunks)
+    return out, (q, k, v, qpos, out, lse)
+
+
+def _bwd_vjp(chunks, res, dout):
+    q, k, v, qpos_arr, out, lse = res
+    qc, kc = chunks
+    b, sq0, h, hd = q.shape
+    skv0, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    hv = v.shape[-1]
+    sq, skv = _chunks(sq0, qc) * qc, _chunks(skv0, kc) * kc
+    qp = _pad_to(q, sq, 1).reshape(b, sq, kvh, g, hd)
+    kp = _pad_to(k, skv, 1)
+    vp = _pad_to(v, skv, 1)
+    op = _pad_to(out, sq, 1).reshape(b, sq, kvh, g, hv)
+    dop = _pad_to(dout, sq, 1).reshape(b, sq, kvh, g, hv)
+    lse_p = _pad_to(lse, sq, 3)
+    qpos_p = _pad_to(qpos_arr, sq, 1)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / np.sqrt(hd)
+    # D = rowsum(dout * out) — the softmax-grad diagonal term
+    D = jnp.einsum("bskgh,bskgh->bkgs", dop.astype(jnp.float32),
+                   op.astype(jnp.float32))
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * qc, qc, axis=1)
+        dob = jax.lax.dynamic_slice_in_dim(dop, qi * qc, qc, axis=1)
+        lseb = jax.lax.dynamic_slice_in_dim(lse_p, qi * qc, qc, axis=3)
+        Db = jax.lax.dynamic_slice_in_dim(D, qi * qc, qc, axis=3)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_p, qi * qc, qc, axis=1)
+
+        @jax.checkpoint
+        def kv_step(inner, kj):
+            dq_b, dk_a, dv_a = inner
+            kb = jax.lax.dynamic_slice_in_dim(kp, kj * kc, kc, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, kj * kc, kc, 1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+            s = s * scale
+            lv0 = (s.reshape(-1)[0] * 0).astype(jnp.int32)  # defeat LICM
+            kpos = kj * kc + jnp.arange(kc) + lv0
+            ok = ((kpos[None, None, :] <= qpos[:, :, None]) &
+                  (kpos[None, None, :] < skv0))
+            s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+            p = jnp.exp(s - lseb[..., None])                    # (b,k,g,q,s)
+            dv_blk = jnp.einsum("bkgqs,bqkgh->bskh", p,
+                                dob.astype(jnp.float32))
+            dp = jnp.einsum("bqkgh,bskh->bkgqs",
+                            dob.astype(jnp.float32),
+                            vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None]) * scale
+            dq_b = dq_b + jnp.einsum("bkgqs,bskh->bqkgh", ds,
+                                     kb.astype(jnp.float32))
+            dk_blk = jnp.einsum("bkgqs,bqkgh->bskh", ds,
+                                qb.astype(jnp.float32))
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, kj * kc, kc, 1)
+                + dk_blk, kj * kc, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, kj * kc, kc, 1)
+                + dv_blk, kj * kc, 1)
+            return (dq_b, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, qc, kvh, g, hd), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((b, skv, kvh, hd), jnp.float32)
+    dv0 = jnp.zeros((b, skv, kvh, hv), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kvh, g, hd)
+    dq = dq.reshape(b, sq, h, hd)[:, :sq0].astype(q.dtype)
+    dqpos = np.zeros(qpos_arr.shape, jax.dtypes.float0)
+    return (dq, dk[:, :skv0].astype(k.dtype), dv[:, :skv0].astype(v.dtype),
+            dqpos)
+
+
+_flash.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,24 @@
+"""Dispatching wrapper for the Mamba selective scan.
+
+``impl='ref'`` (default off-TPU) uses the lax.scan oracle; ``impl='pallas'``
+uses the chunked Pallas kernel (interpret mode on CPU for validation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.mamba_scan import ref as _ref
+
+
+def selective_scan(x, dt, A, B, C, D, init_state=None, *,
+                   impl: str = "auto", interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.selective_scan(x, dt, A, B, C, D, init_state)
+    from repro.kernels.mamba_scan import kernel as _k
+    return _k.selective_scan(x, dt, A, B, C, D, init_state,
+                             interpret=interpret)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) WKV recurrence.
+
+Grid (b·h, n_seq_chunks): the (dh_k × dh_v) state matrix lives in VMEM
+scratch and persists across sequence chunks (TPU iterates the last grid
+dim innermost), so the recurrence streams the sequence through VMEM with
+one HBM pass over r/k/v/w and one write of y — the memory-optimal
+schedule for an attention-free layer.  dh = 64 aligns the outer-product
+updates with the VPU/MXU tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 state, *, sc: int, n_chunks: int):
+    """r/k/v/w_ref: (sc, dh); u_ref: (dh,); s0_ref/sT_ref: (dh, dh);
+    y_ref: (sc, dh); state scratch: (dh, dh) f32."""
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state[...] = s0_ref[...].astype(jnp.float32)
+
+    u = u_ref[...].astype(jnp.float32)          # (dh,)
+
+    def step(t, S):
+        rt = r_ref[t, :].astype(jnp.float32)
+        kt = k_ref[t, :].astype(jnp.float32)
+        vt = v_ref[t, :].astype(jnp.float32)
+        wt = w_ref[t, :].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]           # (dh_k, dh_v)
+        yt = jnp.sum((S + u[:, None] * kv) * rt[:, None], axis=0)
+        y_ref[t, :] = yt.astype(y_ref.dtype)
+        return wt[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, sc, step, state[...])
+    state[...] = S
+
+    @pl.when(cj == n_chunks - 1)
+    def _emit():
+        sT_ref[...] = S.astype(sT_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, init_state=None, *, seq_chunk: int = 256,
+         interpret: bool = False):
+    """r/k/v/w: (b, s, h, dh); u: (h, dh); state: (b, h, dh, dh) f32."""
+    b, s, h, dh = r.shape
+    sc = min(seq_chunk, s)
+    while s % sc:
+        sc //= 2
+    n_chunks = s // sc
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dh, dh), jnp.float32)
+
+    def to_bh(x):  # (b, s, h, dh) -> (b*h, s, dh)
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, dh)
+
+    rt, kt, vt, wt = map(to_bh, (r, k, v, w))
+    ut = jnp.broadcast_to(u[None], (b, h, dh)).reshape(b * h, dh)
+    s0 = init_state.reshape(b * h, dh, dh)
+
+    grid = (b * h, n_chunks)
+    y, sT = pl.pallas_call(
+        functools.partial(_wkv6_kernel, sc=sc, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, sc, dh), lambda bh, cj: (bh, cj, 0)),
+            pl.BlockSpec((None, sc, dh), lambda bh, cj: (bh, cj, 0)),
+            pl.BlockSpec((None, sc, dh), lambda bh, cj: (bh, cj, 0)),
+            pl.BlockSpec((None, sc, dh), lambda bh, cj: (bh, cj, 0)),
+            pl.BlockSpec((None, dh), lambda bh, cj: (bh, 0)),
+            pl.BlockSpec((None, dh, dh), lambda bh, cj: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, sc, dh), lambda bh, cj: (bh, cj, 0)),
+            pl.BlockSpec((None, dh, dh), lambda bh, cj: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, dh), r.dtype),
+            jax.ShapeDtypeStruct((b * h, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, ut, s0)
+    y = jnp.moveaxis(y.reshape(b, h, s, dh), 1, 2)
+    return y, sT.reshape(b, h, dh, dh)

@@ -1,0 +1,18 @@
+"""Dispatching wrapper for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.rwkv6_scan import ref as _ref
+
+
+def wkv6(r, k, v, w, u, init_state=None, *, impl: str = "auto",
+         interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.wkv6(r, k, v, w, u, init_state)
+    from repro.kernels.rwkv6_scan import kernel as _k
+    return _k.wkv6(r, k, v, w, u, init_state, interpret=interpret)

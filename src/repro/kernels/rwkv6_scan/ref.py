@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head (k/v head size dh), with data-dependent per-channel decay w_t:
+
+    y_t = (S_{t-1} + diag(u) · k_t v_t^T)^T r_t
+    S_t = diag(w_t) · S_{t-1} + k_t v_t^T
+
+r/k/w: (b, s, h, dh); v: (b, s, h, dh); u: (h, dh);
+state S: (b, h, dh_k, dh_v).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, init_state: Optional[jax.Array] = None,
+         unroll: int = 16) -> Tuple[jax.Array, jax.Array]:
+    """unroll: steps fused per scan iteration — XLA keeps the (b,h,dh,dh)
+    state in registers across unrolled steps instead of round-tripping it
+    to HBM every token (16× memory-roofline-term win on rwkv6-7b train_4k,
+    EXPERIMENTS.md §Perf iteration 2; the Pallas kernel is the full fix)."""
+    b, s, h, dh = r.shape
+    S0 = (jnp.zeros((b, h, dh, dh), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = [t.astype(jnp.float32) for t in inp]  # (b,h,dh)
+        kv = kt[..., :, None] * vt[..., None, :]               # (b,h,dk,dv)
+        out = jnp.einsum("bhkv,bhk->bhv", S + u32[None, :, :, None] * kv, rt)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    while s % unroll:
+        unroll //= 2
+    ST, ys = jax.lax.scan(step, S0, xs, unroll=max(unroll, 1))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), ST

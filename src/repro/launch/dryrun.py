@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-importing module: jax locks the device count at
+# first initialization.  Everything below this line may import jax.
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as roofline_mod
+from repro.config import (LM_SHAPES, ModelConfig, ShapeSpec, TrainConfig,
+                          applicable_shapes, get_config)
+from repro.distributed.sharding import (mesh_env, named_sharding_tree,
+                                        param_sharding_tree)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.train import step as step_mod
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh)
+cell on placeholder meshes — 256-chip single-pod (16,16) and 512-chip
+two-pod (2,16,16) — and record memory_analysis / cost_analysis /
+collective-bytes for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Variants (the §Perf hillclimb lever):
+  --profile  baseline|megatron|fsdp   sharding rules (DESIGN.md §5)
+  --remat    none|full|cola_m|dots    activation checkpointing policy
+  --param    cola|dense|lora|sltrain  parameterization
+"""
+
+
+def _batch_axes_for(name: str):
+    if name in ("tokens", "labels"):
+        return ("batch", "seq")
+    if name in ("inputs_embeds", "frames"):
+        return ("batch", "seq", "embed")
+    if name == "position_ids":
+        return ("null", "batch", "seq")
+    raise KeyError(name)
+
+
+def _mesh(mesh_name: str):
+    return make_production_mesh(multi_pod=(mesh_name == "pod2"))
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh_name: str,
+               profile: str) -> Tuple["jax.stages.Lowered", ModelConfig]:
+    """Build + lower the step function for one cell under the mesh env."""
+    model = build_model(cfg)
+    if shape.kind == "train":
+        tc = TrainConfig(steps=1000, global_batch=shape.global_batch,
+                         seq_len=shape.seq_len)
+        train_step = step_mod.build_train_step(model, tc)
+        state_abs = step_mod.abstract_train_state(model, tc)
+        state_axes = step_mod.train_state_axes(model, tc)
+        batch_abs = model.input_specs(shape)
+        state_sh = param_sharding_tree(state_axes, state_abs)
+        batch_sh = named_sharding_tree(
+            {k: _batch_axes_for(k) for k in batch_abs}, batch_abs)
+        fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=0)
+        return fn.lower(state_abs, batch_abs)
+
+    params_abs = model.abstract()
+    params_sh = param_sharding_tree(model.axes(), params_abs)
+    if shape.kind == "prefill":
+        batch_abs = model.input_specs(shape)
+        caches_abs = model.abstract_caches(shape.global_batch, shape.seq_len)
+        caches_sh = named_sharding_tree(
+            model.cache_axes(shape.global_batch, shape.seq_len), caches_abs)
+        batch_sh = named_sharding_tree(
+            {k: _batch_axes_for(k) for k in batch_abs}, batch_abs)
+        fn = jax.jit(model.prefill,
+                     in_shardings=(params_sh, batch_sh, caches_sh),
+                     donate_argnums=2)
+        return fn.lower(params_abs, batch_abs, caches_abs)
+
+    # decode: one token over a cache of length seq_len
+    B = shape.global_batch
+    tokens_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    caches_abs = model.abstract_caches(B, shape.seq_len)
+    caches_sh = named_sharding_tree(
+        model.cache_axes(B, shape.seq_len), caches_abs)
+    tok_sh = named_sharding_tree({"t": ("batch", "seq")},
+                                 {"t": tokens_abs})["t"]
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(params_sh, tok_sh, caches_sh, tok_sh),
+                 donate_argnums=2)
+    return fn.lower(params_abs, tokens_abs, caches_abs, pos_abs)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             profile: str = "baseline", remat: str = "cola_m",
+             param: str = "cola", variant: str = "baseline",
+             with_roofline: bool = True, verbose: bool = True) -> Dict:
+    cfg = get_config(arch).with_overrides(parameterization=param, remat=remat)
+    shape = LM_SHAPES[shape_name]
+    if cfg.max_seq_len < shape.seq_len:
+        cfg = cfg.with_overrides(max_seq_len=shape.seq_len)
+    mesh = _mesh(mesh_name)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with mesh_env(mesh, profile):
+        lowered = lower_cell(cfg, shape, mesh_name, profile)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if verbose:
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops={cost.get('flops', 0):.4g} "
+                  f"bytes={cost.get('bytes accessed', 0):.4g}")
+        mem_rec = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            try:
+                mem_rec[attr] = int(getattr(mem, attr))
+            except Exception:
+                pass
+        peak = (mem_rec.get("argument_size_in_bytes", 0)
+                - mem_rec.get("alias_size_in_bytes", 0)
+                + mem_rec.get("output_size_in_bytes", 0)
+                + mem_rec.get("temp_size_in_bytes", 0))
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "variant": variant, "profile": profile, "remat": remat,
+            "param": param, "n_chips": int(n_chips),
+            "lower_s": t_lower, "compile_s": t_compile,
+            "cost": {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float))},
+            "memory": mem_rec,
+            "peak_bytes_per_chip": int(peak),
+        }
+        if with_roofline:
+            hlo = compiled.as_text()
+            rl = roofline_mod.build_roofline(
+                arch=arch, shape=shape, mesh_name=mesh_name,
+                n_chips=n_chips, cost=cost, hlo_text=hlo, peak_mem=peak,
+                cfg=cfg, variant=variant)
+            rec["roofline"] = rl.to_json()
+            rec["roofline"]["step_s"] = rl.step_s
+            rec["roofline"]["roofline_fraction"] = rl.roofline_fraction
+            del hlo
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all' (assigned 10)")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="pod1,pod2")
+    ap.add_argument("--profile", default="baseline")
+    ap.add_argument("--remat", default="cola_m")
+    ap.add_argument("--param", default="cola")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        from repro.configs import ASSIGNED
+        archs = ASSIGNED
+    else:
+        archs = args.arch.split(",")
+    meshes = args.mesh.split(",")
+    outdir = os.path.join(args.out, args.variant)
+    os.makedirs(outdir, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in applicable_shapes(cfg)]
+                  if args.shapes == "all" else args.shapes.split(","))
+        for shape_name in shapes:
+            if (shape_name == "long_500k" and not cfg.sub_quadratic()):
+                print(f"[skip] {arch} × long_500k (full attention — "
+                      f"DESIGN.md §Arch-applicability)")
+                continue
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(outdir, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {tag}")
+                    n_skip += 1
+                    continue
+                print(f"[cell] {tag} (variant={args.variant})", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh_name,
+                                   profile=args.profile, remat=args.remat,
+                                   param=args.param, variant=args.variant)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    rl = rec.get("roofline", {})
+                    print(f"  ok: compile={rec['compile_s']:.1f}s "
+                          f"peak={rec['peak_bytes_per_chip']/1e9:.2f}GB/chip "
+                          f"bound={rl.get('bound','-')} "
+                          f"roofline={100*rl.get('roofline_fraction',0):.1f}%",
+                          flush=True)
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    print(f"  FAIL: {type(e).__name__}: {e}")
+                    with open(os.path.join(outdir, tag + ".err"), "w") as f:
+                        f.write(traceback.format_exc())
+    print(f"dry-run complete: ok={n_ok} cached={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

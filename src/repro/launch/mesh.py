@@ -1,0 +1,31 @@
+"""Production mesh shapes (TPU v5e).
+
+single-pod: (16, 16) = ('data', 'model') — 256 chips
+multi-pod : (2, 16, 16) = ('pod', 'data', 'model') — 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes)
+
+
+# v5e hardware constants used by the roofline (per chip)
+V5E = {
+    "peak_bf16_flops": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "hbm_bytes": 16e9,           # capacity
+    "ici_bw": 50e9,              # B/s per link direction (~3D torus link)
+}

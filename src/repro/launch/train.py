@@ -1,0 +1,88 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama-60m \
+        --steps 200 --batch 8 --seq 256 --param cola --remat cola_m
+
+On a real fleet this runs under `jax.distributed.initialize()` with the
+production mesh; on CPU it runs single-device (or a forced-device test mesh
+via --devices N --mesh dxm).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--param", default=None,
+                    help="dense|cola|lora|sltrain (default: config's)")
+    ap.add_argument("--remat", default=None, help="none|full|cola_m|dots")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--galore-rank", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--log", default="")
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU mesh testing)")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 2x4 => ('data','model') mesh on 8 devices")
+    ap.add_argument("--profile", default="megatron",
+                    help="sharding profile: baseline|megatron|fsdp")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax  # after XLA_FLAGS
+    from repro.config import TrainConfig, get_config
+    from repro.distributed.sharding import mesh_env
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    over = {}
+    if args.param:
+        over["parameterization"] = args.param
+    if args.remat:
+        over["remat"] = args.remat
+    if over:
+        cfg = cfg.with_overrides(**over)
+
+    tc = TrainConfig(
+        steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        learning_rate=args.lr, optimizer=args.optimizer,
+        galore_rank=args.galore_rank, grad_compression=args.grad_compression,
+        microbatch=args.microbatch, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every, eval_every=args.eval_every,
+        data=args.data, seed=args.seed)
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(dims)] if len(dims) <= 2 else \
+            ("pod", "data", "model")
+        mesh = jax.make_mesh(dims, axes)
+        with mesh_env(mesh, args.profile):
+            out = train(cfg, tc, log_path=args.log or None)
+    else:
+        out = train(cfg, tc, log_path=args.log or None)
+    print({k: v for k, v in out.items() if k != "state"})
+
+
+if __name__ == "__main__":
+    main()

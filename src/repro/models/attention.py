@@ -1,0 +1,465 @@
+"""Attention: GQA (llama/qwen/internlm/phi/jamba/whisper) and MLA (minicpm3),
+with KV caches for decode and sequence-sharded ("flash-decode") semantics for
+long contexts.
+
+Decode attention is written so the XLA SPMD partitioner derives the
+flash-decode pattern automatically when the KV cache's sequence dim carries a
+'kv_seq' (→ 'model') sharding: the softmax max/sum reductions over the
+sharded axis become all-reduces of (b, h) scalars per token — i.e. the
+partial-softmax + logsumexp-combine schedule, without hand-written
+shard_map.  An explicit shard_map variant lives in serve/engine.py for the
+perf comparison.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import linear
+from repro.models.common import ParamDef, apply_rope, rmsnorm, rmsnorm_defs
+
+
+class KVCache(NamedTuple):
+    """Contiguous KV cache for one attention layer.
+
+    k/v: (batch, max_seq, kv_heads, head_dim); for MLA, k holds the latent
+    (batch, max_seq, kv_lora_rank) and v holds the rope-key
+    (batch, max_seq, qk_rope_head_dim).
+    """
+    k: jax.Array
+    v: jax.Array
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+def gqa_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    bias = cfg.qkv_bias
+    return {
+        "q": linear.linear_defs(cfg, "attn", d, h * hd, "embed", "heads", bias=bias),
+        "k": linear.linear_defs(cfg, "attn", d, kv * hd, "embed", "kv_heads", bias=bias),
+        "v": linear.linear_defs(cfg, "attn", d, kv * hd, "embed", "kv_heads", bias=bias),
+        "o": linear.linear_defs(cfg, "attn", h * hd, d, "heads", "embed"),
+    }
+
+
+def gqa_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_seq, cfg.num_kv_heads, hd)
+    axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return KVCache(k=ParamDef(shape, axes, init="zeros", dtype="bfloat16"),
+                   v=ParamDef(shape, axes, init="zeros", dtype="bfloat16"))
+
+
+_Q_CHUNK = 512
+_KV_CHUNK = 1024
+_NEG = -1e30
+
+
+def _blocked_sdpa(q, k, v, *, causal: bool,
+                  q_positions: Optional[jax.Array],
+                  q_chunk: int = _Q_CHUNK, kv_chunk: int = _KV_CHUNK):
+    """Flash-style double-blocked attention in pure XLA (lax.map over query
+    chunks, lax.scan over KV chunks with running (m, l, acc)).  Keeps the
+    score tensor O(q_chunk × kv_chunk) so 32k prefill / 4k train cells fit
+    HBM; the Pallas kernel (kernels/flash_attn) replaces this on TPU."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    hv = v.shape[-1]
+    kv_valid = skv
+    if skv % kv_chunk:  # ragged KV (e.g. cross-attention): pad + mask
+        pad = kv_chunk - skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv = k.shape[1]
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    masked = causal or q_positions is not None or kv_valid != skv
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        if q_positions is not None:
+            qpos = jax.lax.dynamic_slice_in_dim(
+                q_positions, qi * q_chunk, q_chunk, axis=1)  # (b, qc)
+        elif causal:
+            qpos = jnp.broadcast_to(
+                qi * q_chunk + jnp.arange(q_chunk)[None], (b, q_chunk))
+        else:  # only padding mask
+            qpos = jnp.full((b, q_chunk), kv_valid - 1)
+
+        # flash-style backward: recompute chunk scores instead of saving
+        # the (nk, …, q_chunk, kv_chunk) residual stack (checkpointed body).
+        @jax.checkpoint
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+            s = s * scale
+            if masked:
+                kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+                ok = ((kpos[None, None, :] <= qpos[:, :, None]) &
+                      (kpos[None, None, :] < kv_valid))  # (b, qc, kvc)
+                s = jnp.where(ok[:, None, None, :, :], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            e = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(e, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", e, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, kvh, g, q_chunk), _NEG, jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk, hv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # (b, kvh, g, qc, hv)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))  # (nq, b, kvh, g, qc, hv)
+    outs = jnp.moveaxis(outs, 0, 3)              # (b, kvh, g, nq, qc, hv)
+    outs = outs.reshape(b, kvh, g, sq, hv)
+    return jnp.moveaxis(outs, 3, 1).reshape(b, sq, h, hv)
+
+
+def _sharded_flash(q, k, v, *, causal: bool,
+                   q_positions: Optional[jax.Array]):
+    """Head-parallel flash attention via shard_map.
+
+    Without this, the SPMD partitioner inserts per-KV-chunk all-gathers
+    inside the flash scan (measured: ~2e12 B/step on llama3.2-1b train_4k,
+    the dominant roofline term — EXPERIMENTS.md §Perf iteration 1).  Inside
+    shard_map every chunk is local: q is sharded over 'model' on heads,
+    k/v are replicated (GQA KV heads < mesh axis), and each rank statically
+    slices the one KV head its query-head block needs.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import current_env
+    from repro.kernels.flash_attn import ops as fops
+
+    env = current_env()
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    ms = env.mesh.shape.get("model", 1) if env else 1
+    # pad heads to a multiple of the mesh axis (≤50% waste allowed —
+    # qwen2's 12→16, llama4's 40→48; whisper's 6→16 falls back)
+    h_pad = ((h + ms - 1) // ms) * ms if ms > 1 else h
+    can_shard = (env is not None and ms > 1 and h_pad <= 1.5 * h)
+    if q_positions is None:
+        if causal:
+            q_positions = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+        else:
+            q_positions = jnp.full((b, sq), skv - 1, jnp.int32)
+    if not can_shard:
+        return fops.flash_attention(q, k, v, causal=causal,
+                                    q_positions=q_positions)
+    mesh = env.mesh
+    h_local = h_pad // ms
+    if h_pad != h:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, h_pad - h), (0, 0)))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                       and b % mesh.shape[a] == 0)
+    bspec = batch_axes if batch_axes else None
+
+    def body(ql, kl, vl, qpl):
+        rank = jax.lax.axis_index("model")
+        # gather this rank's KV head per local query head (general GQA
+        # mapping — ranks may straddle KV-group boundaries)
+        gids = rank * h_local + jnp.arange(h_local)
+        kv_ids = jnp.minimum(gids, h - 1) // group
+        ksel = jnp.take(kl, kv_ids, axis=2)
+        vsel = jnp.take(vl, kv_ids, axis=2)
+        return fops.flash_attention(ql, ksel, vsel, causal=causal,
+                                    q_positions=qpl)
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, "model", None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None)),
+        out_specs=P(bspec, None, "model", None),
+        check_rep=False,
+    )(q, k, v, q_positions.astype(jnp.int32))
+    return out[:, :, :h] if h_pad != h else out
+
+
+def _sdpa(q, k, v, *, causal: bool, q_positions: Optional[jax.Array] = None,
+          use_flash: bool = False):
+    """q: (b, sq, h, hd); k/v: (b, skv, kv, hd). GQA grouping via reshape.
+
+    q_positions (b, sq): absolute positions of the queries within the KV
+    axis — used for cached decode / incremental prefill, where query i may
+    attend to cache slots <= q_positions[b, i].  When None and causal, the
+    standard lower-triangular mask applies (sq == skv).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    if sq >= 1024:
+        # flash attention (custom_vjp: O(chunk) memory fwd AND bwd),
+        # head-parallel under a mesh
+        return _sharded_flash(q, k, v, causal=causal,
+                              q_positions=q_positions)
+    qg = q.reshape(b, sq, kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    if q_positions is not None:
+        # (b, sq, skv): slot s visible to query q iff s <= pos[b, q]
+        ok = jnp.arange(skv)[None, None, :] <= q_positions[:, :, None]
+        scores = jnp.where(ok[:, None, None, :, :], scores, neg)
+    elif causal:
+        mask = jnp.arange(skv)[None, :] > jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], neg, scores)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
+              cos_sin: Optional[Tuple[jax.Array, jax.Array]],
+              cache: Optional[KVCache] = None,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True,
+              kv_from: Optional[jax.Array] = None,
+              cross_cache: Optional[KVCache] = None,
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """GQA forward.
+
+    cache None   => full (training/prefill-from-scratch) attention.
+    cache given  => tokens are written at `positions` and attention runs
+                    over the cache (decode / incremental prefill).
+    kv_from      => cross-attention source (encoder states); with
+                    cross_cache, K/V are precomputed and the projections
+                    are skipped.
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    b, s, _ = x.shape
+    dt = x.dtype
+
+    q = linear.linear_apply(cfg, params["q"], x, "attn", d, h * hd)
+    q = q.reshape(b, s, h, hd)
+    if cross_cache is not None:
+        k, v = cross_cache.k.astype(dt), cross_cache.v.astype(dt)
+        new_cache = None
+    else:
+        src = x if kv_from is None else kv_from
+        sk = src.shape[1]
+        k = linear.linear_apply(cfg, params["k"], src, "attn", d, kv * hd)
+        v = linear.linear_apply(cfg, params["v"], src, "attn", d, kv * hd)
+        k = k.reshape(b, sk, kv, hd)
+        v = v.reshape(b, sk, kv, hd)
+        new_cache = None
+    if cos_sin is not None:
+        cos, sin = cos_sin
+        q = apply_rope(q, cos, sin)
+        if cross_cache is None:
+            k = apply_rope(k, cos, sin)
+
+    q = shard(q, "batch", "seq", "act_heads", "head_dim")
+
+    q_positions = None
+    if cache is not None and cross_cache is None:
+        # write new k/v at positions, then attend over the whole cache
+        k = k.astype(cache.k.dtype)
+        v = v.astype(cache.v.dtype)
+        bidx = jnp.arange(b)[:, None]
+        sidx = positions  # (b, s)
+        ck = cache.k.at[bidx, sidx].set(k)
+        cv = cache.v.at[bidx, sidx].set(v)
+        ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        new_cache = KVCache(ck, cv)
+        k, v = ck.astype(dt), cv.astype(dt)
+        q_positions = positions  # per-query causal visibility over the cache
+    out = _sdpa(q, k, v, causal=causal, q_positions=q_positions)
+    out = out.reshape(b, s, h * hd)
+    out = linear.linear_apply(cfg, params["o"], out, "attn", h * hd, d)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (multi-head latent attention — minicpm3/deepseek style)
+# --------------------------------------------------------------------------
+def mla_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    m = cfg.mla
+    h = cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        # q: d -> q_lora -> h*(nope+rope)
+        "dq": linear.linear_defs(cfg, "small", d, m.q_lora_rank, "embed", "rank"),
+        "q_norm": rmsnorm_defs(m.q_lora_rank),
+        "uq": linear.linear_defs(cfg, "attn", m.q_lora_rank, h * qd, "rank", "heads"),
+        # kv: d -> (kv_lora + rope_dim); latent -> h*(nope + v)
+        "dkv": linear.linear_defs(cfg, "small", d,
+                                  m.kv_lora_rank + m.qk_rope_head_dim,
+                                  "embed", "rank"),
+        "kv_norm": rmsnorm_defs(m.kv_lora_rank),
+        "ukv": linear.linear_defs(cfg, "attn", m.kv_lora_rank,
+                                  h * (m.qk_nope_head_dim + m.v_head_dim),
+                                  "rank", "heads"),
+        "o": linear.linear_defs(cfg, "attn", h * m.v_head_dim, d,
+                                "heads", "embed"),
+    }
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
+    m = cfg.mla
+    return KVCache(
+        k=ParamDef((batch, max_seq, m.kv_lora_rank),
+                   ("batch", "kv_seq", "rank"), init="zeros", dtype="bfloat16"),
+        v=ParamDef((batch, max_seq, m.qk_rope_head_dim),
+                   ("batch", "kv_seq", "head_dim"), init="zeros",
+                   dtype="bfloat16"),
+    )
+
+
+def _mla_project_q(cfg, params, x):
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = linear.linear_apply(cfg, params["dq"], x, "small", cfg.d_model,
+                             m.q_lora_rank)
+    cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+    q = linear.linear_apply(cfg, params["uq"], cq, "attn", m.q_lora_rank,
+                            h * qd).reshape(b, s, h, qd)
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _mla_latent(cfg, params, x):
+    m = cfg.mla
+    ckv = linear.linear_apply(cfg, params["dkv"], x, "small", cfg.d_model,
+                              m.kv_lora_rank + m.qk_rope_head_dim)
+    latent = rmsnorm(params["kv_norm"], ckv[..., :m.kv_lora_rank],
+                     cfg.norm_eps)
+    k_rope = ckv[..., m.kv_lora_rank:]  # (b, s, rope_dim), shared by heads
+    return latent, k_rope
+
+
+def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
+              cos_sin, cache: Optional[KVCache] = None,
+              positions: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """MLA forward; decode uses the absorbed form over the latent cache."""
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    dt = x.dtype
+    cos, sin = cos_sin
+    q_nope, q_rope = _mla_project_q(cfg, params, x)
+    q_rope = apply_rope(q_rope, cos, sin)
+    latent, k_rope = _mla_latent(cfg, params, x)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (b,s,1,rope)
+
+    ukv = params["ukv"]
+    if cache is None:
+        # train/prefill: expand latent to per-head k_nope, v
+        kvd = m.qk_nope_head_dim + m.v_head_dim
+        kv = linear.linear_apply(cfg, ukv, latent, "attn", m.kv_lora_rank,
+                                 h * kvd).reshape(b, s, h, kvd)
+        k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(q, k, v, causal=True)
+        out = out.reshape(b, s, h * m.v_head_dim)
+        out = linear.linear_apply(cfg, params["o"], out, "attn",
+                                  h * m.v_head_dim, cfg.d_model)
+        return out, None
+
+    # ---- cached paths -----------------------------------------------------
+    bidx = jnp.arange(b)[:, None]
+    ck = cache.k.at[bidx, positions].set(latent.astype(cache.k.dtype))
+    cv = cache.v.at[bidx, positions].set(
+        k_rope[:, :, 0, :].astype(cache.v.dtype))
+    ck = shard(ck, "batch", "kv_seq", "rank")
+    cv = shard(cv, "batch", "kv_seq", "head_dim")
+    new_cache = KVCache(ck, cv)
+    latent_c = ck.astype(dt)            # (b, S, r_kv)
+    krope_c = cv.astype(dt)             # (b, S, rope)
+
+    if s > 1 or "a" in ukv:
+        # Expand path: (a) prefill — the absorbed form would materialize
+        # (b, h, s, S) scores; (b) CoLA-parameterized W_ukv — the σ between
+        # the factors breaks MLA's absorption identity (DESIGN.md §4), so
+        # decode recomputes k/v from the latent cache exactly.
+        S = latent_c.shape[1]
+        kvd = m.qk_nope_head_dim + m.v_head_dim
+        kv_all = linear.linear_apply(cfg, ukv, latent_c, "attn",
+                                     m.kv_lora_rank, h * kvd)
+        kv_all = kv_all.reshape(b, S, h, kvd)
+        k_nope_c = kv_all[..., :m.qk_nope_head_dim]
+        v_c = kv_all[..., m.qk_nope_head_dim:]
+        k_full = jnp.concatenate(
+            [k_nope_c,
+             jnp.broadcast_to(krope_c[:, :, None, :],
+                              (b, S, h, m.qk_rope_head_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(q_full, k_full, v_c, causal=False,
+                    q_positions=positions)
+        out = out.reshape(b, s, h * m.v_head_dim)
+        out = linear.linear_apply(cfg, params["o"], out, "attn",
+                                  h * m.v_head_dim, cfg.d_model)
+        return out, new_cache
+
+    # ---- decode: absorbed MLA over the latent cache -----------------------
+
+    # absorb W_uk into q: q_lat = q_nope @ W_uk  (per head)
+    w = _ukv_weight(cfg, ukv, dt)       # (r_kv, h, nope+v)
+    w_uk = w[..., :m.qk_nope_head_dim]  # (r_kv, h, nope)
+    w_uv = w[..., m.qk_nope_head_dim:]  # (r_kv, h, v)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    scores = (jnp.einsum("bshr,bSr->bhsS", q_lat, latent_c) +
+              jnp.einsum("bshn,bSn->bhsS", q_rope, krope_c))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(
+        m.qk_nope_head_dim + m.qk_rope_head_dim).astype(jnp.float32)
+    S = latent_c.shape[1]
+    # per-query causal visibility over cache slots
+    valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]  # (b,s,S)
+    scores = jnp.where(valid[:, None, :, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    wts = jax.nn.softmax(scores, axis=-1).astype(dt)
+    lat_out = jnp.einsum("bhsS,bSr->bshr", wts, latent_c)
+    out = jnp.einsum("bshr,rhv->bshv", lat_out, w_uv)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    out = linear.linear_apply(cfg, params["o"], out, "attn",
+                              h * m.v_head_dim, cfg.d_model)
+    return out, new_cache
+
+
+def _ukv_weight(cfg: ModelConfig, ukv_params: Dict, dt) -> jax.Array:
+    """Materialize W_ukv as (r_kv, h, nope+v) for the absorbed decode path.
+
+    For the CoLA parameterization W_ukv = B_ukv·diag(σ')·A… is nonlinear, so
+    absorption is only exact for dense sites; for CoLA we reconstruct the
+    *linearized* product B·A (σ omitted) — used only in serving where the
+    site was trained with σ; the serve engine can alternatively run the
+    unabsorbed path.  Dry-run cost realism is preserved either way.
+    """
+    m, h = cfg.mla, cfg.num_heads
+    kvd = m.qk_nope_head_dim + m.v_head_dim
+    if "w" in ukv_params:
+        w = ukv_params["w"]
+    elif "a" in ukv_params:
+        w = jnp.einsum("dr,ro->do", ukv_params["a"], ukv_params["b"])
+    elif "w0" in ukv_params:
+        w = ukv_params["w0"] + (cfg.lora.alpha / cfg.lora.rank) * jnp.einsum(
+            "dr,ro->do", ukv_params["lora_a"], ukv_params["lora_b"])
+    else:
+        w = jnp.einsum("dr,ro->do", ukv_params["sl_a"], ukv_params["sl_b"])
+    return w.astype(dt).reshape(m.kv_lora_rank, h, kvd)

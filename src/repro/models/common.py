@@ -1,0 +1,210 @@
+"""Shared model substrate: parameter definitions, norms, rotary embeddings.
+
+Parameters are declared as trees of :class:`ParamDef` (shape + logical axes +
+init recipe).  From one declaration we derive:
+
+* ``init_params``   — materialized arrays (per-path folded rng),
+* ``abstract_params`` — ShapeDtypeStructs (dry-run: no allocation),
+* ``axes_tree``     — the parallel tree of logical-axes tuples used by the
+  sharding rules engine (``distributed/sharding.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Parameter declaration
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | constant
+    scale: float = 1.0
+    dtype: Optional[str] = None  # None => cfg.param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(tree, n: int):
+    """Prepend a ('layers', n) scan axis to every ParamDef in the tree."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=("layers",) + d.axes),
+        tree, is_leaf=is_def)
+
+
+def _materialize(d: ParamDef, key, param_dtype) -> jax.Array:
+    dt = jnp.dtype(d.dtype or param_dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "constant":
+        return jnp.full(d.shape, d.scale, dt)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dt)
+    if d.init == "fan_in":
+        # truncated-normal-ish scaled by 1/sqrt(fan_in); fan_in is the
+        # second-to-last dim for matrices (our convention: W is (in, out)),
+        # last dim for vectors.
+        fan = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / np.sqrt(max(fan, 1))
+        return (std * jax.random.normal(key, d.shape)).astype(dt)
+    raise ValueError(f"unknown init '{d.init}'")
+
+
+def init_params(defs_tree, rng: jax.Array, param_dtype: str = "float32"):
+    """Materialize a ParamDef tree with per-path independent keys."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        defs_tree, is_leaf=is_def)[0]
+    treedef = jax.tree.structure(defs_tree, is_leaf=is_def)
+    arrays = []
+    for path, d in leaves_with_paths:
+        key = jax.random.fold_in(rng, hash(jax.tree_util.keystr(path)) % (2**31))
+        arrays.append(_materialize(d, key, param_dtype))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(defs_tree, param_dtype: str = "float32"):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or param_dtype)),
+        defs_tree, is_leaf=is_def)
+
+
+def axes_tree(defs_tree):
+    return jax.tree.map(lambda d: d.axes, defs_tree, is_leaf=is_def)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), ("embed",), init="ones"),
+            "bias": ParamDef((d,), ("embed",), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def groupnorm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head groupnorm (rwkv6 ln_x). x: (..., h, dh)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (b, s) int -> cos/sin of shape (b, s, head_dim//2)."""
+    inv = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (b, s, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]):
+    """M-RoPE (qwen2-vl): positions (3, b, s); sections sum to head_dim//2.
+
+    Section i of the frequency axis uses the i-th position stream
+    (temporal / height / width).
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (3, b, s, hd/2)
+    sel = np.concatenate([np.full((sec,), i) for i, sec in enumerate(sections)])
+    sel = jnp.asarray(sel, jnp.int32)  # (hd/2,)
+    ang = jnp.take_along_axis(
+        ang, sel[None, None, :, None].transpose(0, 1, 3, 2), axis=0)[0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (b, s, h, hd); cos/sin: (b, s, hd/2). Half-rotation convention."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x32[..., :half], x32[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style sinusoidal position table (n, d)."""
+    log_timescale = np.log(10000.0) / (d // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d // 2))
+    scaled = np.arange(n)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def embedding_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    return {"table": ParamDef((cfg.padded_vocab, cfg.d_model),
+                              ("vocab", "embed"), init="normal", scale=0.02)}
+
+
+def embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(params["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Return logits over the padded vocab with pad ids masked to -inf."""
+    table = params["table"].astype(x.dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], jnp.finfo(logits.dtype).min,
+                           logits)
+    return logits
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)

@@ -1,0 +1,153 @@
+"""Encoder-decoder assembly (whisper-tiny backbone).
+
+The conv/mel frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (batch, frames, d_model).  Encoder = non-causal attention
+blocks; decoder = causal self-attention + cross-attention + GeLU MLP, all
+projection sites CoLA-parameterized.  Sinusoidal absolute positions.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.colam import maybe_remat
+from repro.models import attention, linear, mlp
+from repro.models.common import (ParamDef, rmsnorm, rmsnorm_defs,
+                                 sinusoidal_positions, stack_defs)
+
+
+class CrossCache(NamedTuple):
+    """Per-decoder-layer precomputed cross-attention K/V (from encoder)."""
+    k: jax.Array  # (b, enc_seq, kv, hd)
+    v: jax.Array
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": rmsnorm_defs(cfg.d_model),
+        "attn": attention.gqa_defs(cfg),
+        "ln2": rmsnorm_defs(cfg.d_model),
+        "ffn": mlp.gelu_mlp_defs(cfg),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": rmsnorm_defs(cfg.d_model),
+        "self_attn": attention.gqa_defs(cfg),
+        "ln_x": rmsnorm_defs(cfg.d_model),
+        "cross_attn": attention.gqa_defs(cfg),
+        "ln2": rmsnorm_defs(cfg.d_model),
+        "ffn": mlp.gelu_mlp_defs(cfg),
+    }
+
+
+def encdec_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "encoder": stack_defs(_enc_layer_defs(cfg), cfg.num_encoder_layers),
+        "decoder": stack_defs(_dec_layer_defs(cfg), cfg.num_layers),
+        "ln_enc": rmsnorm_defs(cfg.d_model),
+    }
+
+
+def encdec_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    self_c = attention.gqa_cache_defs(cfg, batch, max_seq)
+    cross_c = CrossCache(
+        k=ParamDef((batch, cfg.encoder_seq_len, kv, hd),
+                   ("batch", "seq", "kv_heads", "head_dim"),
+                   init="zeros", dtype="bfloat16"),
+        v=ParamDef((batch, cfg.encoder_seq_len, kv, hd),
+                   ("batch", "seq", "kv_heads", "head_dim"),
+                   init="zeros", dtype="bfloat16"),
+    )
+    return stack_defs({"self": self_c, "cross": cross_c}, cfg.num_layers)
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jax.Array,
+           training: bool = False) -> jax.Array:
+    """frames: (b, enc_seq, d) — precomputed frame embeddings (stub)."""
+    pos = jnp.asarray(sinusoidal_positions(frames.shape[1], cfg.d_model),
+                      frames.dtype)
+    x = frames + pos[None]
+
+    def body(carry, lp):
+        xc = carry
+        h = rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        a, _ = attention.gqa_apply(cfg, lp["attn"], h, cos_sin=None,
+                                   causal=False)
+        xc = xc + a
+        h = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h)
+        return xc, None
+
+    if training:
+        body = maybe_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def build_cross_caches(cfg: ModelConfig, params: Dict,
+                       enc_out: jax.Array) -> CrossCache:
+    """Precompute per-layer cross K/V from encoder output (stacked (L,…))."""
+    b, se, _ = enc_out.shape
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def per_layer(lp):
+        k = linear.linear_apply(cfg, lp["cross_attn"]["k"], enc_out, "attn",
+                                cfg.d_model, kv * hd).reshape(b, se, kv, hd)
+        v = linear.linear_apply(cfg, lp["cross_attn"]["v"], enc_out, "attn",
+                                cfg.d_model, kv * hd).reshape(b, se, kv, hd)
+        return CrossCache(k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    return jax.lax.map(per_layer, params["decoder"])
+
+
+def decode_stack(cfg: ModelConfig, params: Dict, x: jax.Array, *,
+                 enc_out: Optional[jax.Array] = None,
+                 positions: Optional[jax.Array] = None,
+                 caches: Optional[Dict] = None,
+                 training: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Decoder stack.  Either enc_out (train/prefill, cross-attn computed on
+    the fly) or caches['cross'] (decode) must be provided."""
+    pos = jnp.asarray(sinusoidal_positions(cfg.max_seq_len, cfg.d_model),
+                      x.dtype)
+    if positions is not None:
+        x = x + pos[positions]
+    else:
+        x = x + pos[None, :x.shape[1]]
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        xc = carry
+        lp, pc = xs if has_cache else (xs, None)
+        h = rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        a, new_self = attention.gqa_apply(
+            cfg, lp["self_attn"], h, cos_sin=None,
+            cache=(pc["self"] if has_cache else None), positions=positions)
+        xc = xc + a
+        h = rmsnorm(lp["ln_x"], xc, cfg.norm_eps)
+        if has_cache:
+            a, _ = attention.gqa_apply(cfg, lp["cross_attn"], h,
+                                       cos_sin=None, causal=False,
+                                       cross_cache=pc["cross"])
+        else:
+            a, _ = attention.gqa_apply(cfg, lp["cross_attn"], h,
+                                       cos_sin=None, causal=False,
+                                       kv_from=enc_out)
+        xc = xc + a
+        h = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h)
+        new_pc = ({"self": new_self, "cross": pc["cross"]}
+                  if has_cache else None)
+        return xc, new_pc
+
+    if training and not has_cache:
+        body = maybe_remat(body, cfg.remat)
+    xs = (params["decoder"], caches) if has_cache else params["decoder"]
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, (new_caches if has_cache else None)

@@ -1,0 +1,138 @@
+"""Parameterization factory: every linear *site* in every model is realized
+as one of
+
+* ``dense``   — full-rank baseline ``h = Wx``,
+* ``cola``    — the paper: ``h = B·σ(A·x)`` (core/cola.py),
+* ``lora``    — ReLoRA baseline: ``h = W0·x + (α/r)·B·A·x`` (W0 frozen),
+* ``sltrain`` — SLTrain baseline: ``h = (BA ⊕_I V)·x`` (low-rank + sparse).
+
+A site declares its semantic dims/axes once; the config's
+``parameterization`` field decides the realization, so dense/CoLA/baseline
+comparisons are config flips, not code forks.
+
+Low-rank-site fallback: when ``min(d_in, d_out) <= 2r`` the site is kept
+dense regardless (a bottleneck can't compress an already-narrow projection —
+relevant for MLA latent factors and Mamba's dt/x projections).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import cola as cola_mod
+from repro.models.common import ParamDef
+
+# Sites: 'attn' | 'mlp' | 'expert' | 'small' (never factorized)
+
+
+def _rank_for(cfg: ModelConfig, site: str) -> int:
+    return cfg.rank_attn if site == "attn" else cfg.rank_mlp
+
+
+def site_parameterization(cfg: ModelConfig, site: str,
+                          d_in: int, d_out: int) -> str:
+    if site == "small":
+        return "dense"
+    p = cfg.parameterization
+    if p in ("cola", "lora", "sltrain"):
+        r = _rank_for(cfg, site)
+        if min(d_in, d_out) <= 2 * r and p == "cola":
+            return "dense"  # bottleneck would not compress; keep dense
+    return p
+
+
+def linear_defs(cfg: ModelConfig, site: str, d_in: int, d_out: int,
+                in_ax: Optional[str], out_ax: Optional[str],
+                bias: bool = False,
+                originally_nonlinear: bool = False) -> Dict[str, ParamDef]:
+    p = site_parameterization(cfg, site, d_in, d_out)
+    if p == "dense":
+        defs = {"w": ParamDef((d_in, d_out), (in_ax, out_ax), init="fan_in")}
+        if bias:
+            defs["bias"] = ParamDef((d_out,), (out_ax,), init="zeros")
+        return defs
+    if p == "cola":
+        r = _rank_for(cfg, site)
+        return cola_mod.cola_defs(d_in, d_out, r, in_ax, out_ax, bias=bias)
+    if p == "lora":
+        r = cfg.lora.rank
+        defs = {
+            "w0": ParamDef((d_in, d_out), (in_ax, out_ax), init="fan_in"),
+            "lora_a": ParamDef((d_in, r), (in_ax, "rank"), init="fan_in"),
+            "lora_b": ParamDef((r, d_out), ("rank", out_ax), init="zeros"),
+        }
+        if bias:
+            defs["bias"] = ParamDef((d_out,), (out_ax,), init="zeros")
+        return defs
+    if p == "sltrain":
+        r = cfg.sltrain.rank
+        nnz = max(1, int(cfg.sltrain.sparsity * d_in * d_out))
+        defs = {
+            "sl_a": ParamDef((d_in, r), (in_ax, "rank"), init="fan_in"),
+            "sl_b": ParamDef((r, d_out), ("rank", out_ax), init="fan_in"),
+            # sparse values; fixed random indices are derived from shapes
+            # (deterministic, not trained) — stored flat (nnz,)
+            "sl_v": ParamDef((nnz,), (None,), init="normal", scale=0.01),
+        }
+        if bias:
+            defs["bias"] = ParamDef((d_out,), (out_ax,), init="zeros")
+        return defs
+    raise ValueError(p)
+
+
+def _sltrain_indices(d_in: int, d_out: int, nnz: int) -> np.ndarray:
+    """Deterministic pseudo-random support for S (host-side, hashable)."""
+    rng = np.random.RandomState((d_in * 2654435761 + d_out) % (2**31))
+    flat = rng.choice(d_in * d_out, size=nnz, replace=False)
+    return flat.astype(np.int32)
+
+
+def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
+                 d_in: int, d_out: int,
+                 originally_nonlinear: bool = False) -> jax.Array:
+    """Apply a linear site; dispatches on which params exist."""
+    dt = x.dtype
+    if "w" in params:  # dense
+        h = jnp.einsum("...d,do->...o", x, params["w"].astype(dt))
+        if "bias" in params:
+            h = h + params["bias"].astype(dt)
+        return h
+    if "a" in params:  # cola
+        sigma = cola_mod.sigma_between(cfg, originally_nonlinear)
+        return cola_mod.cola_apply(
+            params, x, sigma=sigma,
+            use_fused=cfg.cola.use_fused_kernel)
+    if "w0" in params:  # lora — W0 frozen (stop_gradient), per paper Fig. 3a
+        w0 = jax.lax.stop_gradient(params["w0"]).astype(dt)
+        h = jnp.einsum("...d,do->...o", x, w0)
+        scale = cfg.lora.alpha / cfg.lora.rank
+        z = jnp.einsum("...d,dr->...r", x, params["lora_a"].astype(dt))
+        h = h + scale * jnp.einsum("...r,ro->...o", z,
+                                   params["lora_b"].astype(dt))
+        if "bias" in params:
+            h = h + params["bias"].astype(dt)
+        return h
+    if "sl_a" in params:  # sltrain: W = BA ⊕ S, reconstructed per step
+        w = jnp.einsum("dr,ro->do", params["sl_a"].astype(dt),
+                       params["sl_b"].astype(dt))
+        nnz = params["sl_v"].shape[0]
+        idx = _sltrain_indices(d_in, d_out, nnz)
+        w = w.reshape(-1).at[idx].add(params["sl_v"].astype(dt)).reshape(
+            d_in, d_out)
+        return jnp.einsum("...d,do->...o", x, w)
+    raise ValueError(f"unrecognized linear params: {list(params)}")
+
+
+def trainable_mask(cfg: ModelConfig, params) -> "jax.tree":
+    """True for trainable leaves (LoRA freezes w0). Used by the optimizer."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    out = []
+    for path, _ in flat:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        out.append(not (cfg.parameterization == "lora" and "w0" in keys))
+    return jax.tree.unflatten(treedef, out)

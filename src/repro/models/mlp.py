@@ -1,0 +1,67 @@
+"""Feed-forward layers: SwiGLU (llama-family) and GeLU (whisper), routed
+through the parameterization factory so each matmul site can be a CoLA
+auto-encoder.
+
+σ-placement (paper App. E.1): with ``cola_sigma='both'`` the SwiGLU gate is
+kept *on top of* the per-site low-rank σ; with ``lowrank_only`` (paper's
+default ≥350M) the original gating nonlinearity is removed and the
+element-wise product remains (the paper keeps "residual connections and the
+element-wise product of LLaMA's MLP" unchanged, §3.2).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.cola import keep_original_sigma
+from repro.distributed.sharding import shard
+from repro.models import linear
+from repro.models.common import silu
+
+
+def swiglu_defs(cfg: ModelConfig, d_ff: int = 0, site: str = "mlp") -> Dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    return {
+        "gate": linear.linear_defs(cfg, site, d, f, "embed", "ffw",
+                                   originally_nonlinear=True),
+        "up": linear.linear_defs(cfg, site, d, f, "embed", "ffw"),
+        "down": linear.linear_defs(cfg, site, f, d, "ffw", "embed"),
+    }
+
+
+def swiglu_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
+                 d_ff: int = 0, site: str = "mlp") -> jax.Array:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    g = linear.linear_apply(cfg, params["gate"], x, site, d, f,
+                            originally_nonlinear=True)
+    u = linear.linear_apply(cfg, params["up"], x, site, d, f)
+    g = shard(g, "batch", "seq", "act_ffw")
+    u = shard(u, "batch", "seq", "act_ffw")
+    if cfg.parameterization != "cola" or keep_original_sigma(cfg):
+        g = silu(g)
+    h = g * u  # element-wise product kept unchanged (paper §3.2)
+    return linear.linear_apply(cfg, params["down"], h, site, f, d)
+
+
+def gelu_mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    return {
+        "fc1": linear.linear_defs(cfg, "mlp", d, f, "embed", "ffw",
+                                  bias=True, originally_nonlinear=True),
+        "fc2": linear.linear_defs(cfg, "mlp", f, d, "ffw", "embed",
+                                  bias=True),
+    }
+
+
+def gelu_mlp_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
+                   d_ff: int = 0) -> jax.Array:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    h = linear.linear_apply(cfg, params["fc1"], x, "mlp", d, f,
+                            originally_nonlinear=True)
+    h = shard(h, "batch", "seq", "act_ffw")
+    if cfg.parameterization != "cola" or keep_original_sigma(cfg):
+        h = jax.nn.gelu(h)
+    return linear.linear_apply(cfg, params["fc2"], h, "mlp", f, d)

@@ -1,0 +1,246 @@
+"""Model facade: one object per architecture with init / apply / prefill /
+decode_step / cache & input specs — everything the launcher, trainer, serve
+engine and dry-run need.
+
+Batch dict conventions
+----------------------
+train (LM):    {"tokens": (B,S) i32, "labels": (B,S) i32}
+train (vlm):   {"inputs_embeds": (B,S,d) bf16, "position_ids": (3,B,S) i32,
+                "labels": (B,S) i32}
+train (audio): {"frames": (B,enc,d) bf16, "tokens": (B,S), "labels": (B,S)}
+prefill:       same minus labels
+decode:        {"tokens": (B,1)} + positions (B,1) + caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.models import common, encdec, ssm, transformer
+from repro.models.common import (ParamDef, abstract_params, axes_tree,
+                                 embed, embedding_defs, init_params, rmsnorm,
+                                 rmsnorm_defs, unembed)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameter definitions -------------------------------------------
+    def defs(self) -> Dict:
+        cfg = self.cfg
+        d = {"embed": embedding_defs(cfg), "ln_f": rmsnorm_defs(cfg.d_model)}
+        if cfg.is_encoder_decoder:
+            d["blocks"] = encdec.encdec_block_defs(cfg)
+        else:
+            d["blocks"] = transformer.stacked_block_defs(cfg)
+        if not cfg.tie_embeddings:
+            d["head"] = {"w": ParamDef((cfg.d_model, cfg.padded_vocab),
+                                       ("embed", "vocab"), init="normal",
+                                       scale=0.02)}
+        return d
+
+    def init(self, rng: jax.Array) -> Dict:
+        params = init_params(self.defs(), rng, self.cfg.param_dtype)
+        params = self._post_init(params)
+        return params
+
+    def _post_init(self, params: Dict) -> Dict:
+        # Mamba A_log needs its S4D spectrum (can't be expressed as ParamDef)
+        if "mamba" in self.cfg.layer_kinds():
+            blocks = dict(params["blocks"])
+            for key, sub in blocks.items():
+                if key.startswith("layer") and "A_log" in sub.get("mixer", {}):
+                    mixer = dict(sub["mixer"])
+                    di, N = mixer["A_log"].shape[-2:]
+                    a = jnp.log(jnp.broadcast_to(
+                        jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)))
+                    mixer["A_log"] = jnp.broadcast_to(
+                        a, mixer["A_log"].shape).astype(mixer["A_log"].dtype)
+                    sub = dict(sub)
+                    sub["mixer"] = mixer
+                    blocks[key] = sub
+            params = dict(params)
+            params["blocks"] = blocks
+        return params
+
+    def abstract(self) -> Dict:
+        return abstract_params(self.defs(), self.cfg.param_dtype)
+
+    def axes(self) -> Dict:
+        return axes_tree(self.defs())
+
+    # ---- caches ------------------------------------------------------------
+    def cache_defs(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return encdec.encdec_cache_defs(cfg, batch, max_seq)
+        return transformer.stacked_cache_defs(cfg, batch, max_seq)
+
+    def init_caches(self, batch: int, max_seq: int) -> Dict:
+        return init_params(self.cache_defs(batch, max_seq),
+                           jax.random.PRNGKey(0), "bfloat16")
+
+    def cache_axes(self, batch: int, max_seq: int) -> Dict:
+        return axes_tree(self.cache_defs(batch, max_seq))
+
+    def abstract_caches(self, batch: int, max_seq: int) -> Dict:
+        return abstract_params(self.cache_defs(batch, max_seq), "bfloat16")
+
+    # ---- rope --------------------------------------------------------------
+    def _cos_sin(self, positions: Optional[jax.Array],
+                 batch: Dict) -> Optional[Tuple[jax.Array, jax.Array]]:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if cfg.attention == "mla":
+            hd = cfg.mla.qk_rope_head_dim
+        if cfg.rope == "none" or cfg.attention == "none":
+            return None
+        if cfg.rope == "mrope":
+            pos3 = batch.get("position_ids")
+            if pos3 is None:
+                pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+            return common.mrope_cos_sin(pos3, hd, cfg.rope_theta,
+                                        cfg.mrope_sections)
+        return common.rope_cos_sin(positions, hd, cfg.rope_theta)
+
+    # ---- forward ------------------------------------------------------------
+    def _embed_inputs(self, params: Dict, batch: Dict, dtype) -> jax.Array:
+        if "inputs_embeds" in batch:
+            return batch["inputs_embeds"].astype(dtype)
+        return embed(params["embed"], batch["tokens"], dtype)
+
+    def _logits(self, params: Dict, x: jax.Array) -> jax.Array:
+        from repro.distributed.sharding import shard
+        cfg = self.cfg
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, cfg)
+            return shard(logits, "batch", "seq", "vocab")
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["head"]["w"].astype(x.dtype))
+        logits = shard(logits, "batch", "seq", "vocab")
+        if cfg.padded_vocab != cfg.vocab_size:
+            mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(mask[None, None], jnp.finfo(logits.dtype).min,
+                               logits)
+        return logits
+
+    def hidden(self, params: Dict, batch: Dict, *, training: bool = False
+               ) -> Tuple[jax.Array, Dict]:
+        """Final hidden states (pre-unembed).  Returns (x, aux)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.is_encoder_decoder:
+            enc = encdec.encode(cfg, params["blocks"],
+                                batch["frames"].astype(dtype), training)
+            x = embed(params["embed"], batch["tokens"], dtype)
+            x, _ = encdec.decode_stack(cfg, params["blocks"], x, enc_out=enc,
+                                       training=training)
+            return x, {}
+        x = self._embed_inputs(params, batch, dtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cos_sin = self._cos_sin(positions, batch)
+        from repro.distributed.sharding import shard
+        x = shard(x, "batch", "seq", "embed")
+        x, _, aux = transformer.stack_forward(cfg, params["blocks"], x,
+                                              cos_sin=cos_sin,
+                                              positions=positions,
+                                              training=training)
+        return x, aux
+
+    def unembed_matrix(self, params: Dict) -> jax.Array:
+        """(d, padded_vocab) output projection (tied or separate head)."""
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"].T
+        return params["head"]["w"]
+
+    def final_norm(self, params: Dict, x: jax.Array) -> jax.Array:
+        return rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
+
+    def apply(self, params: Dict, batch: Dict, *, training: bool = False
+              ) -> Tuple[jax.Array, Dict]:
+        """Full-sequence forward (train / eval).  Returns (logits, aux)."""
+        x, aux = self.hidden(params, batch, training=training)
+        return self._logits(params, x), aux
+
+    # ---- serving -------------------------------------------------------------
+    def prefill(self, params: Dict, batch: Dict, caches: Dict,
+                positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict]:
+        """Write the prompt into caches; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.is_encoder_decoder:
+            enc = encdec.encode(cfg, params["blocks"],
+                                batch["frames"].astype(dtype))
+            cross = encdec.build_cross_caches(cfg, params["blocks"], enc)
+            caches = {"self": caches["self"], "cross": cross}
+            x = embed(params["embed"], batch["tokens"], dtype)
+            b, s = x.shape[:2]
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x, new_caches = encdec.decode_stack(
+                cfg, params["blocks"], x, positions=positions, caches=caches)
+            return self._logits(params, x[:, -1:]), new_caches
+        x = self._embed_inputs(params, batch, dtype)
+        b, s = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cos_sin = self._cos_sin(positions, batch)
+        x, new_caches, _ = transformer.stack_forward(
+            cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
+            caches=caches)
+        return self._logits(params, x[:, -1:]), new_caches
+
+    def decode_step(self, params: Dict, tokens: jax.Array, caches: Dict,
+                    positions: jax.Array) -> Tuple[jax.Array, Dict]:
+        """One decode step.  tokens/positions: (B, 1)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = embed(params["embed"], tokens, dtype)
+        if cfg.is_encoder_decoder:
+            x, new_caches = encdec.decode_stack(
+                cfg, params["blocks"], x, positions=positions, caches=caches)
+            return self._logits(params, x), new_caches
+        cos_sin = self._cos_sin(positions, {})
+        x, new_caches, _ = transformer.stack_forward(
+            cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
+            caches=caches)
+        return self._logits(params, x), new_caches
+
+    # ---- dry-run input specs ---------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        d = cfg.d_model
+        if shape.kind == "train":
+            if cfg.family == "vlm":
+                return {"inputs_embeds": jax.ShapeDtypeStruct((B, S, d), bf16),
+                        "position_ids": jax.ShapeDtypeStruct((3, B, S), i32),
+                        "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "audio":
+                return {"frames": jax.ShapeDtypeStruct(
+                            (B, cfg.encoder_seq_len, d), bf16),
+                        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                        "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            spec = self.input_specs(ShapeSpec(shape.name, S, B, "train"))
+            spec.pop("labels")
+            return spec
+        # decode: one new token over a cache of length S
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

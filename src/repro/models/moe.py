@@ -1,0 +1,201 @@
+"""Mixture-of-Experts with sort-based (matmul-free) dispatch and expert
+parallelism over the 'model' mesh axis.
+
+Design (DESIGN.md §5): tokens stay data-sharded; within each data shard we
+route, sort by expert id, clamp to capacity and scatter into an
+(E_local, C, d) buffer; each 'model' rank computes only its expert slice and
+partial outputs are psum-combined over 'model' — one all-reduce per MoE
+layer, never a quadratic one-hot dispatch einsum.  Expert weights are stored
+FSDP-sharded; the shard_map boundary all-gathers them to EP layout at use
+time (ZeRO-3 semantics, inserted automatically by SPMD resharding).
+
+Experts themselves are CoLA auto-encoders when ``parameterization='cola'``
+(beyond-paper: the paper lists MoE as future work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.config import ModelConfig
+from repro.core.cola import keep_original_sigma
+from repro.distributed.sharding import current_env
+from repro.models import linear
+from repro.models.common import ParamDef, axes_tree, silu
+
+
+def moe_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    E = cfg.moe.num_experts
+    per_expert = {
+        "gate": linear.linear_defs(cfg, "expert", d, f, "embed", "ffw",
+                                   originally_nonlinear=True),
+        "up": linear.linear_defs(cfg, "expert", d, f, "embed", "ffw"),
+        "down": linear.linear_defs(cfg, "expert", f, d, "ffw", "embed"),
+    }
+    experts = jax.tree.map(
+        lambda p: dataclasses.replace(p, shape=(E,) + p.shape,
+                                      axes=("expert",) + p.axes),
+        per_expert, is_leaf=lambda x: isinstance(x, ParamDef))
+    defs = {
+        "router": ParamDef((d, E), ("embed", "expert"), init="fan_in"),
+        "experts": experts,
+    }
+    if cfg.moe.shared_expert_d_ff:
+        from repro.models.mlp import swiglu_defs
+        defs["shared"] = swiglu_defs(cfg, cfg.moe.shared_expert_d_ff,
+                                     site="mlp")
+    return defs
+
+
+def _expert_ffn(cfg: ModelConfig, eparams: Dict, x: jax.Array,
+                d: int, f: int) -> jax.Array:
+    """SwiGLU for a single expert; x: (C, d). No shard() calls inside."""
+    g = linear.linear_apply(cfg, eparams["gate"], x, "expert", d, f,
+                            originally_nonlinear=True)
+    u = linear.linear_apply(cfg, eparams["up"], x, "expert", d, f)
+    if cfg.parameterization != "cola" or keep_original_sigma(cfg):
+        g = silu(g)
+    return linear.linear_apply(cfg, eparams["down"], g * u, "expert", f, d)
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    E, k, cf = cfg.moe.num_experts, cfg.moe.top_k, cfg.moe.capacity_factor
+    return max(1, int(np.ceil(tokens * k * cf / E)))
+
+
+def _moe_core(cfg: ModelConfig, params: Dict, x: jax.Array, d_ff: int, *,
+              ep_axis: Optional[str], ep_rank, ep_size: int
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Route + dispatch + expert compute for local tokens x: (b, s, d).
+
+    ``params['experts']`` leaves hold the LOCAL expert slice (E/ep_size, …)
+    when ep_size > 1 (sliced by the shard_map in_specs), the full table
+    otherwise.
+    """
+    b, s, d = x.shape
+    f = d_ff or cfg.d_ff
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    T = b * s
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @
+              params["router"].astype(jnp.float32))            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                       # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # ---- positions within each expert (sort-based, matmul-free) ----------
+    flat_e = eidx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(T * k) - starts[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+    C = _capacity(cfg, T)
+    E_local = E // ep_size
+    if ep_size > 1:
+        e_lo = ep_rank * E_local
+        is_local = (flat_e >= e_lo) & (flat_e < e_lo + E_local)
+    else:
+        e_lo = 0
+        is_local = jnp.ones_like(flat_e, dtype=bool)
+    keep = (pos < C) & is_local
+    slot = jnp.where(keep, (flat_e - e_lo) * C + pos, E_local * C)
+
+    tok_of = jnp.arange(T * k) // k
+    buf = jnp.zeros((E_local * C, d), x.dtype).at[slot].add(
+        xt[tok_of], mode="drop").reshape(E_local, C, d)
+
+    # ---- expert compute (vmap over local experts) -------------------------
+    eparams = jax.tree.map(lambda w: w.astype(x.dtype), params["experts"])
+    out_buf = jax.vmap(lambda ep, xb: _expert_ffn(cfg, ep, xb, d, f))(
+        eparams, buf)                                           # (E_l, C, d)
+
+    # ---- combine ----------------------------------------------------------
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(E_local * C, d), jnp.zeros((1, d), x.dtype)], 0)
+    y_k = flat_out[slot] * keep[:, None].astype(x.dtype)
+    y_k = y_k * gates.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.sum(y_k.reshape(T, k, d), axis=1)
+    if ep_axis is not None and ep_size > 1:
+        y = jax.lax.psum(y, ep_axis)  # partial outputs from each EP rank
+
+    # ---- aux losses (Switch/GShard) ---------------------------------------
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = {
+        "moe_aux": cfg.moe.aux_loss * E * jnp.sum(me * ce / k),
+        "moe_zloss": cfg.moe.router_z_loss * jnp.mean(
+            jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "moe_drop_frac": 1.0 - jnp.mean(jnp.where(pos < C, 1.0, 0.0)),
+    }
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
+              d_ff: int = 0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """MoE FFN; shard_map EP when a mesh is active, plain local core else."""
+    env = current_env()
+    if env is None or int(np.prod(list(env.mesh.shape.values()))) == 1:
+        y, aux = _moe_core(cfg, params, x, d_ff, ep_axis=None, ep_rank=0,
+                           ep_size=1)
+    else:
+        mesh = env.mesh
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                           and x.shape[0] % mesh.shape[a] == 0)
+        model = "model" if "model" in mesh.shape else None
+        E = cfg.moe.num_experts
+        ep_size = (mesh.shape[model]
+                   if model and E % mesh.shape[model] == 0 else 1)
+        x_spec = P(batch_axes if batch_axes else None, None, None)
+
+        def pin(axes_tuple):
+            if ep_size > 1 and axes_tuple and axes_tuple[0] == "expert":
+                return P(model, *([None] * (len(axes_tuple) - 1)))
+            return P(*([None] * len(axes_tuple)))
+
+        params_axes = axes_tree(moe_defs(cfg, d_ff))
+        params_axes.pop("shared", None)
+        in_params_spec = jax.tree.map(
+            pin, params_axes,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                a is None or isinstance(a, str) for a in t))
+        p_wo_shared = {kk: vv for kk, vv in params.items() if kk != "shared"}
+
+        def body(pp, xl):
+            if ep_size > 1:
+                rank = jax.lax.axis_index(model)
+                yy, aux = _moe_core(cfg, pp, xl, d_ff, ep_axis=model,
+                                    ep_rank=rank, ep_size=ep_size)
+            else:
+                # no EP: tokens & weights replicated over 'model'; every
+                # model rank computes the identical full-expert output.
+                yy, aux = _moe_core(cfg, pp, xl, d_ff, ep_axis=None,
+                                    ep_rank=0, ep_size=1)
+            if batch_axes:
+                aux = {kk: jax.lax.pmean(vv, batch_axes)
+                       for kk, vv in aux.items()}
+            return yy, aux
+
+        y, aux = shard_map(
+            body, mesh=mesh,
+            in_specs=(in_params_spec, x_spec),
+            out_specs=(x_spec, P()),
+            check_rep=False,
+        )(p_wo_shared, x)
+    if "shared" in params:
+        from repro.models.mlp import swiglu_apply
+        y = y + swiglu_apply(cfg, params["shared"], x,
+                             cfg.moe.shared_expert_d_ff, site="mlp")
+    return y, aux

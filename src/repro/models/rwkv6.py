@@ -1,0 +1,155 @@
+"""RWKV6 "Finch" block: time-mix (data-dependent decay WKV recurrence) +
+channel-mix.  [arXiv:2404.05892]
+
+CoLA applies to the r/k/v/g/o time-mix projections and the channel-mix
+W_k/W_v/W_r (all d×d or d×d_ff linear sites).  The data-dependent ddlerp
+and decay LoRAs (time_maa_w1/w2, decay_w1/w2) are *native* low-rank paths in
+RWKV6 and are kept exact — a designed synergy the paper's thesis predicts
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+from repro.models import linear
+from repro.models.common import ParamDef, groupnorm_heads, silu
+
+TM_EXTRA = 32     # ddlerp LoRA dim (official rwkv6 uses 32)
+DECAY_EXTRA = 64  # decay LoRA dim
+
+
+class RWKVState(NamedTuple):
+    tm_x: jax.Array   # (b, d)  last token (time-mix shift)
+    cm_x: jax.Array   # (b, d)  last token (channel-mix shift)
+    wkv: jax.Array    # (b, h, dh, dh) f32 recurrence state
+
+
+def rwkv6_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = cfg.resolved_head_dim
+    ff = cfg.d_ff
+    return {
+        # time-mix ----------------------------------------------------------
+        "maa_x": ParamDef((d,), ("embed",), init="zeros"),
+        "maa_wkvrg": ParamDef((5, d), ("null", "embed"), init="zeros"),
+        "maa_w1": ParamDef((d, 5 * TM_EXTRA), ("embed", "rank"),
+                           init="fan_in", scale=0.1),
+        "maa_w2": ParamDef((5, TM_EXTRA, d), ("null", "rank", "embed"),
+                           init="fan_in", scale=0.1),
+        "decay": ParamDef((d,), ("embed",), init="constant", scale=-6.0),
+        "decay_w1": ParamDef((d, DECAY_EXTRA), ("embed", "rank"),
+                             init="fan_in", scale=0.1),
+        "decay_w2": ParamDef((DECAY_EXTRA, d), ("rank", "embed"),
+                             init="fan_in", scale=0.1),
+        "faaaa": ParamDef((h, dh), ("heads", "head_dim"), init="normal",
+                          scale=0.02),
+        "r": linear.linear_defs(cfg, "attn", d, d, "embed", "heads"),
+        "k": linear.linear_defs(cfg, "attn", d, d, "embed", "heads"),
+        "v": linear.linear_defs(cfg, "attn", d, d, "embed", "heads"),
+        "g": linear.linear_defs(cfg, "attn", d, d, "embed", "heads",
+                                originally_nonlinear=True),
+        "o": linear.linear_defs(cfg, "attn", d, d, "heads", "embed"),
+        "ln_x_scale": ParamDef((d,), ("embed",), init="ones"),
+        "ln_x_bias": ParamDef((d,), ("embed",), init="zeros"),
+        # channel-mix --------------------------------------------------------
+        "cm_maa_k": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_maa_r": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_k": linear.linear_defs(cfg, "mlp", d, ff, "embed", "ffw",
+                                   originally_nonlinear=True),
+        "cm_v": linear.linear_defs(cfg, "mlp", ff, d, "ffw", "embed"),
+        "cm_r": linear.linear_defs(cfg, "attn", d, d, "embed", "heads",
+                                   originally_nonlinear=True),
+    }
+
+
+def rwkv6_state_defs(cfg: ModelConfig, batch: int) -> RWKVState:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    return RWKVState(
+        tm_x=ParamDef((batch, d), ("batch", "embed"), init="zeros",
+                      dtype="bfloat16"),
+        cm_x=ParamDef((batch, d), ("batch", "embed"), init="zeros",
+                      dtype="bfloat16"),
+        wkv=ParamDef((batch, h, dh, dh), ("batch", "heads", "head_dim",
+                                          "head_dim"),
+                     init="zeros", dtype="float32"),
+    )
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; position 0 uses `prev` (or zeros)."""
+    first = (jnp.zeros_like(x[:, :1]) if prev is None
+             else prev[:, None, :].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
+             state: Optional[RWKVState] = None
+             ) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    dt = x.dtype
+    prev = state.tm_x if state is not None else None
+    xs = _shift(x, prev)
+    xx = xs - x
+    # ddlerp: data-dependent interpolation coefficients (Finch)
+    xxx = x + xx * p["maa_x"].astype(dt)
+    B = jnp.tanh(jnp.einsum("bsd,de->bse", xxx, p["maa_w1"].astype(dt)))
+    B = B.reshape(b, s, 5, TM_EXTRA)
+    mixes = jnp.einsum("bsfe,fed->bsfd", B, p["maa_w2"].astype(dt))
+    mixes = mixes + p["maa_wkvrg"].astype(dt)[None, None]
+    xw, xk, xv, xr, xg = [x + xx * mixes[:, :, i] for i in range(5)]
+
+    # data-dependent decay
+    ww = jnp.einsum("bsd,de->bse", jnp.tanh(
+        jnp.einsum("bsd,de->bse", xw, p["decay_w1"].astype(dt))),
+        p["decay_w2"].astype(dt))
+    w = p["decay"].astype(jnp.float32) + ww.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w))                                 # (b, s, d)
+
+    r = linear.linear_apply(cfg, p["r"], xr, "attn", d, d)
+    k = linear.linear_apply(cfg, p["k"], xk, "attn", d, d)
+    v = linear.linear_apply(cfg, p["v"], xv, "attn", d, d)
+    g = linear.linear_apply(cfg, p["g"], xg, "attn", d, d,
+                            originally_nonlinear=True)
+
+    rh = r.reshape(b, s, h, dh)
+    kh = k.reshape(b, s, h, dh)
+    vh = v.reshape(b, s, h, dh)
+    wh = w.reshape(b, s, h, dh)
+    init = state.wkv if state is not None else None
+    y, wkv_state = wkv_ops.wkv6(rh, kh, vh, wh.astype(rh.dtype),
+                                p["faaaa"], init)
+    y = groupnorm_heads(y, p["ln_x_scale"].astype(jnp.float32)
+                        .reshape(h, dh), p["ln_x_bias"].astype(jnp.float32)
+                        .reshape(h, dh))
+    y = y.reshape(b, s, d) * silu(g)
+    out = linear.linear_apply(cfg, p["o"], y, "attn", d, d)
+    new_tm_x = x[:, -1, :] if state is not None else None
+    return out, new_tm_x, (wkv_state if state is not None else None)
+
+
+def channel_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
+                state: Optional[RWKVState] = None
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = x.dtype
+    prev = state.cm_x if state is not None else None
+    xs = _shift(x, prev)
+    xx = xs - x
+    xk = x + xx * p["cm_maa_k"].astype(dt)
+    xr = x + xx * p["cm_maa_r"].astype(dt)
+    k = linear.linear_apply(cfg, p["cm_k"], xk, "mlp", d, ff,
+                            originally_nonlinear=True)
+    k = jnp.square(jax.nn.relu(k))
+    kv = linear.linear_apply(cfg, p["cm_v"], k, "mlp", ff, d)
+    r = linear.linear_apply(cfg, p["cm_r"], xr, "attn", d, d,
+                            originally_nonlinear=True)
+    out = jax.nn.sigmoid(r) * kv
+    new_cm_x = x[:, -1, :] if state is not None else None
+    return out, new_cm_x

@@ -1,0 +1,119 @@
+"""Mamba block (for jamba's hybrid layout).
+
+CoLA applies to the two big projections (in_proj: d → 2·d_inner and
+out_proj: d_inner → d); the small x/dt projections, depthwise conv and the
+selective scan are kept exact (they are not "full-size linear layers" in the
+paper's sense — DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.kernels.mamba_scan import ops as scan_ops
+from repro.models import linear
+from repro.models.common import ParamDef, silu
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (b, d_conv-1, d_inner)
+    ssm: jax.Array   # (b, d_inner, d_state) f32
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or int(np.ceil(cfg.d_model / 16))
+    return d_inner, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di, N, dc, dtr = _dims(cfg)
+    return {
+        "in_proj": linear.linear_defs(cfg, "mlp", d, 2 * di, "embed", "ffw"),
+        "conv_w": ParamDef((dc, di), ("conv", "ffw"), init="fan_in"),
+        "conv_b": ParamDef((di,), ("ffw",), init="zeros"),
+        "x_proj": linear.linear_defs(cfg, "small", di, dtr + 2 * N,
+                                     "ffw", "rank"),
+        "dt_proj": linear.linear_defs(cfg, "small", dtr, di, "rank", "ffw"),
+        # softplus^{-1}(0.01) ≈ -4.6: start with slow dynamics
+        "dt_bias": ParamDef((di,), ("ffw",), init="constant", scale=-4.6),
+        "A_log": ParamDef((di, N), ("ffw", "state"), init="constant",
+                          scale=0.0),  # overwritten below via transform
+        "D": ParamDef((di,), ("ffw",), init="ones"),
+        "out_proj": linear.linear_defs(cfg, "mlp", di, d, "ffw", "embed"),
+    }
+
+
+def _a_log_init(di: int, N: int) -> jax.Array:
+    # S4D-real init: A = -(1..N) per channel
+    return jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                    (di, N)))
+
+
+def fix_mamba_init(params: Dict, cfg: ModelConfig) -> Dict:
+    """Post-init transform: A_log gets the S4D-real spectrum."""
+    di, N, _, _ = _dims(cfg)
+    params = dict(params)
+    params["A_log"] = _a_log_init(di, N).astype(params["A_log"].dtype)
+    return params
+
+
+def mamba_state_defs(cfg: ModelConfig, batch: int) -> MambaState:
+    di, N, dc, _ = _dims(cfg)
+    return MambaState(
+        conv=ParamDef((batch, dc - 1, di), ("batch", "conv", "ffw"),
+                      init="zeros", dtype="bfloat16"),
+        ssm=ParamDef((batch, di, N), ("batch", "ffw", "state"),
+                     init="zeros", dtype="float32"),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (b, s, di); w: (dc, di)."""
+    dc = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+           if prev is None else prev.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                   # (b, s+dc-1, di)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(dc))
+    new_prev = xp[:, -(dc - 1):, :] if dc > 1 else pad[:, :0]
+    return y + b[None, None, :], new_prev
+
+
+def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    d = cfg.d_model
+    di, N, dc, dtr = _dims(cfg)
+    b, s, _ = x.shape
+    xz = linear.linear_apply(cfg, params["in_proj"], x, "mlp", d, 2 * di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    prev_conv = state.conv if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"].astype(x.dtype),
+                                params["conv_b"].astype(x.dtype), prev_conv)
+    xc = silu(xc)
+
+    dbc = linear.linear_apply(cfg, params["x_proj"], xc, "small", di,
+                              dtr + 2 * N)
+    dt, B, C = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = linear.linear_apply(cfg, params["dt_proj"], dt, "small", dtr, di)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    init = state.ssm if state is not None else None
+    y, ssm = scan_ops.selective_scan(xc, dt.astype(xc.dtype), A, B, C,
+                                     params["D"], init)
+    y = y * silu(z)
+    out = linear.linear_apply(cfg, params["out_proj"], y, "mlp", di, d)
+    new_state = (MambaState(conv=new_conv.astype(jnp.bfloat16), ssm=ssm)
+                 if state is not None else None)
+    return out, new_state

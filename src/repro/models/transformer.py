@@ -1,0 +1,197 @@
+"""Decoder-stack assembly: scan over repeating layer *periods*.
+
+A period is the repeating unit of the architecture — lcm(block_pattern,
+MoE interleave).  Parameters for one period are declared once and stacked
+(n_periods, …) so ``lax.scan`` compiles a single period body regardless of
+depth (compile-time critical for the 512-device dry-run).  Heterogeneous
+layouts (jamba's 7 Mamba + 1 attn, llama4's dense/MoE alternation) unroll
+*within* the period body.
+
+CoLA-M: the period body is wrapped with ``jax.checkpoint`` whose policy
+saves only the ``'cola_r'``-named low-rank activations (core/colam.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.colam import maybe_remat
+from repro.distributed.sharding import shard
+from repro.models import attention, mlp, moe, rwkv6, ssm
+from repro.models.common import (ParamDef, rmsnorm, rmsnorm_defs,
+                                 stack_defs)
+
+
+def period_length(cfg: ModelConfig) -> int:
+    p = len(cfg.block_pattern)
+    step = max(1, cfg.moe.interleave_step) if cfg.moe.enabled else 1
+    period = math.lcm(p, step)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    return period
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    return cfg.num_layers // period_length(cfg)
+
+
+# --------------------------------------------------------------------------
+# Per-period parameter / cache definitions
+# --------------------------------------------------------------------------
+def _layer_defs(cfg: ModelConfig, kind: str, is_moe: bool) -> Dict:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"ln1": rmsnorm_defs(d)}
+    if kind == "attn":
+        defs["mixer"] = (attention.mla_defs(cfg) if cfg.attention == "mla"
+                         else attention.gqa_defs(cfg))
+    elif kind == "mamba":
+        defs["mixer"] = ssm.mamba_defs(cfg)
+    elif kind == "rwkv6":
+        defs["mixer"] = rwkv6.rwkv6_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv6":  # rwkv6 defs already include channel-mix (its ffn)
+        defs["ln2"] = rmsnorm_defs(d)
+        if is_moe:
+            defs["ffn"] = moe.moe_defs(cfg)
+        else:
+            d_ff = (cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe.enabled \
+                else cfg.d_ff
+            if cfg.family == "audio":
+                defs["ffn"] = mlp.gelu_mlp_defs(cfg, d_ff)
+            else:
+                defs["ffn"] = mlp.swiglu_defs(cfg, d_ff)
+    else:
+        defs["ln2"] = rmsnorm_defs(d)
+    return defs
+
+
+def period_defs(cfg: ModelConfig) -> Dict:
+    period = period_length(cfg)
+    kinds = cfg.layer_kinds()
+    return {f"layer{i}": _layer_defs(cfg, kinds[i], cfg.layer_is_moe(i))
+            for i in range(period)}
+
+
+def stacked_block_defs(cfg: ModelConfig) -> Dict:
+    return stack_defs(period_defs(cfg), n_periods(cfg))
+
+
+def period_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    period = period_length(cfg)
+    kinds = cfg.layer_kinds()
+    out = {}
+    for i in range(period):
+        if kinds[i] == "attn":
+            out[f"layer{i}"] = (
+                attention.mla_cache_defs(cfg, batch, max_seq)
+                if cfg.attention == "mla"
+                else attention.gqa_cache_defs(cfg, batch, max_seq))
+        elif kinds[i] == "mamba":
+            out[f"layer{i}"] = ssm.mamba_state_defs(cfg, batch)
+        elif kinds[i] == "rwkv6":
+            out[f"layer{i}"] = rwkv6.rwkv6_state_defs(cfg, batch)
+    return out
+
+
+def stacked_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    return stack_defs(period_cache_defs(cfg, batch, max_seq), n_periods(cfg))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+def _zero_aux(cfg: ModelConfig) -> Dict[str, jax.Array]:
+    if not cfg.moe.enabled:
+        return {}
+    return {"moe_aux": jnp.zeros((), jnp.float32),
+            "moe_zloss": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
+                 x: jax.Array, *, cos_sin, positions, cache, aux_acc):
+    """One layer: pre-norm mixer + pre-norm ffn, residual adds."""
+    new_cache = cache
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attention == "mla":
+            a, new_cache = attention.mla_apply(
+                cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
+                positions=positions)
+        else:
+            a, new_cache = attention.gqa_apply(
+                cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
+                positions=positions)
+        x = x + a
+    elif kind == "mamba":
+        a, new_cache = ssm.mamba_apply(cfg, lp["mixer"], h, state=cache)
+        x = x + a
+    elif kind == "rwkv6":
+        tm_out, new_tm, new_wkv = rwkv6.time_mix(cfg, lp["mixer"], h,
+                                                 state=cache)
+        x = x + tm_out
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        cm_out, new_cm = rwkv6.channel_mix(cfg, lp["mixer"], h2, state=cache)
+        x = x + cm_out
+        if cache is not None:
+            new_cache = rwkv6.RWKVState(tm_x=new_tm.astype(jnp.bfloat16),
+                                        cm_x=new_cm.astype(jnp.bfloat16),
+                                        wkv=new_wkv)
+        return x, new_cache, aux_acc
+    # ffn (attn / mamba layers)
+    h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if is_moe:
+        f, aux = moe.moe_apply(cfg, lp["ffn"], h)
+        aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+    else:
+        d_ff = (cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe.enabled \
+            else cfg.d_ff
+        if cfg.family == "audio":
+            f = mlp.gelu_mlp_apply(cfg, lp["ffn"], h, d_ff)
+        else:
+            f = mlp.swiglu_apply(cfg, lp["ffn"], h, d_ff)
+    x = x + f
+    return x, new_cache, aux_acc
+
+
+def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
+                  cos_sin=None, positions=None, caches: Optional[Dict] = None,
+                  training: bool = False
+                  ) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    """Run the full decoder stack.  block_params/caches are period-stacked."""
+    period = period_length(cfg)
+    kinds = cfg.layer_kinds()
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        if has_cache:
+            pparams, pcache = xs
+        else:
+            pparams, pcache = xs, {}
+        new_pcache = {}
+        for i in range(period):
+            lp = pparams[f"layer{i}"]
+            cache_i = pcache.get(f"layer{i}") if has_cache else None
+            xc, nc, aux_acc = _apply_layer(
+                cfg, kinds[i], cfg.layer_is_moe(i), lp, xc,
+                cos_sin=cos_sin, positions=positions, cache=cache_i,
+                aux_acc=aux_acc)
+            if has_cache and f"layer{i}" in pcache:
+                new_pcache[f"layer{i}"] = nc
+        # seq-sharded carry (Megatron-SP): the saved per-block residual
+        # stack lives sequence-sharded over 'model'; blocks all-gather at
+        # entry.  Keeps CoLA-M's (periods, b, s, d) saves 1/|model| sized.
+        xc = shard(xc, "batch", "seq_save", "embed")
+        return (xc, aux_acc), new_pcache
+
+    if training and not has_cache:
+        body = maybe_remat(body, cfg.remat)
+
+    xs = (block_params, caches) if has_cache else block_params
+    (x, aux), new_caches = jax.lax.scan(body, (x, _zero_aux(cfg)), xs)
+    return x, (new_caches if has_cache else None), aux

@@ -1,0 +1,86 @@
+"""AdamW and LAMB, from scratch over pytrees (no optax in this container).
+
+Optimizer states are f32 and inherit the parameter shardings (ZeRO-3
+semantics come for free: the jit in_shardings pin m/v to the same
+FSDP layout as the master params).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def _adam_moments(tc: TrainConfig, state: AdamState, grads):
+    b1, b2 = tc.beta1, tc.beta2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.v, grads)
+    count = state.count + 1
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    return m, v, count, bc1, bc2
+
+
+def adamw_update(tc: TrainConfig, params, grads, state: AdamState,
+                 lr: jax.Array, mask=None) -> Tuple[Any, AdamState]:
+    """Returns (new_params, new_state).  mask: False leaves are frozen."""
+    m, v, count, bc1, bc2 = _adam_moments(tc, state, grads)
+
+    def upd(p, mm, vv, keep):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        step = mhat / (jnp.sqrt(vhat) + tc.eps)
+        step = step + tc.weight_decay * p.astype(jnp.float32)
+        new = p.astype(jnp.float32) - lr * step
+        new = new.astype(p.dtype)
+        return jnp.where(keep, new, p) if keep is not None else new
+
+    if mask is None:
+        new_params = jax.tree.map(lambda p, mm, vv: upd(p, mm, vv, None),
+                                  params, m, v)
+    else:
+        new_params = jax.tree.map(upd, params, m, v, mask)
+    return new_params, AdamState(m, v, count)
+
+
+def lamb_update(tc: TrainConfig, params, grads, state: AdamState,
+                lr: jax.Array, mask=None) -> Tuple[Any, AdamState]:
+    """LAMB (You et al. 2019) — used by the paper's BERT-Large reproduction."""
+    m, v, count, bc1, bc2 = _adam_moments(tc, state, grads)
+
+    def upd(p, mm, vv, keep):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        step = mhat / (jnp.sqrt(vhat) + tc.eps)
+        step = step + tc.weight_decay * p.astype(jnp.float32)
+        wn = jnp.linalg.norm(p.astype(jnp.float32).reshape(-1))
+        sn = jnp.linalg.norm(step.reshape(-1))
+        trust = jnp.where((wn > 0) & (sn > 0), wn / sn, 1.0)
+        new = (p.astype(jnp.float32) - lr * trust * step).astype(p.dtype)
+        return jnp.where(keep, new, p) if keep is not None else new
+
+    if mask is None:
+        new_params = jax.tree.map(lambda p, mm, vv: upd(p, mm, vv, None),
+                                  params, m, v)
+    else:
+        new_params = jax.tree.map(upd, params, m, v, mask)
+    return new_params, AdamState(m, v, count)

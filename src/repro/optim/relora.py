@@ -1,0 +1,62 @@
+"""ReLoRA baseline (Lialin et al. 2023): accumulate low-rank updates by
+periodically merging B·A into the frozen W0 and restarting the factors
+(+ resetting their optimizer moments).
+
+Used with ``parameterization='lora'``; the train loop calls
+``maybe_merge_restart`` every ``cfg.lora.relora_every`` steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.optim.adamw import AdamState
+
+
+def _is_lora_site(path_keys) -> bool:
+    return any(k in ("lora_a", "lora_b") for k in path_keys)
+
+
+def merge_restart(cfg: ModelConfig, params, opt: AdamState,
+                  rng: jax.Array) -> Tuple[Any, AdamState]:
+    """W0 += (α/r)·A·B ; A ~ N(0, 1/√d) ; B = 0 ; moments of A,B zeroed."""
+    scale = cfg.lora.alpha / cfg.lora.rank
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    by_path = {jax.tree_util.keystr(p): (p, v) for p, v in flat}
+    new_vals = {}
+    for key, (path, val) in by_path.items():
+        keys = [getattr(q, "key", "") for q in path]
+        if keys and keys[-1] == "w0":
+            prefix = key[: key.rfind("[")]
+            a = by_path.get(prefix + "['lora_a']")
+            b = by_path.get(prefix + "['lora_b']")
+            if a is not None and b is not None:
+                merged = val.astype(jnp.float32) + scale * (
+                    a[1].astype(jnp.float32) @ b[1].astype(jnp.float32))
+                new_vals[key] = merged.astype(val.dtype)
+                continue
+        if keys and keys[-1] == "lora_a":
+            k = jax.random.fold_in(rng, hash(key) % (2**31))
+            std = 1.0 / jnp.sqrt(val.shape[0])
+            new_vals[key] = (std * jax.random.normal(k, val.shape)
+                             ).astype(val.dtype)
+        elif keys and keys[-1] == "lora_b":
+            new_vals[key] = jnp.zeros_like(val)
+    new_params = jax.tree.unflatten(
+        treedef, [new_vals.get(jax.tree_util.keystr(p), v)
+                  for p, v in flat])
+
+    def zero_lora_moments(tree):
+        mflat, mdef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for p, v in mflat:
+            keys = [getattr(q, "key", "") for q in p]
+            out.append(jnp.zeros_like(v) if _is_lora_site(keys) else v)
+        return jax.tree.unflatten(mdef, out)
+
+    new_opt = AdamState(m=zero_lora_moments(opt.m),
+                        v=zero_lora_moments(opt.v), count=opt.count)
+    return new_params, new_opt

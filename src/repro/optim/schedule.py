@@ -1,0 +1,15 @@
+"""LR schedules (paper App. D: cosine annealing with warm-up)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int,
+                    warmup_ratio: float = 0.1, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warmup = jnp.maximum(1.0, warmup_ratio * total_steps)
+    warm = base_lr * (step + 1.0) / warmup  # step 0 takes a nonzero step
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + greedy/temperature decode over the
+model facade's KV caches (contiguous per-layer caches; SSM/RWKV archs carry
+O(1) recurrent state instead).
+
+CoLA inference advantage (paper Table 11): the 2× smaller projections halve
+both weight traffic and decode FLOPs; the engine is the harness the
+inference benchmark drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Dict
+    max_batch: int
+    max_seq: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=2)
+
+    # -----------------------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 temperature: float = 0.0, rng: Optional[jax.Array] = None
+                 ) -> Tuple[np.ndarray, Dict]:
+        """prompts: (B, P) int32 (right-aligned, no padding support needed
+        for the benchmark harness — equal-length prompts)."""
+        b, p = prompts.shape
+        assert b <= self.max_batch and p + max_new_tokens <= self.max_seq
+        caches = self.model.init_caches(b, self.max_seq)
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, caches = self._prefill(self.params, batch, caches)
+        t_prefill = time.perf_counter() - t0
+
+        tok = self._sample(logits[:, -1], temperature, rng, 0)
+        out = [np.asarray(tok)]
+        t1 = time.perf_counter()
+        for i in range(max_new_tokens - 1):
+            pos = jnp.full((b, 1), p + i, jnp.int32)
+            logits, caches = self._decode(self.params, tok, caches, pos)
+            tok = self._sample(logits[:, -1], temperature, rng, i + 1)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+        tokens = np.concatenate(out, axis=1)
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_per_s": b * max_new_tokens / max(t_decode, 1e-9),
+        }
+        return tokens, stats
+
+    def _sample(self, logits: jax.Array, temperature: float,
+                rng: Optional[jax.Array], i: int) -> jax.Array:
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        k = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            k, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)[:, None]
+
+
+def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
+                max_batch: int = 8, max_seq: int = 256,
+                seed: int = 0) -> ServeEngine:
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    return ServeEngine(model, params, max_batch, max_seq)

@@ -1,0 +1,1 @@
+from repro.train.step import TrainState, build_train_step, make_train_state  # noqa: F401

@@ -1,0 +1,140 @@
+"""Fault-tolerant training loop.
+
+Features wired together here: sharded jit step (params/opt FSDP+TP via
+param_sharding_tree), deterministic resumable data, atomic+async
+checkpointing with auto-resume, SIGTERM → checkpoint-and-exit (preemption),
+straggler watchdog, ReLoRA merge/restart scheduling, periodic eval.
+"""
+from __future__ import annotations
+
+import signal
+import sys
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import ModelConfig, TrainConfig
+from repro.data.pipeline import make_pipeline
+from repro.distributed.sharding import (current_env, named_sharding_tree,
+                                        param_sharding_tree, spec_tree)
+from repro.distributed.straggler import StepWatchdog
+from repro.models.model import build_model
+from repro.optim import relora
+from repro.train import step as step_mod
+from repro.train.metrics import MetricsLogger
+
+
+def train(mc: ModelConfig, tc: TrainConfig, *,
+          log_path: Optional[str] = None,
+          hooks: Optional[Dict[str, Callable]] = None) -> Dict:
+    """Run the loop; returns final metrics.  Works with or without an active
+    mesh_env (single-device CPU smoke up to multi-pod)."""
+    hooks = hooks or {}
+    model = build_model(mc)
+    env = current_env()
+    train_step = step_mod.build_train_step(model, tc)
+    eval_step = step_mod.build_eval_step(model)
+
+    # ---- state init / resume ------------------------------------------------
+    mgr = (CheckpointManager(tc.checkpoint_dir, tc.keep_checkpoints,
+                             tc.async_checkpoint)
+           if tc.checkpoint_dir else None)
+    rng = jax.random.PRNGKey(tc.seed)
+    start_step = 0
+    state = None
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            template = jax.eval_shape(
+                lambda: step_mod.make_train_state(model, tc, rng))
+            shardings = None
+            if env is not None:
+                axes = step_mod.train_state_axes(model, tc)
+                shardings = param_sharding_tree(axes, template, env)
+            state = mgr.restore(latest, template, shardings)
+            start_step = int(mgr.restore_extra(latest)["step"])
+            print(f"[resume] restored checkpoint step={start_step}")
+    if state is None:
+        state = step_mod.make_train_state(model, tc, rng)
+        if env is not None:
+            axes = step_mod.train_state_axes(model, tc)
+            shardings = param_sharding_tree(axes, state, env)
+            state = jax.tree.map(jax.device_put, state, shardings)
+
+    # ---- jit the step ---------------------------------------------------------
+    if env is not None:
+        axes = step_mod.train_state_axes(model, tc)
+        state_sh = param_sharding_tree(axes, state, env)
+        step_fn = jax.jit(train_step, in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None), donate_argnums=0)
+    else:
+        step_fn = jax.jit(train_step, donate_argnums=0)
+    eval_fn = jax.jit(eval_step)
+
+    # ---- data -------------------------------------------------------------------
+    pipe = make_pipeline(mc, tc)
+    logger = MetricsLogger(log_path)
+    watchdog = StepWatchdog(on_straggler=hooks.get("on_straggler"))
+
+    # ---- preemption: checkpoint on SIGTERM ----------------------------------------
+    preempted = {"flag": False}
+
+    def _sigterm(signum, frame):
+        preempted["flag"] = True
+    old_handler = signal.signal(signal.SIGTERM, _sigterm)
+
+    metrics = {}
+    tokens_per_step = tc.global_batch * tc.seq_len
+    try:
+        for s in range(start_step, tc.steps):
+            batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(s).items()}
+            watchdog.start()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            watchdog.stop(s)
+
+            if (mc.parameterization == "lora" and mc.lora.relora_every and
+                    (s + 1) % mc.lora.relora_every == 0):
+                new_params, new_opt = relora.merge_restart(
+                    mc, state.params, state.opt,
+                    jax.random.fold_in(rng, s))
+                state = state._replace(params=new_params, opt=new_opt)
+
+            if tc.log_every and (s % tc.log_every == 0 or s == tc.steps - 1):
+                logger.log(s, metrics, tokens=tokens_per_step)
+            if tc.eval_every and (s + 1) % tc.eval_every == 0:
+                evals = []
+                for i in range(tc.eval_batches):
+                    eb = {k: jnp.asarray(v) for k, v in
+                          pipe.get_batch(10**6 + i).items()}
+                    evals.append(eval_fn(state.params, eb))
+                eval_loss = float(np.mean([float(e["ce_loss"])
+                                           for e in evals]))
+                print(f"[eval step {s}] loss={eval_loss:.4f} "
+                      f"ppl={np.exp(min(eval_loss, 50)):.2f}")
+            if mgr is not None and tc.checkpoint_every and \
+                    (s + 1) % tc.checkpoint_every == 0:
+                mgr.save(s + 1, state, extra=pipe.state(s + 1))
+            if preempted["flag"] or (tc.stop_after and s + 1 >= tc.stop_after):
+                if preempted["flag"]:
+                    print("[preempt] SIGTERM received — checkpointing and "
+                          "exiting cleanly")
+                if mgr is not None:
+                    mgr.save(s + 1, state, extra=pipe.state(s + 1))
+                    mgr.wait()
+                break
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+        if mgr is not None:
+            mgr.wait()
+        logger.close()
+    out = {k: float(v) for k, v in metrics.items()
+           if jnp.ndim(v) == 0}
+    out["straggler_events"] = len(watchdog.events)
+    out["final_step"] = int(state.step)
+    out["state"] = state
+    return out

@@ -1,0 +1,47 @@
+"""Lightweight metrics logging (CSV + stdout)."""
+from __future__ import annotations
+
+import csv
+import math
+import os
+import time
+from typing import Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._writer = None
+        self._file = None
+        self._t0 = time.time()
+
+    def log(self, step: int, metrics: Dict[str, float], tokens: int = 0):
+        row = {"step": step, "time": time.time() - self._t0}
+        for k, v in metrics.items():
+            try:
+                row[k] = float(v)
+            except (TypeError, ValueError):
+                pass
+        if tokens:
+            row["tokens_per_s"] = tokens / max(row["time"], 1e-9)
+        if "ce_loss" in row and row["ce_loss"] < 50:
+            row["ppl"] = math.exp(row["ce_loss"])
+        if self.path:
+            new = self._writer is None
+            if new:
+                os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+                self._file = open(self.path, "a", newline="")
+                self._writer = csv.DictWriter(
+                    self._file, fieldnames=sorted(row))
+                if self._file.tell() == 0:
+                    self._writer.writeheader()
+            self._writer.writerow({k: row.get(k) for k in
+                                   self._writer.fieldnames})
+            self._file.flush()
+        msg = " ".join(f"{k}={row[k]:.4g}" for k in sorted(row)
+                       if isinstance(row[k], float))
+        print(f"[step {step}] {msg}", flush=True)
+
+    def close(self):
+        if self._file:
+            self._file.close()

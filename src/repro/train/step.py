@@ -1,0 +1,206 @@
+"""Train/eval step builders.
+
+The step is a pure jit-able function of (TrainState, batch):
+bf16 forward/backward over f32 master params, CoLA-M (or other) remat via
+the model config, global-norm clip, cosine LR, AdamW/LAMB/GaLore update,
+optional int8 gradient compression with error feedback, optional
+microbatched gradient accumulation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.linear import trainable_mask
+from repro.models.model import Model
+from repro.optim import adamw, clip, compression, galore, schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any                  # AdamState | GaloreState
+    step: jax.Array
+    err: Any                  # error-feedback tree ({} when unused)
+
+
+def make_train_state(model: Model, tc: TrainConfig, rng: jax.Array
+                     ) -> TrainState:
+    params = model.init(rng)
+    opt = (galore.galore_init(params, tc.galore_rank) if tc.galore_rank
+           else adamw.adamw_init(params))
+    err = (compression.init_error(params)
+           if tc.grad_compression == "int8" else {})
+    return TrainState(params, opt, jnp.zeros((), jnp.int32), err)
+
+
+def abstract_train_state(model: Model, tc: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct TrainState (dry-run: no allocation)."""
+    params = model.abstract()
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    if tc.galore_rank:
+        opt = jax.eval_shape(
+            lambda: galore.galore_init(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+                tc.galore_rank))
+    else:
+        opt = adamw.AdamState(m=jax.tree.map(f32, params),
+                              v=jax.tree.map(f32, params),
+                              count=jax.ShapeDtypeStruct((), jnp.int32))
+    err = (jax.tree.map(f32, params) if tc.grad_compression == "int8" else {})
+    return TrainState(params, opt,
+                      jax.ShapeDtypeStruct((), jnp.int32), err)
+
+
+def train_state_axes(model: Model, tc: TrainConfig) -> TrainState:
+    """Logical-axes tree matching TrainState (for param_sharding_tree)."""
+    axes = model.axes()
+    scalar = ("null",) * 0  # 0-dim
+    if tc.galore_rank:
+        # galore state leaves have data-dependent shapes; replicate them
+        # (GaLore is a small-scale baseline, not a dry-run configuration)
+        params_template = model.abstract()
+        opt_shapes = jax.eval_shape(
+            lambda: galore.galore_init(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             params_template), tc.galore_rank))
+        opt_axes = jax.tree.map(lambda s: ("null",) * len(s.shape),
+                                opt_shapes)
+    else:
+        opt_axes = adamw.AdamState(m=axes, v=axes, count=())
+    err_axes = axes if tc.grad_compression == "int8" else {}
+    return TrainState(params=axes, opt=opt_axes, step=(), err=err_axes)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE in f32 (gather form — safe with -inf padded vocab)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_unembed_ce(x: jax.Array, w: jax.Array, labels: jax.Array,
+                       vocab_size: int, n_chunks: int = 8) -> jax.Array:
+    """Fused unembed + cross-entropy, chunked over tokens.
+
+    The (tokens, vocab) logits tensor never materializes: each chunk
+    computes its logits, its CE partial sum, and (via jax.checkpoint)
+    recomputes them in backward — the Liger-kernel trick in XLA.  w grads
+    accumulate across chunks through the scan cotangent.
+    """
+    from repro.distributed.sharding import shard
+    b, s, d = x.shape
+    T = b * s
+    while T % n_chunks:
+        n_chunks //= 2
+    xt = x.reshape(n_chunks, T // n_chunks, d)
+    lt = labels.reshape(n_chunks, T // n_chunks)
+    pad_mask = (jnp.arange(w.shape[-1]) >= vocab_size) if \
+        w.shape[-1] != vocab_size else None
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc = inp
+        logits = jnp.einsum("td,dv->tv", xc, w.astype(xc.dtype))
+        logits = shard(logits, "batch", "vocab")
+        logits = logits.astype(jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lc[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xt, lt))
+    return total / T
+
+
+def build_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        x, aux = model.hidden(params, batch, training=True)
+        x = model.final_norm(params, x)
+        loss = chunked_unembed_ce(x, model.unembed_matrix(params),
+                                  batch["labels"],
+                                  model.cfg.vocab_size)
+        total = loss
+        for k in ("moe_aux", "moe_zloss"):
+            if k in aux:
+                total = total + aux[k]
+        metrics = {"ce_loss": loss, **aux}
+        return total, metrics
+    return loss_fn
+
+
+def build_train_step(model: Model, tc: TrainConfig):
+    loss_fn = build_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    mask = None  # computed lazily (needs a params tree)
+
+    def compute_grads(params, batch):
+        if tc.microbatch and tc.microbatch > 1:
+            n = tc.microbatch
+            def slice_mb(i, t):
+                mb = t.shape[0] // n
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+            def body(carry, i):
+                acc, loss_acc = carry
+                mb = {k: slice_mb(i, v) if v.ndim >= 1 and
+                      v.shape[0] == batch["labels"].shape[0] else v
+                      for k, v in batch.items()}
+                if "position_ids" in batch:  # (3, B, S) layout
+                    mb["position_ids"] = jax.lax.dynamic_slice_in_dim(
+                        batch["position_ids"],
+                        i * (batch["position_ids"].shape[1] // n),
+                        batch["position_ids"].shape[1] // n, axis=1)
+                (l, mets), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b, acc, g)
+                return (acc, loss_acc + l), mets
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), mets = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+            metrics["ce_loss"] = lsum / n
+            return (lsum / n, metrics), grads
+        return grad_fn(params, batch)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = compute_grads(state.params, batch)
+        grads, gnorm = clip.clip_by_global_norm(grads, tc.grad_clip)
+        err = state.err
+        if tc.grad_compression == "int8":
+            grads, err = compression.compress_with_feedback(grads, err)
+        lr = schedule.cosine_schedule(
+            state.step, base_lr=tc.learning_rate, total_steps=tc.steps,
+            warmup_ratio=tc.warmup_ratio, min_ratio=tc.min_lr_ratio)
+        if tc.galore_rank:
+            new_params, new_opt = galore.galore_update(
+                tc, state.params, grads, state.opt, lr)
+        elif tc.optimizer == "lamb":
+            m = trainable_mask(model.cfg, state.params)
+            new_params, new_opt = adamw.lamb_update(
+                tc, state.params, grads, state.opt, lr, m)
+        else:
+            m = trainable_mask(model.cfg, state.params)
+            new_params, new_opt = adamw.adamw_update(
+                tc, state.params, grads, state.opt, lr, m)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt, state.step + 1, err), metrics
+
+    return train_step
+
+
+def build_eval_step(model: Model):
+    loss_fn = build_loss_fn(model)
+
+    def eval_step(params, batch) -> Dict:
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

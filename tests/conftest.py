@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests run on the default single CPU device (the dry-run sets its own
+# XLA_FLAGS in a subprocess).  Distribution tests that need a small mesh
+# re-exec themselves with xla_force_host_platform_device_count=8.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

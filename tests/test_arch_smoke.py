@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward/train step on CPU, asserting output shapes
+and no NaNs; plus prefill + one decode step through the serve path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, get_config
+from repro.configs import ASSIGNED
+from repro.models.model import build_model
+from repro.train.step import build_train_step, make_train_state
+
+
+def _batch_for(cfg, b=2, s=16):
+    i32 = jnp.int32
+    if cfg.family == "vlm":
+        return {"inputs_embeds": jnp.zeros((b, s, cfg.d_model), jnp.bfloat16),
+                "position_ids": jnp.zeros((3, b, s), i32),
+                "labels": jnp.ones((b, s), i32)}
+    if cfg.family == "audio":
+        return {"frames": jnp.zeros((b, cfg.encoder_seq_len, cfg.d_model),
+                                    jnp.bfloat16),
+                "tokens": jnp.ones((b, s), i32),
+                "labels": jnp.ones((b, s), i32)}
+    return {"tokens": jnp.ones((b, s), i32), "labels": jnp.ones((b, s), i32)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_shapes_finite(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, aux = jax.jit(
+        lambda p, b: model.apply(p, b, training=True))(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    tc = TrainConfig(steps=10, global_batch=2, seq_len=16)
+    state = make_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, tc))
+    state, metrics = step(state, _batch_for(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.step) == 1
+    # params actually changed
+    before = model.init(jax.random.PRNGKey(0))
+    diffs = [float(jnp.abs(a.astype(jnp.float32) -
+                           b.astype(jnp.float32)).max())
+             for a, b in zip(jax.tree.leaves(before),
+                             jax.tree.leaves(state.params))]
+    assert max(diffs) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, MAX = 2, 8, 32
+    caches = model.init_caches(B, MAX)
+    batch = _batch_for(cfg, B, P)
+    batch.pop("labels")
+    logits, caches = jax.jit(model.prefill)(params, batch, caches)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B, 1), P, jnp.int32)
+    logits2, _ = jax.jit(model.decode_step)(params, tok, caches, pos)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_full_forward(arch):
+    """Teacher-forced decode over the cache must match the parallel
+    forward logits (cache-correctness invariant)."""
+    if arch == "qwen2-vl-2b":
+        pytest.skip("vlm decode consumes tokens; parallel fwd uses embeds")
+    cfg = get_config(arch).smoke()
+    if cfg.moe.enabled:
+        # capacity-based token dropping depends on the routing batch: a
+        # token routed within T=8 (full fwd) vs T=1 (decode) sees different
+        # capacity pressure.  Lift capacity so routing is drop-free and the
+        # invariant is exact.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 8
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            0.1 * rng.randn(B, cfg.encoder_seq_len, cfg.d_model),
+            jnp.bfloat16)
+    full_logits, _ = model.apply(params, batch, training=False)
+
+    caches = model.init_caches(B, S)
+    step_logits = []
+    # feed tokens one at a time through decode_step
+    if cfg.family == "audio":
+        pre = {"frames": batch["frames"], "tokens": toks[:, :1]}
+        lg, caches = model.prefill(params, pre, caches)
+        step_logits.append(lg[:, 0])
+        start = 1
+    else:
+        lg, caches = model.prefill(params, {"tokens": toks[:, :1]}, caches)
+        step_logits.append(lg[:, 0])
+        start = 1
+    for t in range(start, S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches, pos)
+        step_logits.append(lg[:, 0])
+    step_logits = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32),
+        np.asarray(full_logits, np.float32), rtol=0.15, atol=0.15)

@@ -1,0 +1,75 @@
+"""Assigned-architecture configs must match the assignment sheet exactly
+(layer counts, widths, heads, ffn, vocab, family markers)."""
+import pytest
+
+from repro.config import LM_SHAPES, applicable_shapes, get_config
+
+SPEC = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_config_matches_assignment(arch):
+    L, d, h, kv, ff, v = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= v
+
+
+def test_moe_markers():
+    jamba = get_config("jamba-v0.1-52b")
+    assert jamba.moe.num_experts == 16 and jamba.moe.top_k == 2
+    assert jamba.layer_kinds().count("attn") == 4  # 1:7 interleave
+    ll4 = get_config("llama4-maverick-400b-a17b")
+    assert ll4.moe.num_experts == 128 and ll4.moe.top_k == 1
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert phi.moe.num_experts == 16 and phi.moe.top_k == 2
+
+
+def test_shape_cells():
+    assert LM_SHAPES["train_4k"].seq_len == 4096
+    assert LM_SHAPES["train_4k"].global_batch == 256
+    assert LM_SHAPES["prefill_32k"].global_batch == 32
+    assert LM_SHAPES["decode_32k"].global_batch == 128
+    assert LM_SHAPES["long_500k"].seq_len == 524288
+    # long_500k only for sub-quadratic archs
+    for arch in SPEC:
+        names = [s.name for s in applicable_shapes(get_config(arch))]
+        if arch in ("jamba-v0.1-52b", "rwkv6-7b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_qkv_bias_and_rope_markers():
+    assert get_config("qwen2-1.5b").qkv_bias
+    assert get_config("qwen2-vl-2b").rope == "mrope"
+    assert get_config("minicpm3-4b").attention == "mla"
+    assert get_config("whisper-tiny").is_encoder_decoder
+    assert get_config("rwkv6-7b").attention == "none"
+
+
+def test_paper_rank_defaults():
+    """Paper Table 5 r/d pairs for the LLaMA family; default r = d/4."""
+    for arch, (r, d) in {"llama-60m": (128, 512), "llama-130m": (256, 768),
+                         "llama-350m": (256, 1024), "llama-1b": (512, 2048),
+                         "llama-7b": (1024, 4096)}.items():
+        cfg = get_config(arch)
+        assert cfg.rank_attn == r and cfg.d_model == d
+    assert get_config("llama3.2-1b").rank_attn == 2048 // 4

@@ -1,0 +1,161 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp ref
+oracles, swept over shapes and dtypes (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cola_ae import kernel as cak, ops as cao, ref as car
+from repro.kernels.flash_attn import kernel as fak, ref as far
+from repro.kernels.mamba_scan import kernel as msk, ref as msr
+from repro.kernels.rwkv6_scan import kernel as rwk, ref as rwr
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- cola_ae
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(128, 256, 64, 256), (256, 512, 128, 512),
+                                   (192, 1024, 128, 384), (130, 256, 96, 512)])
+def test_cola_ae_pallas_matches_ref(shape, dtype, rng):
+    T, din, r, dout = shape
+    x = jnp.asarray(rng.randn(T, din), dtype)
+    a = jnp.asarray(0.05 * rng.randn(din, r), dtype)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), dtype)
+    for sigma in (True, False):
+        got = cak.cola_ae_fwd(x, a, b, sigma=sigma, interpret=True)
+        want = car.cola_ae(x, a, b, sigma=sigma)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_cola_ae_custom_vjp_matches_autodiff(rng):
+    x = jnp.asarray(rng.randn(64, 128), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(128, 32), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(32, 96), jnp.float32)
+    f_op = lambda *t: (cao.cola_ae(*t, impl="ref") ** 2).sum()
+    f_rf = lambda *t: (car.cola_ae(*t) ** 2).sum()
+    g_op = jax.grad(f_op, argnums=(0, 1, 2))(x, a, b)
+    g_rf = jax.grad(f_rf, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(g_op, g_rf):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_cola_ae_3d_and_bias(rng):
+    x = jnp.asarray(rng.randn(2, 32, 64), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(64, 16), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(16, 48), jnp.float32)
+    ba = jnp.asarray(0.01 * rng.randn(16), jnp.float32)
+    bb = jnp.asarray(0.01 * rng.randn(48), jnp.float32)
+    out = cao.cola_ae(x, a, b, bias_a=ba, bias_b=bb, impl="ref")
+    z = jnp.einsum("bsd,dr->bsr", x, a) + ba
+    z = z * jax.nn.sigmoid(z)
+    want = jnp.einsum("bsr,ro->bso", z, b) + bb
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- flash_attn
+def _dense_attn(q, k, v, qpos):
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    ok = jnp.arange(skv)[None, None, :] <= qpos[:, :, None]
+    s = jnp.where(ok[:, None, None, :, :], s, -1e30)
+    w = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(q.dtype), v)
+    return o.reshape(b, sq, h, hd)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dims", [(2, 128, 128, 4, 2, 32),
+                                  (1, 64, 320, 8, 4, 64),
+                                  (2, 96, 96, 4, 4, 16)])
+def test_flash_ref_and_pallas_match_dense(dims, dtype, rng):
+    b, sq, skv, h, kvh, hd = dims
+    q = jnp.asarray(rng.randn(b, sq, h, hd), dtype)
+    k = jnp.asarray(rng.randn(b, skv, kvh, hd), dtype)
+    v = jnp.asarray(rng.randn(b, skv, kvh, hd), dtype)
+    qpos = jnp.asarray(rng.randint(0, skv, (b, sq)), jnp.int32)
+    want = _dense_attn(q, k, v, qpos)
+    got_ref = far.flash_attention(q, k, v, True, qpos, (32, 64))
+    got_pal = fak.flash_attention(q, k, v, q_positions=qpos, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_pal, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_ref_grads_match_dense(rng):
+    b, sq, skv, h, kvh, hd = 1, 64, 64, 4, 2, 16
+    q = jnp.asarray(rng.randn(b, sq, h, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(b, skv, kvh, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(b, skv, kvh, hd), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+    f1 = lambda q, k, v: (far.flash_attention(q, k, v, True, None, (16, 32))
+                          ** 2).sum()
+    f2 = lambda q, k, v: (_dense_attn(q, k, v, qpos) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for u, v_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v_),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- rwkv6/mamba
+@pytest.mark.parametrize("dims", [(2, 64, 2, 16), (1, 96, 4, 32),
+                                  (2, 40, 2, 64)])
+def test_wkv6_pallas_matches_ref(dims, rng):
+    b, s, h, dh = dims
+    r = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    k = jnp.asarray(0.3 * rng.randn(b, s, h, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, dh), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.3, 0.99, (b, s, h, dh)), jnp.float32)
+    u = jnp.asarray(0.1 * rng.randn(h, dh), jnp.float32)
+    s0 = jnp.asarray(0.1 * rng.randn(b, h, dh, dh), jnp.float32)
+    y1, S1 = rwk.wkv6(r, k, v, w, u, s0, seq_chunk=32, interpret=True)
+    y2, S2 = rwr.wkv6(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_chunked_equals_unchunked(rng):
+    """State handoff across sequence chunks is exact."""
+    b, s, h, dh = 1, 64, 2, 16
+    args = [jnp.asarray(rng.randn(b, s, h, dh), jnp.float32) for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (b, s, h, dh)), jnp.float32)
+    u = jnp.asarray(0.1 * rng.randn(h, dh), jnp.float32)
+    y1, S1 = rwk.wkv6(args[0], args[1], args[2], w, u, seq_chunk=16,
+                      interpret=True)
+    y2, S2 = rwk.wkv6(args[0], args[1], args[2], w, u, seq_chunk=64,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("dims", [(2, 64, 128, 8), (1, 96, 256, 16)])
+def test_mamba_pallas_matches_ref(dims, rng):
+    b, s, di, N = dims
+    x = jnp.asarray(rng.randn(b, s, di), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (di, N)), jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, N), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, N), jnp.float32)
+    D = jnp.asarray(rng.randn(di), jnp.float32)
+    h0 = jnp.asarray(0.1 * rng.randn(b, di, N), jnp.float32)
+    y1, h1 = msk.selective_scan(x, dt, A, B, C, D, h0, seq_chunk=32,
+                                d_block=64, interpret=True)
+    y2, h2 = msr.selective_scan(x, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)

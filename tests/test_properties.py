@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flops
+from repro.config import get_config
+from repro.data.synthetic import MarkovZipf
+from repro.optim import adamw, compression, schedule
+from repro.config import TrainConfig
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(64, 4096), d=st.sampled_from([256, 512, 1024, 2048]),
+       ff_mult=st.floats(2.0, 4.0), r_frac=st.floats(0.05, 0.5))
+def test_cola_flops_below_full_rank_under_crossover(n, d, ff_mult, r_frac):
+    """Paper §3.3: CoLA < full-rank whenever r < crossover(d, d_ff)."""
+    dff = int(ff_mult * d)
+    r = max(1, int(r_frac * d))
+    dims = flops.LayerDims(n=n, d=d, d_ff=dff, r=r)
+    cross = (24 * d + 18 * dff) * d / (48 * d + 18 * (d + dff))
+    if r < cross:
+        assert flops.cola(dims) < flops.full_rank(dims)
+    # LoRA is always lower-bounded by CoLA at equal rank (paper App. B)
+    assert flops.lora(dims) > flops.cola(dims)
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 999), total=st.integers(10, 1000))
+def test_cosine_schedule_bounds(step, total):
+    lr = float(schedule.cosine_schedule(step, base_lr=1e-3,
+                                        total_steps=total))
+    assert 0.0 <= lr <= 1e-3 + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), step=st.integers(0, 1000))
+def test_synthetic_data_deterministic(seed, step):
+    src = MarkovZipf(512, seed=seed)
+    a = src.batch(step, 2, 32)
+    b = src.batch(step, 2, 32)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 512
+    # labels are next tokens
+    c = src.batch(step + 1, 2, 32)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_int8_quantization_error_bound(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(64, 32) * rng.uniform(0.1, 10), jnp.float32)
+    q, s = compression.quantize(x)
+    deq = compression.dequantize(q, s)
+    assert float(jnp.abs(deq - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_mean_preserving():
+    """With error feedback, the long-run sum of transmitted grads tracks
+    the true sum (compression bias is bounded, not accumulating)."""
+    rng = np.random.RandomState(0)
+    err = {"w": jnp.zeros((16, 16), jnp.float32)}
+    true_sum = np.zeros((16, 16), np.float32)
+    sent_sum = np.zeros((16, 16), np.float32)
+    for t in range(50):
+        g = {"w": jnp.asarray(rng.randn(16, 16) * 0.1, jnp.float32)}
+        sent, err = compression.compress_with_feedback(g, err)
+        true_sum += np.asarray(g["w"])
+        sent_sum += np.asarray(sent["w"])
+    resid = np.abs(true_sum - sent_sum).max()
+    assert resid < 0.05  # bounded by one quantization step, not O(T)
+
+
+def test_adamw_matches_numpy_oracle():
+    rng = np.random.RandomState(0)
+    p = {"w": jnp.asarray(rng.randn(8, 8), jnp.float32)}
+    tc = TrainConfig(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01)
+    state = adamw.adamw_init(p)
+    m = np.zeros((8, 8)); v = np.zeros((8, 8))
+    pw = np.asarray(p["w"]).copy()
+    lr = 1e-2
+    for t in range(1, 6):
+        g = rng.randn(8, 8).astype(np.float32)
+        p, state = adamw.adamw_update(tc, p, {"w": jnp.asarray(g)}, state,
+                                      jnp.float32(lr))
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        pw = pw - lr * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * pw)
+    np.testing.assert_allclose(np.asarray(p["w"]), pw, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(8, 64), e=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 20))
+def test_moe_mass_conservation(t, e, k, seed):
+    """Combine weights of kept tokens sum to ≤ 1 per token; no expert
+    receives more than capacity tokens."""
+    import dataclasses
+    from repro.models import moe
+    from repro.config import MoEConfig
+    cfg = get_config("phi3.5-moe-42b-a6.6b").smoke()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, num_experts=e, top_k=k))
+    model_d = cfg.d_model
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, t, model_d), jnp.float32)
+    defs = moe.moe_defs(cfg)
+    from repro.models.common import init_params
+    params = init_params(defs, jax.random.PRNGKey(seed))
+    y, aux = moe.moe_apply(cfg, params, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
+    assert float(aux["moe_aux"]) >= 0.0
+
+
+def test_effective_rank_invariants():
+    from repro.core.rank_analysis import effective_rank
+    rng = np.random.RandomState(0)
+    # rank-r matrix has effective rank exactly r at alpha→1
+    u = rng.randn(64, 4); v = rng.randn(4, 32)
+    assert effective_rank(jnp.asarray(u @ v), 0.999) <= 4
+    full = rng.randn(64, 32)
+    assert effective_rank(jnp.asarray(full), 0.95) > 10
