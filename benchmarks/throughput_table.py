@@ -1,7 +1,12 @@
 """Paper Table 9 / Fig. 8 analogue: measured train-step wall time for
 full-rank vs vanilla-GCP vs CoLA vs CoLA-M (CPU-relative; the paper's A100
-numbers translate through the FLOPs ratios validated in flops_table)."""
+numbers translate through the FLOPs ratios validated in flops_table), plus
+a fwd+bwd microbench of one CoLA-AE site: fused custom-VJP path (saves only
+the r-dim z_pre; Pallas kernels on TPU) vs plain autodiff of the unfused
+reference, with the modeled HBM traffic from kernels/cola_ae/kernel.py."""
 import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +32,47 @@ def _step_time(cfg, iters=4):
     return (time.perf_counter() - t0) / iters
 
 
+def _time_grad(fn, args, iters=8):
+    g = jax.jit(jax.grad(fn, argnums=(0, 1, 2)))
+    out = g(*args)  # compile + warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = g(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _cola_ae_bwd_bench(emit):
+    from repro.kernels.cola_ae import kernel as cak
+    from repro.kernels.cola_ae import ops as cao
+    from repro.kernels.cola_ae import ref as car
+
+    T, din, r, dout = 2048, 512, 128, 512
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(T, din), jnp.bfloat16)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.bfloat16)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.bfloat16)
+
+    # fused = the structured custom-VJP path: Pallas kernels on TPU, the
+    # same (x, z_pre)-residual math off-TPU (impl='auto').
+    fused = lambda *t: cao.cola_ae(*t, impl="auto").astype(jnp.float32).sum()
+    # unfused = plain autodiff of the oracle: full-rank z saved, r-dim dz
+    # round-trips HBM as separate XLA ops.
+    unfused = lambda *t: car.cola_ae(*t).astype(jnp.float32).sum()
+    t_f = _time_grad(fused, (x, a, b))
+    t_u = _time_grad(unfused, (x, a, b))
+    emit("cola_ae_bwd/fused_fwdbwd_s", t_f,
+         f"T={T} d_in={din} r={r} d_out={dout} bf16")
+    emit("cola_ae_bwd/unfused_fwdbwd_s", t_u, f"speedup={t_u / t_f:.2f}x")
+    hbm_f = cak.hbm_traffic(T, din, r, dout, fused=True)
+    hbm_u = cak.hbm_traffic(T, din, r, dout, fused=False)
+    emit("cola_ae_bwd/model_hbm_fused_MB", hbm_f / 2**20,
+         f"unfused={hbm_u / 2**20:.1f}MB ratio={hbm_u / hbm_f:.2f}x")
+
+
 def run(emit):
+    _cola_ae_bwd_bench(emit)
     variants = {
         "full_rank": dict(parameterization="dense", remat="none"),
         "vanilla_gcp": dict(parameterization="dense", remat="full"),

@@ -81,7 +81,10 @@ class ColaConfig:
     rank_attn: int = 0          # 0 => d_model // 4
     rank_mlp: int = 0           # 0 => d_model // 4
     sigma: str = "lowrank_only"  # COLA_SIGMA
-    # Use the fused Pallas auto-encoder kernel when on TPU.
+    # Use the fused Pallas auto-encoder path (forward AND backward: the
+    # custom VJP saves only the r-dim z_pre residual) when on TPU.
+    # Threaded models/linear.py → core/cola.py → kernels/cola_ae/ops.py;
+    # flip from the CLI with `launch.train --fused`.
     use_fused_kernel: bool = False
 
 

@@ -57,11 +57,23 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
 
     act_axes: logical axes of the low-rank activation (defaults to
     (batch, seq, rank)); drives TP sharding of the bottleneck.
+
+    use_fused: route through the fused Pallas fwd+bwd path
+    (kernels/cola_ae/ops.py).  Its custom VJP saves only (x, z_pre) — the
+    same r-dim tensor the ``cola_m`` remat policy keeps via the
+    ``cola_r`` name below — so kernel-level residency makes the policy a
+    no-op at AE sites while the rest of the block still benefits from it.
+    Note the fused path keeps z in VMEM and therefore skips the act_axes
+    sharding constraint below (for every σ mode): it targets single-device
+    / data-parallel meshes.  Under a mesh with a nontrivial 'model' axis
+    the gate below falls through to the unfused sharded path automatically,
+    so --fused composes safely with tensor parallelism.
     """
-    if use_fused and x.ndim == 3 and sigma:
-        # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM.
+    if use_fused and x.ndim == 3 and not _model_parallel():
+        # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM
+        # in forward AND backward; bias sites fall back inside cola_ae.
         from repro.kernels.cola_ae import ops as cola_ops
-        return cola_ops.cola_ae(x, params["a"], params["b"],
+        return cola_ops.cola_ae(x, params["a"], params["b"], sigma=sigma,
                                 bias_a=params.get("bias_a"),
                                 bias_b=params.get("bias_b"))
     a = params["a"].astype(x.dtype)
@@ -81,6 +93,14 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     if "bias_b" in params:
         h = h + params["bias_b"].astype(x.dtype)
     return h
+
+
+def _model_parallel() -> bool:
+    """True when a mesh with a >1 'model' axis is active — the fused kernel
+    cannot honor the bottleneck's TP sharding, so the gate falls back."""
+    from repro.distributed.sharding import current_env
+    env = current_env()
+    return env is not None and env.mesh.shape.get("model", 1) > 1
 
 
 def sigma_between(cfg: ModelConfig, originally_nonlinear: bool) -> bool:

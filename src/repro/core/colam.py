@@ -18,6 +18,15 @@ Policies:
     full    — vanilla GCP: save nothing inside the block (paper's baseline)
     cola_m  — save only low-rank activations (the paper's contribution)
     dots    — XLA heuristic (save matmul outputs); beyond-paper comparison
+
+Composition with the fused Pallas path (cola.use_fused_kernel): the fused
+AE's custom VJP already saves exactly (x, z_pre) — z_pre is the same
+r-dim, ``cola_r``-named tensor this policy keeps on the unfused path — so
+the kernel provides CoLA-M residency at AE sites *without* remat.  Remat
+policies cannot look inside a custom_vjp: under ``full`` the fused forward
+kernel is replayed once during backward (the CoLA-M compute trade, one
+kernel launch); under ``cola_m`` the policy still governs everything
+outside the AE sites (SDP, norms, element-wise products).
 """
 from __future__ import annotations
 

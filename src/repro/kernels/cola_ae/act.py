@@ -1,0 +1,64 @@
+"""σ / σ′ for the CoLA auto-encoder, shared by kernel, ref and VJP.
+
+Four modes (the kernel-level generalization of the paper's SiLU):
+
+* ``silu`` — ``z·sigmoid(z)`` (paper default),
+* ``gelu`` — exact erf form ``z/2·(1+erf(z/√2))`` (whisper MLP idiom),
+* ``relu`` — ``max(z, 0)`` written as ``where(z>0, z, 0)`` so autodiff of
+  the ref and the analytic derivative here agree exactly at the tie,
+* ``none`` — identity (``fullrank_only`` σ-placement / pure factorization).
+
+Everything is plain jnp/lax so the same functions run inside Pallas kernel
+bodies (VPU element-wise) and in the XLA reference path.  All math is done
+in float32 — callers pass the f32 pre-activation and cast afterwards.
+
+``canon`` accepts the legacy bool flag (True → silu, False → none).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SIGMA_MODES = ("silu", "gelu", "relu", "none")
+
+_INV_SQRT2 = float(1.0 / np.sqrt(2.0))
+_INV_SQRT2PI = float(1.0 / np.sqrt(2.0 * np.pi))
+
+
+def canon(sigma) -> str:
+    """Normalize a σ spec (bool or str) to one of SIGMA_MODES."""
+    if isinstance(sigma, bool):
+        return "silu" if sigma else "none"
+    if sigma not in SIGMA_MODES:
+        raise ValueError(f"unknown sigma mode '{sigma}'; known: {SIGMA_MODES}")
+    return sigma
+
+
+def apply_act(z, mode: str):
+    """σ(z); z is expected in float32."""
+    if mode == "silu":
+        return z * jax.nn.sigmoid(z)
+    if mode == "gelu":
+        return 0.5 * z * (1.0 + jax.lax.erf(z * _INV_SQRT2))
+    if mode == "relu":
+        return jnp.where(z > 0, z, jnp.zeros_like(z))
+    if mode == "none":
+        return z
+    raise ValueError(mode)
+
+
+def act_grad(z, mode: str):
+    """dσ/dz evaluated at z (float32)."""
+    if mode == "silu":
+        s = jax.nn.sigmoid(z)
+        return s * (1.0 + z * (1.0 - s))
+    if mode == "gelu":
+        cdf = 0.5 * (1.0 + jax.lax.erf(z * _INV_SQRT2))
+        pdf = _INV_SQRT2PI * jnp.exp(-0.5 * z * z)
+        return cdf + z * pdf
+    if mode == "relu":
+        return (z > 0).astype(z.dtype)
+    if mode == "none":
+        return jnp.ones_like(z)
+    raise ValueError(mode)

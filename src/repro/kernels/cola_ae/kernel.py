@@ -1,27 +1,59 @@
-"""Fused CoLA auto-encoder Pallas kernel: out = B · σ(A · x).
+"""Fused CoLA auto-encoder Pallas kernels: out = B · σ(A · x), fwd **and** bwd.
 
-The paper's core op (Eq. 3) as one TPU kernel.  The r-dimensional
-bottleneck ``z = σ(Ax)`` lives **entirely in VMEM scratch** — it never
-round-trips to HBM, so the AE pair's HBM traffic drops from
-``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight tiles
-(DESIGN.md §2: the paper's activation-residency idea pushed one level down
-the memory hierarchy).
+The paper's core op (Eq. 3) as TPU kernels.  The r-dimensional bottleneck
+``z = σ(Ax)`` lives **entirely in VMEM scratch** — it never round-trips to
+HBM at full width, so the AE pair's HBM traffic drops from
+``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight tiles and one
+r-dim residual (DESIGN.md §2: the paper's activation-residency idea pushed
+one level down the memory hierarchy).
 
+Forward
+-------
 Grid: (T/bt, d_out/bo), TPU iterates the last dim innermost, so for each
 token tile the z-scratch is computed once (at j == 0) and reused across all
-d_out tiles.  MXU alignment: bt/bo multiples of 128 (Mosaic pads r < 128 —
-whisper's r=96 — with the padding loss quantified in the roofline).
+d_out tiles.  The scratch now holds the f32 **pre-activation** ``z_pre``
+(σ is re-applied per output tile — (bt, r) VPU work, free next to the MXU
+GEMMs) and, when training, ``z_pre`` is emitted as a second output: the only
+extra HBM write the fused training path makes, and exactly the
+``cola_r``-named tensor the CoLA-M remat policy (core/colam.py) keeps.
+MXU alignment: bt/bo multiples of 128 (Mosaic pads r < 128 — whisper's
+r=96 — with the padding loss quantified in the roofline).
 
-VMEM budget at the largest assigned site (internlm2 down-proj,
-d_in=16384, r=1536): x-tile (128×16384 bf16) 4 MB + A (16384×1536 bf16
-blocked over k? no — A rides whole) … A whole = 50 MB ✗ ⇒ A is blocked over
-d_in with an inner fori_loop accumulating into the z scratch; per-step
-A-block (1024, r≤1536) ≤ 3 MB.  Everything fits < 12 MB.
+Backward (two kernels; per-tile traffic model)
+----------------------------------------------
+``dx`` kernel, grid (T/bt, d_in/bi), d_in innermost:
+    reads per token tile: g (bt·d_out) + z_pre (4·bt·r), plus B whole and
+    A blocked (bi, r) per step; writes dx (bt·bi) per step.
+    At j == 0 it fuses ``dz = (g·Bᵀ) ⊙ σ′(z_pre)`` into a (bt, r) f32 VMEM
+    scratch (the r-dim ``dz`` intermediate of the unfused path never touches
+    HBM); every j then computes ``dx = dz·Aᵀ`` against the j-th A block.
+
+``dA/dB`` kernel, grid (T/bt,), token tiles only:
+    reads per step: x (bt·d_in) + g (bt·d_out) + z_pre (4·bt·r) + B whole;
+    recomputes dz and σ(z_pre) in VMEM and accumulates
+    ``dA += xᵀ·dz``, ``dB += σ(z_pre)ᵀ·g`` into f32 output blocks with
+    constant index maps — revisited-output accumulation: the (d_in, r) and
+    (r, d_out) grad blocks stay resident in VMEM across all token tiles and
+    are written to HBM exactly once.
+
+VMEM budget (honest accounting).  These kernels stage A and B *whole* into
+VMEM via full-array BlockSpecs — the inner ``pl.ds`` loops slice the
+VMEM-resident block for MXU sizing, they do not block the HBM copy.  That
+bounds the sites the fused path can serve: ``weights_fit_vmem`` models the
+residency (weights + per-step token tiles + f32 scratch ≤ FWD_VMEM_BUDGET)
+and the ops layer falls back to the unfused XLA math when it fails — e.g.
+the internlm2 down-proj (d_in=16384, r=1536, d_out=6144: A alone is 50 MB
+bf16) is out of reach until the weights gain their own grid dimension
+(future work).  The dA/dB kernel additionally keeps both f32 grad blocks
+resident; ``dw_fits_vmem`` budgets grads + B + token tiles against
+DW_VMEM_BUDGET and the ops layer keeps the fused dx kernel while taking
+XLA GEMMs for dA/dB when it fails (the r-dim residency story is unchanged:
+every fallback consumes the same (x, z_pre) residuals).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,15 +61,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 import numpy as np
 
+from repro.kernels.cola_ae import act as _act
 
-def _silu(x):
-    return x * jax.nn.sigmoid(x)
+# Bytes the fwd/dx kernels may keep resident in VMEM (whole weights +
+# per-step tiles out of ~16 MB/core, leaving headroom for double buffering).
+FWD_VMEM_BUDGET = 12 * 1024 * 1024
+# Bytes the dA/dB kernel may keep resident (f32 grad blocks + B + tiles).
+DW_VMEM_BUDGET = 8 * 1024 * 1024
+# Worst-case token tile _pick_tiles can choose (used by the guards, which
+# run before tiles are picked).
+_MAX_BT = 512
 
 
-def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_ref, *, n_k: int,
-                bk: int, sigma: bool):
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_out_ref, z_ref, *, n_k: int,
+                bk: int, sigma: str, emit_z: bool):
     """x_ref: (bt, d_in); a_ref: (d_in, r); b_ref: (r, bo);
-    out_ref: (bt, bo); z_ref (scratch): (bt, r) f32."""
+    out_ref: (bt, bo); z_out_ref: (bt, r) f32 (None unless emit_z);
+    z_ref (scratch): (bt, r) f32 holding the *pre-activation*."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -49,52 +92,279 @@ def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_ref, *, n_k: int,
         acc = jax.lax.fori_loop(
             0, n_k, body,
             jnp.zeros((x_ref.shape[0], a_ref.shape[1]), jnp.float32))
-        if sigma:
-            acc = _silu(acc)
         z_ref[...] = acc
+        if emit_z:
+            z_out_ref[...] = acc
 
-    z = z_ref[...].astype(x_ref.dtype)
+    z = _act.apply_act(z_ref[...], sigma).astype(x_ref.dtype)
     out_ref[...] = jnp.dot(z, b_ref[...],
                            preferred_element_type=jnp.float32
                            ).astype(out_ref.dtype)
+
+
+def _pick_block(d: int, cap: int = 1024) -> int:
+    """Largest power-of-two block ≤ cap that divides d (≥1)."""
+    b = min(d, cap)
+    while d % b:
+        b //= 2
+    return max(b, 1)
 
 
 def _pick_tiles(T: int, d_in: int, r: int, d_out: int):
     bt = 128
     while bt * 2 <= min(T, 512) and T % (bt * 2) == 0:
         bt *= 2
-    bo = 128
+    # bo must divide d_out — a non-dividing tile would silently truncate
+    # the grid and leave output columns unwritten.
+    bo = _pick_block(d_out, 128)
     while bo * 2 <= min(d_out, 512) and d_out % (bo * 2) == 0:
         bo *= 2
-    bk = min(d_in, 1024)
-    while d_in % bk:
-        bk //= 2
-    return bt, bo, max(bk, 1)
+    return bt, bo, _pick_block(d_in, 1024)
+
+
+def _pad_tokens(arrs, bt: int):
+    """Zero-pad each (T, ·) array to a multiple of bt rows."""
+    T = arrs[0].shape[0]
+    pad = (-T) % bt
+    if pad:
+        arrs = [jnp.pad(v, ((0, pad), (0, 0))) for v in arrs]
+    return arrs, pad
 
 
 def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
-                sigma: bool = True, interpret: bool = False) -> jax.Array:
-    """x: (T, d_in) [callers flatten (b, s)]; a: (d_in, r); b: (r, d_out)."""
+                sigma=True, interpret: bool = False,
+                return_zpre: bool = False):
+    """x: (T, d_in) [callers flatten (b, s)]; a: (d_in, r); b: (r, d_out).
+
+    With ``return_zpre=True`` also returns the f32 pre-activation
+    ``z_pre = A·x`` (T, r) — the training residual; the A-GEMM runs once.
+    """
+    sigma = _act.canon(sigma)
     T, d_in = x.shape
     r, d_out = b.shape
     bt, bo, bk = _pick_tiles(T, d_in, r, d_out)
-    pad_t = (-T) % bt
-    if pad_t:
-        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+    (x,), pad_t = _pad_tokens([x], bt)
     Tp = x.shape[0]
     n_k = d_in // bk
     grid = (Tp // bt, d_out // bo)
-    out = pl.pallas_call(
-        functools.partial(_fwd_kernel, n_k=n_k, bk=bk, sigma=sigma),
+    kernel = functools.partial(_fwd_kernel, n_k=n_k, bk=bk, sigma=sigma,
+                               emit_z=return_zpre)
+    if not return_zpre:
+        kernel = functools.partial(_drop_zout, kernel)
+    out_shape = [jax.ShapeDtypeStruct((Tp, d_out), x.dtype)]
+    out_specs = [pl.BlockSpec((bt, bo), lambda i, j: (i, j))]
+    if return_zpre:
+        out_shape.append(jax.ShapeDtypeStruct((Tp, r), jnp.float32))
+        out_specs.append(pl.BlockSpec((bt, r), lambda i, j: (i, 0)))
+    res = pl.pallas_call(
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, d_in), lambda i, j: (i, 0)),
             pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
             pl.BlockSpec((r, bo), lambda i, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Tp, d_out), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
         interpret=interpret,
     )(x, a, b)
+    if return_zpre:
+        out, z_pre = res
+        return (out[:T], z_pre[:T]) if pad_t else (out, z_pre)
+    out = res[0]
     return out[:T] if pad_t else out
+
+
+def _drop_zout(kernel, x_ref, a_ref, b_ref, out_ref, z_ref, **kw):
+    kernel(x_ref, a_ref, b_ref, out_ref, None, z_ref)
+
+
+# --------------------------------------------------------------------------
+# backward: dx = (g·Bᵀ ⊙ σ′(z_pre)) · Aᵀ
+# --------------------------------------------------------------------------
+def _bwd_dx_kernel(g_ref, zp_ref, a_ref, b_ref, out_ref, dz_ref, *,
+                   n_o: int, bko: int, sigma: str):
+    """g_ref: (bt, d_out); zp_ref: (bt, r) f32; a_ref: (bi, r);
+    b_ref: (r, d_out); out_ref: (bt, bi); dz_ref (scratch): (bt, r) f32."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _compute_dz():
+        def body(k, acc):
+            gk = g_ref[:, pl.ds(k * bko, bko)]
+            bk_ = b_ref[:, pl.ds(k * bko, bko)]
+            # (bt, bko) · (r, bko)ᵀ — contract over d_out without transpose
+            return acc + jax.lax.dot_general(
+                gk, bk_, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        dzl = jax.lax.fori_loop(
+            0, n_o, body,
+            jnp.zeros((g_ref.shape[0], b_ref.shape[0]), jnp.float32))
+        dz_ref[...] = dzl * _act.act_grad(zp_ref[...], sigma)
+
+    dz = dz_ref[...].astype(g_ref.dtype)
+    # (bt, r) · (bi, r)ᵀ — contract over r
+    out_ref[...] = jax.lax.dot_general(
+        dz, a_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def cola_ae_bwd_dx(g: jax.Array, z_pre: jax.Array, a: jax.Array,
+                   b: jax.Array, *, sigma=True,
+                   interpret: bool = False) -> jax.Array:
+    """g: (T, d_out) cotangent; z_pre: (T, r) f32; returns dx (T, d_in)."""
+    sigma = _act.canon(sigma)
+    T, d_out = g.shape
+    d_in, r = a.shape
+    bt, bi, _ = _pick_tiles(T, d_out, r, d_in)
+    bko = _pick_block(d_out, 1024)
+    (g, z_pre), pad_t = _pad_tokens([g, z_pre], bt)
+    Tp = g.shape[0]
+    grid = (Tp // bt, d_in // bi)
+    dx = pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, n_o=d_out // bko, bko=bko,
+                          sigma=sigma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_out), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r, d_out), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_in), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
+        interpret=interpret,
+    )(g, z_pre, a, b)
+    return dx[:T] if pad_t else dx
+
+
+# --------------------------------------------------------------------------
+# backward: dA += xᵀ·dz, dB += σ(z_pre)ᵀ·g over token tiles
+# --------------------------------------------------------------------------
+def _bwd_dw_kernel(x_ref, g_ref, zp_ref, b_ref, da_ref, db_ref, *,
+                   n_o: int, bko: int, sigma: str):
+    """x_ref: (bt, d_in); g_ref: (bt, d_out); zp_ref: (bt, r) f32;
+    b_ref: (r, d_out); da_ref: (d_in, r) f32; db_ref: (r, d_out) f32.
+    Outputs have constant index maps: revisited every token tile,
+    accumulated in VMEM, flushed to HBM once."""
+    i = pl.program_id(0)
+    zp = zp_ref[...]
+
+    def body(k, acc):
+        gk = g_ref[:, pl.ds(k * bko, bko)]
+        bk_ = b_ref[:, pl.ds(k * bko, bko)]
+        return acc + jax.lax.dot_general(
+            gk, bk_, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    dzl = jax.lax.fori_loop(
+        0, n_o, body, jnp.zeros((g_ref.shape[0], b_ref.shape[0]),
+                                jnp.float32))
+    dt = x_ref.dtype
+    dz = (dzl * _act.act_grad(zp, sigma)).astype(dt)
+    z = _act.apply_act(zp, sigma).astype(dt)
+    # contract over the token tile dim (0, 0)
+    da = jax.lax.dot_general(
+        x_ref[...], dz, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    db = jax.lax.dot_general(
+        z, g_ref[...], dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = da
+        db_ref[...] = db
+
+    @pl.when(i > 0)
+    def _accum():
+        da_ref[...] += da
+        db_ref[...] += db
+
+
+def cola_ae_bwd_dw(x: jax.Array, g: jax.Array, z_pre: jax.Array,
+                   b: jax.Array, *, sigma=True, interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (dA (d_in, r), dB (r, d_out)), both f32 accumulators."""
+    sigma = _act.canon(sigma)
+    T, d_in = x.shape
+    r, d_out = b.shape
+    bt, _, _ = _pick_tiles(T, d_in, r, d_out)
+    bko = _pick_block(d_out, 1024)
+    (x, g, z_pre), pad_t = _pad_tokens([x, g, z_pre], bt)
+    Tp = x.shape[0]
+    da, db = pl.pallas_call(
+        functools.partial(_bwd_dw_kernel, n_o=d_out // bko, bko=bko,
+                          sigma=sigma),
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d_out), lambda i: (i, 0)),
+            pl.BlockSpec((bt, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, r), jnp.float32),
+            jax.ShapeDtypeStruct((r, d_out), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, g, z_pre, b)
+    return da, db
+
+
+def weights_fit_vmem(d_in: int, r: int, d_out: int, *,
+                     bytes_el: int = 2) -> bool:
+    """Whether the fwd/dx kernels' residency fits FWD_VMEM_BUDGET:
+    A and B whole, a worst-case token tile of x/g/out, and the f32
+    z scratch."""
+    resident = (bytes_el * (d_in * r + r * d_out)            # A + B whole
+                + _MAX_BT * bytes_el * (d_in + d_out)        # x/g + out tile
+                + _MAX_BT * 8 * r)                           # z_pre + dz f32
+    return resident <= FWD_VMEM_BUDGET
+
+
+def dw_fits_vmem(d_in: int, r: int, d_out: int, *,
+                 bytes_el: int = 2) -> bool:
+    """Whether the dA/dB kernel's residency fits DW_VMEM_BUDGET: both f32
+    grad blocks, B whole, and a worst-case token tile of x/g/z_pre."""
+    resident = (4 * (d_in + d_out) * r                       # dA + dB f32
+                + bytes_el * r * d_out                       # B whole
+                + _MAX_BT * (bytes_el * (d_in + d_out) + 4 * r))
+    return resident <= DW_VMEM_BUDGET
+
+
+# --------------------------------------------------------------------------
+# HBM traffic model (benchmarks/throughput_table.py `cola_ae_bwd` row)
+# --------------------------------------------------------------------------
+def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
+                bytes_el: int = 2, fused: bool = True) -> int:
+    """Modeled fwd+bwd HBM bytes for one AE site over T tokens.
+
+    fused: one fwd kernel (z_pre is the only extra write, f32), one dx
+    kernel (dz stays in VMEM), one dA/dB kernel (grads written once).
+    unfused: every XLA GEMM and the σ/σ′ element-wise ops round-trip their
+    full operands, including the (T, r) dzl/dz intermediates.  Weight grads
+    are written in f32 in both cases.
+    """
+    w = d_in * r + r * d_out          # weight elements
+    zp32 = 4 * T * r                  # f32 z_pre residual
+    if fused:
+        fwd = bytes_el * (T * d_in + w + T * d_out) + zp32
+        bwd_dx = bytes_el * (T * d_out + w + T * d_in) + zp32
+        bwd_dw = bytes_el * (T * d_in + T * d_out + r * d_out) + zp32 + 4 * w
+        return fwd + bwd_dx + bwd_dw
+    e = bytes_el
+    fwd = (e * (T * d_in + d_in * r) + zp32          # x·A → z_pre
+           + 2 * zp32 + e * T * r                    # σ: read z_pre, write z
+           + e * (T * r + r * d_out + T * d_out))    # z·B → out
+    bwd = (e * (T * d_out + r * d_out) + e * T * r         # g·Bᵀ → dzl
+           + e * T * r + zp32 + e * T * r                  # dzl⊙σ′ → dz
+           + e * (T * r + d_in * r + T * d_in)             # dz·Aᵀ → dx
+           + e * (T * d_in + T * r) + 4 * d_in * r         # xᵀ·dz → dA
+           + e * (T * r + T * d_out) + 4 * r * d_out)      # σ(z)ᵀ·g → dB
+    return fwd + bwd

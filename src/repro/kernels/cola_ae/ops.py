@@ -1,11 +1,26 @@
 """jit'd wrapper for the fused CoLA auto-encoder with custom VJP.
 
-Forward: the Pallas kernel (or ref off-TPU).  Backward saves only
-(x, z_pre) where z_pre = A·x is r-dimensional — the CoLA-M residency
-recipe at kernel level; σ and both grad GEMMs are recomputed/evaluated
-from those:
+Forward: the Pallas kernel (or ref off-TPU).  The VJP saves only
+(x, z_pre) where z_pre = A·x is r-dimensional — the CoLA-M residency recipe
+at kernel level; σ and both grad GEMMs are evaluated from those:
 
-    dz = (g · Bᵀ) ⊙ σ'(z_pre);  dx = dz · Aᵀ;  dA = xᵀ·dz;  dB = σ(z)ᵀ·g
+    dz = (g · Bᵀ) ⊙ σ'(z_pre);  dx = dz · Aᵀ;  dA = xᵀ·dz;  dB = σ(z_pre)ᵀ·g
+
+On the Pallas path the forward kernel *emits* z_pre (its VMEM scratch) as a
+second output, so training issues exactly one A-GEMM — no recompute — and
+the backward runs as two fused kernels (kernel.cola_ae_bwd_dx /
+cola_ae_bwd_dw) in which the r-dim ``dz`` never round-trips HBM.  The
+unfused XLA math below (`_bwd_unfused`) is kept as the off-TPU/interpret
+reference and as the dA/dB fallback for sites whose f32 grad blocks exceed
+the VMEM budget (kernel.dw_fits_vmem).
+
+Composition with CoLA-M (core/colam.py): the unfused path tags its r-dim
+activation with ``checkpoint_name('cola_r')`` so the ``cola_m`` policy saves
+exactly that tensor.  The fused path achieves the same residency *without*
+the policy — its VJP residuals are already only (x, z_pre) — so wrapping a
+fused block in ``jax.checkpoint(save_only_these_names('cola_r'))`` simply
+replays the one fused forward kernel during backward (policies cannot see
+inside a custom_vjp); residency is minimal either way.
 """
 from __future__ import annotations
 
@@ -15,13 +30,35 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.cola_ae import act as _act
 from repro.kernels.cola_ae import ref as _ref
 
 
-def _fwd_compute(x2d, a, b, sigma, impl, interpret):
+def _canon_impl(impl: str) -> str:
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "pallas":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _resolve_impl(impl: str, a, b) -> str:
+    """Shape-aware dispatch: sites whose whole weights exceed the kernels'
+    VMEM residency (kernel.weights_fit_vmem) take the unfused path.  Pure
+    function of (impl, shapes) — forward and backward agree by construction.
+    """
+    impl = _canon_impl(impl)
+    if impl != "pallas":
+        return impl
+    from repro.kernels.cola_ae import kernel as _k
+    d_in, r = a.shape
+    d_out = b.shape[1]
+    bytes_el = jnp.dtype(a.dtype).itemsize
+    return ("pallas"
+            if _k.weights_fit_vmem(d_in, r, d_out, bytes_el=bytes_el)
+            else "ref")
+
+
+def _fwd_compute(x2d, a, b, sigma, impl, interpret):
+    if _resolve_impl(impl, a, b) == "pallas":
         from repro.kernels.cola_ae import kernel as _k
         return _k.cola_ae_fwd(x2d, a, b, sigma=sigma, interpret=interpret)
     return _ref.cola_ae(x2d, a, b, sigma=sigma)
@@ -32,53 +69,90 @@ def _cola_ae2d(x2d, a, b, sigma, impl, interpret):
     return _fwd_compute(x2d, a, b, sigma, impl, interpret)
 
 
-def _bwd_impl(sigma, impl, interpret, res, g):
-    x2d, z_pre, a, b = res
-    zp32 = z_pre.astype(jnp.float32)
-    if sigma:
-        sg = jax.nn.sigmoid(zp32)
-        z = (zp32 * sg).astype(x2d.dtype)
-        dsig = sg * (1 + zp32 * (1 - sg))
+def _fwd2(x2d, a, b, sigma, impl, interpret):
+    sigma = _act.canon(sigma)
+    if _resolve_impl(impl, a, b) == "pallas":
+        from repro.kernels.cola_ae import kernel as _k
+        # one kernel, one A-GEMM: z_pre comes out of the VMEM scratch
+        out, z_pre = _k.cola_ae_fwd(x2d, a, b, sigma=sigma,
+                                    interpret=interpret, return_zpre=True)
     else:
-        z = z_pre
-        dsig = jnp.ones_like(zp32)
+        z_pre = jnp.dot(x2d, a.astype(x2d.dtype)).astype(jnp.float32)
+        z = _act.apply_act(z_pre, sigma).astype(x2d.dtype)
+        out = jnp.dot(z, b.astype(x2d.dtype))
+    return out, (x2d, z_pre, a, b)
+
+
+def _dz_and_z(sigma, z_pre, g, b, dt):
+    """dz = (g·Bᵀ)⊙σ′(z_pre) and z = σ(z_pre), both in dt — the shared
+    r-dim backward math of the reference path and the dA/dB fallback."""
+    zp32 = z_pre.astype(jnp.float32)
+    dzl = jax.lax.dot_general(
+        g, b.astype(g.dtype), dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (T, r)
+    dz = (dzl * _act.act_grad(zp32, sigma)).astype(dt)
+    z = _act.apply_act(zp32, sigma).astype(dt)
+    return dz, z
+
+
+def _bwd_unfused(sigma, res, g):
+    """Reference backward: four XLA GEMMs from the (x, z_pre) residuals."""
+    x2d, z_pre, a, b = res
     g = g.astype(x2d.dtype)
-    dzl = jnp.dot(g, b.T.astype(g.dtype)).astype(jnp.float32)  # (T, r)
-    dz = (dzl * dsig).astype(x2d.dtype)
+    dz, z = _dz_and_z(sigma, z_pre, g, b, x2d.dtype)
     dx = jnp.dot(dz, a.T.astype(dz.dtype))
     da = jnp.dot(x2d.T, dz).astype(a.dtype)
     db = jnp.dot(z.T, g).astype(b.dtype)
     return dx, da, db
 
 
-def _fwd2(x2d, a, b, sigma, impl, interpret):
-    out = _fwd_compute(x2d, a, b, sigma, impl, interpret)
-    z_pre = jnp.dot(x2d, a.astype(x2d.dtype))
-    return out, (x2d, z_pre, a, b)
+def _bwd_impl(sigma, impl, interpret, res, g):
+    sigma = _act.canon(sigma)
+    x2d, z_pre, a, b = res
+    if _resolve_impl(impl, a, b) != "pallas":
+        return _bwd_unfused(sigma, res, g)
+    from repro.kernels.cola_ae import kernel as _k
+    g = g.astype(x2d.dtype)
+    dx = _k.cola_ae_bwd_dx(g, z_pre, a, b, sigma=sigma, interpret=interpret)
+    d_in, r = a.shape
+    d_out = b.shape[1]
+    if _k.dw_fits_vmem(d_in, r, d_out,
+                       bytes_el=jnp.dtype(a.dtype).itemsize):
+        da, db = _k.cola_ae_bwd_dw(x2d, g, z_pre, b, sigma=sigma,
+                                   interpret=interpret)
+    else:
+        # grad blocks exceed VMEM: same math from the same r-dim residuals
+        dz, z = _dz_and_z(sigma, z_pre, g, b, x2d.dtype)
+        da = jnp.dot(x2d.T, dz)
+        db = jnp.dot(z.T, g)
+    return dx.astype(x2d.dtype), da.astype(a.dtype), db.astype(b.dtype)
 
 
 _cola_ae2d.defvjp(_fwd2, _bwd_impl)
 
 
 def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
-            sigma: bool = True, bias_a: Optional[jax.Array] = None,
+            sigma=True, bias_a: Optional[jax.Array] = None,
             bias_b: Optional[jax.Array] = None, impl: str = "auto",
             interpret: bool = False) -> jax.Array:
-    """Fused auto-encoder over the last dim of x (any leading dims)."""
+    """Fused auto-encoder over the last dim of x (any leading dims).
+
+    sigma: bool (legacy; True → silu) or one of act.SIGMA_MODES.
+    """
+    mode = _act.canon(sigma)
     if bias_a is not None or bias_b is not None:
         # bias sites fall back to the unfused path (rare: qwen2 qkv)
         z = jnp.einsum("...d,dr->...r", x, a.astype(x.dtype))
         if bias_a is not None:
             z = z + bias_a.astype(x.dtype)
-        if sigma:
-            z32 = z.astype(jnp.float32)
-            z = (z32 * jax.nn.sigmoid(z32)).astype(x.dtype)
+        if mode != "none":
+            z = _act.apply_act(z.astype(jnp.float32), mode).astype(x.dtype)
         h = jnp.einsum("...r,ro->...o", z, b.astype(x.dtype))
         if bias_b is not None:
             h = h + bias_b.astype(x.dtype)
         return h
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), sigma,
+    out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), mode,
                      impl, interpret)
     return out.reshape(*lead, b.shape[-1])

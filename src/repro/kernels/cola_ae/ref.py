@@ -1,14 +1,22 @@
-"""Pure-jnp oracle for the fused CoLA auto-encoder."""
+"""Pure-jnp oracle for the fused CoLA auto-encoder.
+
+``sigma`` accepts the legacy bool (True → silu) or one of the four modes in
+:mod:`repro.kernels.cola_ae.act`.  ``jax.grad`` of this function is the
+gradient oracle the fused backward kernels are tested against.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.cola_ae import act as _act
+
 
 def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
-            sigma: bool = True) -> jax.Array:
+            sigma=True) -> jax.Array:
+    mode = _act.canon(sigma)
     z = jnp.dot(x, a.astype(x.dtype))
-    if sigma:
+    if mode != "none":
         z32 = z.astype(jnp.float32)
-        z = (z32 * jax.nn.sigmoid(z32)).astype(x.dtype)
+        z = _act.apply_act(z32, mode).astype(x.dtype)
     return jnp.dot(z, b.astype(x.dtype))

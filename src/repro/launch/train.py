@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--param", default=None,
                     help="dense|cola|lora|sltrain (default: config's)")
     ap.add_argument("--remat", default=None, help="none|full|cola_m|dots")
+    ap.add_argument("--fused", action="store_true",
+                    help="train through the fused Pallas CoLA-AE path "
+                         "(fwd+bwd kernels; TPU)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-friendly)")
     ap.add_argument("--optimizer", default="adamw")
@@ -48,6 +51,8 @@ def main() -> None:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
+    import dataclasses
+
     import jax  # after XLA_FLAGS
     from repro.config import TrainConfig, get_config
     from repro.distributed.sharding import mesh_env
@@ -61,6 +66,8 @@ def main() -> None:
         over["parameterization"] = args.param
     if args.remat:
         over["remat"] = args.remat
+    if args.fused:
+        over["cola"] = dataclasses.replace(cfg.cola, use_fused_kernel=True)
     if over:
         cfg = cfg.with_overrides(**over)
 

@@ -46,16 +46,18 @@ class ServeEngine:
         t_prefill = time.perf_counter() - t0
 
         tok = self._sample(logits[:, -1], temperature, rng, 0)
-        out = [np.asarray(tok)]
+        # Accumulate generated tokens on device: np.asarray(tok) inside the
+        # loop would force a host sync per step, serializing dispatch.
+        out = [tok]
         t1 = time.perf_counter()
         for i in range(max_new_tokens - 1):
             pos = jnp.full((b, 1), p + i, jnp.int32)
             logits, caches = self._decode(self.params, tok, caches, pos)
             tok = self._sample(logits[:, -1], temperature, rng, i + 1)
-            out.append(np.asarray(tok))
+            out.append(tok)
         jax.block_until_ready(tok)
         t_decode = time.perf_counter() - t1
-        tokens = np.concatenate(out, axis=1)
+        tokens = np.asarray(jnp.concatenate(out, axis=1))
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,

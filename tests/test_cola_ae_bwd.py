@@ -1,0 +1,176 @@
+"""Fused CoLA auto-encoder backward: interpret-mode gradient parity vs
+jax.grad of the jnp oracle (all four σ modes, bf16 + f32, non-multiple-of-
+tile T), residual residency (only (x, z_pre) saved — no full-rank tensor),
+and GEMM/kernel counts (exactly one A-GEMM in forward)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cola_ae import act as caa
+from repro.kernels.cola_ae import kernel as cak
+from repro.kernels.cola_ae import ops as cao
+from repro.kernels.cola_ae import ref as car
+
+
+def _rel(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    return np.abs(got - want).max() / (np.abs(want).max() + 1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sigma", list(caa.SIGMA_MODES))
+@pytest.mark.parametrize("shape", [(130, 256, 64, 384),   # T % bt != 0
+                                   (128, 128, 32, 256)])
+def test_fused_bwd_matches_ref_grads(shape, sigma, dtype, rng):
+    T, din, r, dout = shape
+    x = jnp.asarray(rng.randn(T, din), dtype)
+    a = jnp.asarray(0.05 * rng.randn(din, r), dtype)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), dtype)
+    f = lambda *t: (cao.cola_ae(*t, sigma=sigma, impl="pallas",
+                                interpret=True) ** 2).sum()
+    fr = lambda *t: (car.cola_ae(*t, sigma=sigma) ** 2).sum()
+    got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= tol, (sigma, dtype, u.shape, _rel(u, v))
+
+
+def test_non_128_multiple_dims_fully_covered(rng):
+    """d_in/d_out not multiples of 128 must shrink the tile, not silently
+    truncate the grid and leave output columns unwritten."""
+    T, din, r, dout = 70, 192, 32, 192
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    f = lambda *t: (cao.cola_ae(*t, impl="pallas", interpret=True) ** 2).sum()
+    fr = lambda *t: (car.cola_ae(*t) ** 2).sum()
+    got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5
+
+
+def test_fwd_kernel_emits_zpre(rng):
+    T, din, r, dout = 130, 256, 64, 384
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    out, z_pre = cak.cola_ae_fwd(x, a, b, sigma="silu", interpret=True,
+                                 return_zpre=True)
+    assert z_pre.shape == (T, r) and z_pre.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(z_pre), np.asarray(jnp.dot(x, a)),
+                               rtol=1e-5, atol=1e-5)
+    # plain fwd (inference) stays available and identical
+    out2 = cak.cola_ae_fwd(x, a, b, sigma="silu", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2))
+
+
+def test_fused_vjp_saves_only_lowrank_residuals(rng):
+    """The fused VJP saves (x, z_pre, a, b) — nothing (T, d_out)-shaped."""
+    T, din, r, dout = 64, 128, 32, 192
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    f = lambda x, a, b: cao.cola_ae(x, a, b, impl="pallas", interpret=True)
+    _, vjp_fn = jax.vjp(f, x, a, b)
+    shapes = sorted(tuple(l.shape) for l in jax.tree_util.tree_leaves(vjp_fn))
+    assert shapes == sorted([(T, din), (T, r), (din, r), (r, dout)])
+    assert (T, dout) not in shapes  # no full-rank activation residual
+
+
+def _count_prims(jaxpr, name, *, skip_inside=("pallas_call",)):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        if eqn.primitive.name in skip_inside:
+            continue
+        for v in eqn.params.values():
+            is_jx = lambda s: isinstance(
+                s, (jax.extend.core.Jaxpr, jax.extend.core.ClosedJaxpr))
+            for sub in jax.tree_util.tree_leaves(v, is_leaf=is_jx):
+                if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                    n += _count_prims(sub.jaxpr, name,
+                                      skip_inside=skip_inside)
+                elif isinstance(sub, jax.extend.core.Jaxpr):
+                    n += _count_prims(sub, name, skip_inside=skip_inside)
+    return n
+
+
+def _args(rng):
+    x = jnp.asarray(rng.randn(64, 128), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(128, 32), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(32, 192), jnp.float32)
+    return x, a, b
+
+
+def test_single_a_gemm_ref_path(rng):
+    """fwd 2 GEMMs (x·A, z·B) + bwd 4 — no z_pre recompute under grad."""
+    loss = lambda x, a, b: (cao.cola_ae(x, a, b, impl="ref") ** 2).sum()
+    jx = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(*_args(rng))
+    assert _count_prims(jx.jaxpr, "dot_general", skip_inside=()) == 6
+
+
+def test_fused_path_is_three_kernels(rng):
+    """grad(fused) = 1 fwd kernel + dx kernel + dA/dB kernel, 0 XLA GEMMs."""
+    loss = lambda x, a, b: (cao.cola_ae(x, a, b, impl="pallas",
+                                        interpret=True) ** 2).sum()
+    jx = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(*_args(rng))
+    assert _count_prims(jx.jaxpr, "pallas_call") == 3
+    assert _count_prims(jx.jaxpr, "dot_general") == 0
+
+
+def test_bwd_kernels_direct_parity(rng):
+    """Drive the two backward kernels directly against the unfused math."""
+    T, din, r, dout = 96, 128, 32, 256
+    dt = jnp.float32
+    x = jnp.asarray(rng.randn(T, din), dt)
+    a = jnp.asarray(0.05 * rng.randn(din, r), dt)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), dt)
+    g = jnp.asarray(rng.randn(T, dout), dt)
+    z_pre = jnp.dot(x, a).astype(jnp.float32)
+    for sigma in caa.SIGMA_MODES:
+        dsig = caa.act_grad(z_pre, sigma)
+        dz = (jnp.dot(g, b.T).astype(jnp.float32) * dsig).astype(dt)
+        dx = cak.cola_ae_bwd_dx(g, z_pre, a, b, sigma=sigma, interpret=True)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(jnp.dot(dz, a.T)),
+                                   rtol=1e-5, atol=1e-5)
+        da, db = cak.cola_ae_bwd_dw(x, g, z_pre, b, sigma=sigma,
+                                    interpret=True)
+        z = caa.apply_act(z_pre, sigma).astype(dt)
+        np.testing.assert_allclose(np.asarray(da), np.asarray(jnp.dot(x.T, dz)),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(jnp.dot(z.T, g)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dw_vmem_fallback_guard():
+    assert cak.dw_fits_vmem(128, 32, 256)
+    # internlm2 down-proj: f32 grad blocks are ~138 MB — must fall back
+    assert not cak.dw_fits_vmem(16384, 1536, 6144)
+    # grad blocks exactly at budget but tiles/B push residency over
+    assert not cak.dw_fits_vmem(8192, 128, 8192)
+
+
+def test_weights_vmem_guard_routes_to_unfused(rng):
+    assert cak.weights_fit_vmem(256, 64, 384)
+    # internlm2 down-proj: A alone is 50 MB bf16 — whole-weight staging
+    # cannot fit; ops must dispatch the unfused path for fwd AND bwd
+    assert not cak.weights_fit_vmem(16384, 1536, 6144)
+    from repro.kernels.cola_ae.ops import _resolve_impl
+    big_a = jax.ShapeDtypeStruct((16384, 1536), jnp.bfloat16)
+    big_b = jax.ShapeDtypeStruct((1536, 6144), jnp.bfloat16)
+    assert _resolve_impl("pallas", big_a, big_b) == "ref"
+    small_a = jax.ShapeDtypeStruct((256, 64), jnp.bfloat16)
+    small_b = jax.ShapeDtypeStruct((64, 384), jnp.bfloat16)
+    assert _resolve_impl("pallas", small_a, small_b) == "pallas"
+
+
+def test_traffic_model_fused_below_unfused():
+    for shape in [(4096, 1024, 256, 1024), (2048, 2048, 512, 5632)]:
+        f = cak.hbm_traffic(*shape, fused=True)
+        u = cak.hbm_traffic(*shape, fused=False)
+        assert f < u, shape
