@@ -71,8 +71,61 @@ def _cola_ae_bwd_bench(emit):
          f"unfused={hbm_u / 2**20:.1f}MB ratio={hbm_u / hbm_f:.2f}x")
 
 
+def _cola_ae_sharded_bench(emit):
+    """Sharded-fused (shard_map custom VJP) vs the old gated fallback
+    (unfused XLA math, what --fused used to silently run under a 'model'
+    mesh) for one AE site per sharding profile, plus the modeled collective
+    wire bytes from distributed/sharding.py.
+
+    Uses whatever host devices exist: on a multi-device run (e.g. under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8) the 'model' axis is
+    real; single-device still exercises the shard_map path with size-1
+    psum groups.
+    """
+    from repro.distributed import sharding as sh
+    from repro.kernels.cola_ae import ops as cao
+    from repro.models.common import silu
+
+    n = jax.device_count()
+    model = max(m for m in (1, 2, 4, 8) if m <= n and n % m == 0)
+    mesh = jax.make_mesh((n // model, model), ("data", "model"))
+    b, s, din, r, dout = 8, 256, 512, 128, 1024
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(b, s, din), jnp.bfloat16)
+    wa = jnp.asarray(0.05 * rng.randn(din, r), jnp.bfloat16)
+    wb = jnp.asarray(0.05 * rng.randn(r, dout), jnp.bfloat16)
+
+    fused = lambda *t: cao.cola_ae_sharded(
+        *t, sigma="silu", in_ax="embed",
+        out_ax="ffw").astype(jnp.float32).sum()
+
+    def unfused(x, wa, wb):
+        # what the old gate actually ran: cola_apply's unfused einsums with
+        # the act_rank constraint on the bottleneck, GSPMD-sharded
+        x = sh.shard(x, "batch", "seq", "embed")
+        z = jnp.einsum("...d,dr->...r", x, wa.astype(x.dtype))
+        z = sh.shard(z, "batch", "seq", "act_rank")
+        z = silu(z)
+        h = jnp.einsum("...r,ro->...o", z, wb.astype(x.dtype))
+        return h.astype(jnp.float32).sum()
+    for profile in ("baseline", "megatron", "fsdp"):
+        with sh.mesh_env(mesh, profile) as env:
+            part = sh.cola_ae_partition(env, x.shape, wa.shape, wb.shape,
+                                        "embed", "ffw")
+            t_f = _time_grad(fused, (x, wa, wb))
+            t_u = _time_grad(unfused, (x, wa, wb))
+            cb = sh.cola_ae_collective_bytes(env, part, b * s, din, r, dout)
+        emit(f"cola_ae_sharded/{profile}_fused_fwdbwd_s", t_f,
+             f"model={model} T={b * s} d_in={din} r={r} d_out={dout}")
+        emit(f"cola_ae_sharded/{profile}_gated_fallback_s", t_u,
+             f"fused_speedup={t_u / t_f:.2f}x")
+        emit(f"cola_ae_sharded/{profile}_model_collective_MB", cb / 2**20,
+             f"ring-all-reduce wire bytes, 'model'={model}")
+
+
 def run(emit):
     _cola_ae_bwd_bench(emit)
+    _cola_ae_sharded_bench(emit)
     variants = {
         "full_rank": dict(parameterization="dense", remat="none"),
         "vanilla_gcp": dict(parameterization="dense", remat="full"),

@@ -52,7 +52,10 @@ def cola_defs(d_in: int, d_out: int, rank: int,
 
 def cola_apply(params, x: jax.Array, *, sigma: bool = True,
                act_axes: Optional[Tuple[Optional[str], ...]] = None,
-               use_fused: bool = False) -> jax.Array:
+               use_fused: bool = False,
+               weight_axes: Optional[Tuple[Optional[str],
+                                           Optional[str]]] = None
+               ) -> jax.Array:
     """Apply ``B·σ(A·x)`` over the last dim of x.
 
     act_axes: logical axes of the low-rank activation (defaults to
@@ -63,19 +66,32 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     same r-dim tensor the ``cola_m`` remat policy keeps via the
     ``cola_r`` name below — so kernel-level residency makes the policy a
     no-op at AE sites while the rest of the block still benefits from it.
-    Note the fused path keeps z in VMEM and therefore skips the act_axes
-    sharding constraint below (for every σ mode): it targets single-device
-    / data-parallel meshes.  Under a mesh with a nontrivial 'model' axis
-    the gate below falls through to the unfused sharded path automatically,
-    so --fused composes safely with tensor parallelism.
+
+    weight_axes: the site's (in_ax, out_ax) logical weight axes, as passed
+    to ``cola_defs``.  Under a mesh with a nontrivial 'model' axis the
+    fused path runs the kernels per-shard inside shard_map with explicit
+    collectives (ops.cola_ae_sharded) — the partitioning is resolved from
+    these names, so --fused now *composes* with tensor parallelism instead
+    of falling back.  Only sites that don't thread their axes (or carry
+    biases) still take the unfused sharded path below.
     """
-    if use_fused and x.ndim == 3 and not _model_parallel():
-        # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM
-        # in forward AND backward; bias sites fall back inside cola_ae.
+    if use_fused and x.ndim == 3:
         from repro.kernels.cola_ae import ops as cola_ops
-        return cola_ops.cola_ae(x, params["a"], params["b"], sigma=sigma,
-                                bias_a=params.get("bias_a"),
-                                bias_b=params.get("bias_b"))
+        env = _model_parallel_env()
+        if env is None:
+            # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM
+            # in forward AND backward; bias sites fall back inside cola_ae.
+            cola_ops.DISPATCH["apply_fused_local"] += 1
+            return cola_ops.cola_ae(x, params["a"], params["b"], sigma=sigma,
+                                    bias_a=params.get("bias_a"),
+                                    bias_b=params.get("bias_b"))
+        if (weight_axes is not None and "bias_a" not in params
+                and "bias_b" not in params):
+            cola_ops.DISPATCH["apply_fused_sharded"] += 1
+            return cola_ops.cola_ae_sharded(
+                x, params["a"], params["b"], sigma=sigma, env=env,
+                in_ax=weight_axes[0], out_ax=weight_axes[1])
+        cola_ops.DISPATCH["apply_fused_fallback"] += 1
     a = params["a"].astype(x.dtype)
     b = params["b"].astype(x.dtype)
     z = jnp.einsum("...d,dr->...r", x, a)
@@ -95,12 +111,14 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     return h
 
 
-def _model_parallel() -> bool:
-    """True when a mesh with a >1 'model' axis is active — the fused kernel
-    cannot honor the bottleneck's TP sharding, so the gate falls back."""
+def _model_parallel_env():
+    """The active MeshEnv when it has a >1 'model' axis, else None — the
+    dispatch pivot between the local fused path and the shard_map'd one."""
     from repro.distributed.sharding import current_env
     env = current_env()
-    return env is not None and env.mesh.shape.get("model", 1) > 1
+    if env is not None and env.mesh.shape.get("model", 1) > 1:
+        return env
+    return None
 
 
 def sigma_between(cfg: ModelConfig, originally_nonlinear: bool) -> bool:

@@ -27,6 +27,17 @@ policies cannot look inside a custom_vjp: under ``full`` the fused forward
 kernel is replayed once during backward (the CoLA-M compute trade, one
 kernel launch); under ``cola_m`` the policy still governs everything
 outside the AE sites (SDP, norms, element-wise products).
+
+Composition with tensor parallelism: ``--fused`` now also composes with
+meshes carrying a 'model' axis — the kernels run per-shard inside
+shard_map with a collective-aware custom VJP (kernels/cola_ae/ops.py), and
+the z_pre residual is itself sharded (rank dim over 'model' under the
+``baseline`` profile), so the CoLA-M residency recipe survives sharding at
+1/|model| footprint per device.  Collective counts per AE site, fwd+bwd:
+``baseline`` 2 full-width psums (out, dx); ``megatron`` 1 r-dim f32 psum
+(z_pre at row-parallel o/down in fwd — the 2-per-block exits — or g·Bᵀ at
+column-parallel qkv/gate/up in bwd); ``fsdp`` 0.  All three are verified
+against the unfused sharded reference in tests/test_sharded_fused.py.
 """
 from __future__ import annotations
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 import contextlib
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -284,3 +284,120 @@ def param_sharding_tree(axes_tree, shape_tree, env: Optional[MeshEnv] = None):
             x is None or isinstance(x, str) for x in a))
     return jax.tree.map(lambda s: NamedSharding(env.mesh, s), specs,
                         is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
+# --------------------------------------------------------------------------
+# Fused CoLA-AE partitioning (kernels/cola_ae/ops.cola_ae_sharded)
+# --------------------------------------------------------------------------
+def _entry_axes(entry: Optional[Any]) -> Tuple[str, ...]:
+    """PartitionSpec entry -> tuple of mesh axis names."""
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+class ColaAePartition(NamedTuple):
+    """shard_map partitioning of one AE site ``out = B·σ(A·x)``.
+
+    Specs (global-array views; shard_map reshards inputs to match, which is
+    exactly the GSPMD layout the unfused path would use — e.g. FSDP-stored
+    weight dims are all-gathered on entry):
+
+    * ``x_spec``    — (b, s, d_in): batch over the data axes, d_in over the
+                      weight's in-axis resolution (row-parallel sites),
+    * ``a_spec``    — (d_in, r), ``b_spec`` — (r, d_out),
+    * ``out_spec``  — (b, s, d_out),
+    * ``zpre_spec`` — (b·s, r): the f32 pre-activation residual the fused
+                      VJP saves; its rank dim carries the same mesh axes as
+                      the weights' rank dim, so the saved tensor is 1/|model|
+                      per device under the ``baseline`` profile.
+
+    Axis groups (mesh axes to ``psum`` over; empty tuple = no collective):
+
+    * ``in_axes``   — shard d_in (megatron row-parallel: o-proj/down-proj);
+                      psum of z_pre between the A-GEMM and σ,
+    * ``rank_axes`` — shard r (baseline profile); psum of the B-GEMM output
+                      in fwd and of ``dz·Aᵀ`` in bwd,
+    * ``out_axes``  — shard d_out (megatron column-parallel: qkv/gate/up);
+                      psum of the r-dim ``g·Bᵀ`` partial in bwd,
+    * ``batch_axes``— shard tokens; psum of dA/dB (the per-site slice of the
+                      data-parallel gradient all-reduce).
+    """
+    x_spec: PartitionSpec
+    a_spec: PartitionSpec
+    b_spec: PartitionSpec
+    out_spec: PartitionSpec
+    zpre_spec: PartitionSpec
+    in_axes: Tuple[str, ...]
+    rank_axes: Tuple[str, ...]
+    out_axes: Tuple[str, ...]
+    batch_axes: Tuple[str, ...]
+
+
+def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
+                      a_shape: Sequence[int], b_shape: Sequence[int],
+                      in_ax: Optional[str], out_ax: Optional[str]
+                      ) -> ColaAePartition:
+    """Jointly resolve the sharding of one AE site under ``env``.
+
+    Resolution order makes the factor pair consistent by construction: the
+    rank dim resolves first (A's col dim and B's row dim must agree — under
+    ``baseline`` rank wins the 'model' axis even at sites whose in-axis is
+    itself 'rank', e.g. MLA's uq), then d_in avoiding rank's axes, then
+    d_out avoiding rank's axes, then batch avoiding all three.  Every entry
+    inherits `_resolve_dim`'s divisibility fallback, so non-dividing dims
+    degrade to replicated instead of producing an invalid shard_map spec.
+    """
+    d_in, r = a_shape
+    d_out = b_shape[1]
+    used: set = set()
+    erank = _resolve_dim(env, "rank", r, used)
+    ein = (_resolve_dim(env, in_ax, d_in, used)
+           if in_ax is not None else None)
+    used_b = set(_entry_axes(erank))
+    eout = (_resolve_dim(env, out_ax, d_out, used_b)
+            if out_ax is not None else None)
+    used_x = (set(_entry_axes(erank)) | set(_entry_axes(ein))
+              | set(_entry_axes(eout)))
+    ebatch = _resolve_dim(env, "batch", x_shape[0], used_x)
+    return ColaAePartition(
+        x_spec=PartitionSpec(ebatch, None, ein),
+        a_spec=PartitionSpec(ein, erank),
+        b_spec=PartitionSpec(erank, eout),
+        out_spec=PartitionSpec(ebatch, None, eout),
+        zpre_spec=PartitionSpec(ebatch, erank),
+        in_axes=_entry_axes(ein),
+        rank_axes=_entry_axes(erank),
+        out_axes=_entry_axes(eout),
+        batch_axes=_entry_axes(ebatch),
+    )
+
+
+def cola_ae_collective_bytes(env: MeshEnv, part: ColaAePartition, T: int,
+                             d_in: int, r: int, d_out: int, *,
+                             bytes_el: int = 2) -> int:
+    """Modeled all-reduce wire bytes for one fwd+bwd of a sharded fused AE
+    site (ring all-reduce: ``2(n-1)/n ×`` payload per psum).
+
+    Per profile and site this reproduces the design counts: ``baseline``
+    pays a (T, d_out) psum in fwd and a (T, d_in) psum in bwd at *every*
+    site (7×2/block — the naive port); ``megatron`` pays one f32 (T, r)
+    psum per site — fwd at row-parallel sites (o/down: the 2-all-reduce/
+    block exits), bwd at column-parallel sites (qkv/gate/up) — r-dim, so
+    ~d/r cheaper than baseline's; ``fsdp`` pays none.  The dA/dB psums over
+    the batch axes are excluded: they are the per-site slice of the data-
+    parallel gradient all-reduce every strategy pays identically.  Token
+    psum payloads are the per-device **local** token count (T divided by
+    the batch-axes product): inside shard_map each device all-reduces only
+    its own token shard.
+    """
+    def ring(axes: Tuple[str, ...], payload: int) -> int:
+        n = int(np.prod([env.axis_size(a) for a in axes])) if axes else 1
+        return 0 if n <= 1 else int(2 * (n - 1) / n * payload)
+
+    t_loc = T // (int(np.prod([env.axis_size(a) for a in part.batch_axes]))
+                  if part.batch_axes else 1)
+    return (ring(part.in_axes, 4 * t_loc * r)         # fwd psum of z_pre
+            + ring(part.rank_axes, bytes_el * t_loc * d_out)  # fwd: out
+            + ring(part.rank_axes, bytes_el * t_loc * d_in)   # bwd: dx
+            + ring(part.out_axes, 4 * t_loc * r))     # bwd psum of g·Bᵀ

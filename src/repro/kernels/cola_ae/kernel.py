@@ -49,6 +49,16 @@ resident; ``dw_fits_vmem`` budgets grads + B + token tiles against
 DW_VMEM_BUDGET and the ops layer keeps the fused dx kernel while taking
 XLA GEMMs for dA/dB when it fails (the r-dim residency story is unchanged:
 every fallback consumes the same (x, z_pre) residuals).
+
+Tensor parallelism changes the budget arithmetic in the kernels' favor:
+``ops.cola_ae_sharded`` resolves impl *inside* the shard_map body, so both
+guards receive the per-device **local** shapes.  A site whose whole weights
+overflow the budget can take the fused path once its rank dim (``baseline``
+profile) or output dim (``megatron``) is sharded — e.g. a (2048, 2048,
+2048) bf16 site is 16.8 MB of whole weights unsharded but ~1 MB of A+B per
+device on a 16-way rank shard.  The internlm2 down-proj still needs the
+future weight-grid dimension: its d_in/d_out token tiles dominate and those
+dims are not sharded by any current profile.
 """
 from __future__ import annotations
 

@@ -21,17 +21,79 @@ the policy — its VJP residuals are already only (x, z_pre) — so wrapping a
 fused block in ``jax.checkpoint(save_only_these_names('cola_r'))`` simply
 replays the one fused forward kernel during backward (policies cannot see
 inside a custom_vjp); residency is minimal either way.
+
+Tensor parallelism (``cola_ae_sharded``): under a mesh with a nontrivial
+'model' axis the fused path no longer falls back — the same kernels run
+per-shard inside ``shard_map`` with a collective-aware custom VJP.  The
+partitioning is resolved per sharding profile by
+``distributed.sharding.cola_ae_partition``:
+
+* ``baseline``  — the rank dim of A/B and of the z_pre residual shard over
+                  'model'; one psum at the B-GEMM output in fwd and one at
+                  ``dz·Aᵀ`` in bwd,
+* ``megatron``  — rank replicated; column-parallel sites (qkv/gate/up)
+                  shard B's d_out with a bwd psum of the r-dim ``g·Bᵀ``
+                  partial, row-parallel sites (o/down) shard A's d_in with
+                  a fwd psum of z_pre between the A-GEMM and σ (the block-
+                  exit all-reduce, matching sharding.py's 2/block design) —
+                  those fwd A-GEMMs take XLA math because a collective
+                  cannot run between the fused kernel's two GEMMs,
+* ``fsdp``      — trivially local: kernels per batch shard, no collective.
+
+Because impl resolution happens *inside* the shard_map body, the VMEM
+guards (kernel.weights_fit_vmem / dw_fits_vmem) see the per-shard local
+shapes: a rank- or output-sharded site can take the fused path even when
+the unsharded weights would not fit.
 """
 from __future__ import annotations
 
+import collections
+import contextlib
 import functools
-from typing import Optional
+import threading
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.cola_ae import act as _act
 from repro.kernels.cola_ae import ref as _ref
+
+# --------------------------------------------------------------------------
+# Dispatch accounting + test override
+# --------------------------------------------------------------------------
+# Trace-time counters: which path each AE site actually took.  Incremented
+# while tracing (once per eager call; once per compile under jit), so tests
+# can assert "the fused sharded path dispatched, no silent fallback".
+DISPATCH = collections.Counter()
+
+
+def reset_dispatch() -> None:
+    DISPATCH.clear()
+
+
+_force = threading.local()
+
+
+@contextlib.contextmanager
+def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None):
+    """Override impl/interpret for every cola_ae entry point in scope.
+
+    Lets CPU test harnesses drive the real Pallas kernels in interpret mode
+    through code paths (model apply, shard_map bodies) that do not expose
+    the ``impl`` argument.
+    """
+    prev = getattr(_force, "v", (None, None))
+    _force.v = (impl, interpret)
+    try:
+        yield
+    finally:
+        _force.v = prev
+
+
+def _apply_force(impl: str, interpret: bool) -> Tuple[str, bool]:
+    fi, fint = getattr(_force, "v", (None, None))
+    return (fi or impl), (interpret if fint is None else fint)
 
 
 def _canon_impl(impl: str) -> str:
@@ -69,17 +131,26 @@ def _cola_ae2d(x2d, a, b, sigma, impl, interpret):
     return _fwd_compute(x2d, a, b, sigma, impl, interpret)
 
 
-def _fwd2(x2d, a, b, sigma, impl, interpret):
-    sigma = _act.canon(sigma)
+def _fwd_pair(x2d, a, b, sigma, impl, interpret, tag="fwd"):
+    """(out, z_pre) with one A-GEMM — the shared training forward of the
+    local custom VJP and of the shard_map body (where a/b/x2d are the
+    per-device shards, so _resolve_impl budgets against local shapes)."""
     if _resolve_impl(impl, a, b) == "pallas":
+        DISPATCH[f"{tag}_pallas"] += 1
         from repro.kernels.cola_ae import kernel as _k
         # one kernel, one A-GEMM: z_pre comes out of the VMEM scratch
-        out, z_pre = _k.cola_ae_fwd(x2d, a, b, sigma=sigma,
-                                    interpret=interpret, return_zpre=True)
-    else:
-        z_pre = jnp.dot(x2d, a.astype(x2d.dtype)).astype(jnp.float32)
-        z = _act.apply_act(z_pre, sigma).astype(x2d.dtype)
-        out = jnp.dot(z, b.astype(x2d.dtype))
+        return _k.cola_ae_fwd(x2d, a, b, sigma=sigma,
+                              interpret=interpret, return_zpre=True)
+    DISPATCH[f"{tag}_ref"] += 1
+    z_pre = jnp.dot(x2d, a.astype(x2d.dtype)).astype(jnp.float32)
+    z = _act.apply_act(z_pre, sigma).astype(x2d.dtype)
+    out = jnp.dot(z, b.astype(x2d.dtype))
+    return out, z_pre
+
+
+def _fwd2(x2d, a, b, sigma, impl, interpret):
+    sigma = _act.canon(sigma)
+    out, z_pre = _fwd_pair(x2d, a, b, sigma, impl, interpret)
     return out, (x2d, z_pre, a, b)
 
 
@@ -110,7 +181,9 @@ def _bwd_impl(sigma, impl, interpret, res, g):
     sigma = _act.canon(sigma)
     x2d, z_pre, a, b = res
     if _resolve_impl(impl, a, b) != "pallas":
+        DISPATCH["bwd_ref"] += 1
         return _bwd_unfused(sigma, res, g)
+    DISPATCH["bwd_pallas"] += 1
     from repro.kernels.cola_ae import kernel as _k
     g = g.astype(x2d.dtype)
     dx = _k.cola_ae_bwd_dx(g, z_pre, a, b, sigma=sigma, interpret=interpret)
@@ -131,6 +204,126 @@ def _bwd_impl(sigma, impl, interpret, res, g):
 _cola_ae2d.defvjp(_fwd2, _bwd_impl)
 
 
+# --------------------------------------------------------------------------
+# Tensor-parallel fused path: shard_map around the kernels, explicit
+# collectives in a custom VJP (see module docstring for the per-profile
+# placement).  The nondiff args (mesh, ColaAePartition) are hashable
+# statics, so jit caches one lowering per (site shape, partitioning).
+# --------------------------------------------------------------------------
+def _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part):
+    from jax.experimental.shard_map import shard_map
+
+    def body(xl, al, bl):
+        x2 = xl.reshape(-1, xl.shape[-1])
+        if part.in_axes:
+            # Row-parallel input (megatron o/down): the partial z_pre must
+            # be psummed *between* the A-GEMM and σ — a collective cannot
+            # run inside the fused kernel, so this branch is XLA math.  The
+            # residual stays the r-dim z_pre; residency is unchanged.
+            DISPATCH["sharded_fwd_rowpar_xla"] += 1
+            zp = jnp.dot(x2, al.astype(x2.dtype),
+                         preferred_element_type=jnp.float32)
+            zp = jax.lax.psum(zp.astype(jnp.float32), part.in_axes)
+            z = _act.apply_act(zp, sigma).astype(x2.dtype)
+            out = jnp.dot(z, bl.astype(x2.dtype))
+        else:
+            out, zp = _fwd_pair(x2, al, bl, sigma, impl, interpret,
+                                tag="sharded_fwd")
+        if part.rank_axes:
+            # rank-sharded B (baseline): each shard's B-GEMM is a partial
+            out = jax.lax.psum(out, part.rank_axes)
+        return out.reshape(*xl.shape[:-1], out.shape[-1]), zp
+
+    out, z_pre = shard_map(
+        body, mesh, in_specs=(part.x_spec, part.a_spec, part.b_spec),
+        out_specs=(part.out_spec, part.zpre_spec), check_rep=False)(x, a, b)
+    return out, z_pre
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _cola_ae3d_sh(x, a, b, sigma, impl, interpret, mesh, part):
+    out, _ = _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part)
+    return out
+
+
+def _sh_fwd(x, a, b, sigma, impl, interpret, mesh, part):
+    out, z_pre = _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part)
+    return out, (x, z_pre, a, b)
+
+
+def _sh_bwd(sigma, impl, interpret, mesh, part, res, g):
+    from jax.experimental.shard_map import shard_map
+    x, z_pre, a, b = res
+
+    def body(xl, zpl, al, bl, gl):
+        x2 = xl.reshape(-1, xl.shape[-1])
+        g2 = gl.reshape(-1, gl.shape[-1]).astype(x2.dtype)
+        if part.out_axes:
+            # Column-parallel output (megatron qkv/gate/up): g·Bᵀ contracts
+            # over the sharded d_out, so the r-dim partial must be psummed
+            # before the σ′ product — XLA math, one f32 (T, r) all-reduce.
+            DISPATCH["sharded_bwd_colpar_xla"] += 1
+            dzl = jax.lax.dot_general(
+                g2, bl.astype(g2.dtype),
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dzl = jax.lax.psum(dzl, part.out_axes)
+            dz = (dzl * _act.act_grad(zpl, sigma)).astype(x2.dtype)
+            z = _act.apply_act(zpl, sigma).astype(x2.dtype)
+            dx = jnp.dot(dz, al.T.astype(dz.dtype))
+            da = jnp.dot(x2.T, dz)
+            db = jnp.dot(z.T, g2)
+        else:
+            # d_out whole per shard: the fused backward kernels apply
+            # unchanged to the local (rank- or batch-) shard.
+            dx, da, db = _bwd_impl(sigma, impl, interpret,
+                                   (x2, zpl, al, bl), g2)
+        if part.rank_axes:
+            dx = jax.lax.psum(dx, part.rank_axes)  # dz·Aᵀ partials over r
+        if part.batch_axes:
+            # per-site slice of the data-parallel gradient all-reduce
+            da = jax.lax.psum(da, part.batch_axes)
+            db = jax.lax.psum(db, part.batch_axes)
+        return (dx.reshape(xl.shape).astype(xl.dtype),
+                da.astype(al.dtype), db.astype(bl.dtype))
+
+    return shard_map(
+        body, mesh,
+        in_specs=(part.x_spec, part.zpre_spec, part.a_spec, part.b_spec,
+                  part.out_spec),
+        out_specs=(part.x_spec, part.a_spec, part.b_spec),
+        check_rep=False)(x, z_pre, a, b, g)
+
+
+_cola_ae3d_sh.defvjp(_sh_fwd, _sh_bwd)
+
+
+def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
+                    sigma=True, env=None, in_ax: Optional[str] = None,
+                    out_ax: Optional[str] = None, impl: str = "auto",
+                    interpret: bool = False) -> jax.Array:
+    """Tensor-parallel fused auto-encoder over a (b, s, d_in) activation.
+
+    in_ax/out_ax are the *logical* axis names of the site's weight dims
+    (cola_defs convention: a is (in_ax, 'rank'), b is ('rank', out_ax));
+    the active MeshEnv's profile decides what they shard over.
+    """
+    from repro.distributed import sharding as _sh
+    env = env or _sh.current_env()
+    if env is None:
+        raise ValueError("cola_ae_sharded requires an active mesh_env")
+    if x.ndim != 3:
+        raise ValueError(f"cola_ae_sharded expects (b, s, d) input, "
+                         f"got ndim={x.ndim}")
+    mode = _act.canon(sigma)
+    impl, interpret = _apply_force(impl, interpret)
+    part = _sh.cola_ae_partition(env, x.shape, a.shape, b.shape,
+                                 in_ax, out_ax)
+    DISPATCH["sharded_call"] += 1
+    return _cola_ae3d_sh(x, a.astype(x.dtype), b.astype(x.dtype), mode,
+                         impl, interpret, env.mesh, part)
+
+
 def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
             sigma=True, bias_a: Optional[jax.Array] = None,
             bias_b: Optional[jax.Array] = None, impl: str = "auto",
@@ -140,6 +333,7 @@ def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
     sigma: bool (legacy; True → silu) or one of act.SIGMA_MODES.
     """
     mode = _act.canon(sigma)
+    impl, interpret = _apply_force(impl, interpret)
     if bias_a is not None or bias_b is not None:
         # bias sites fall back to the unfused path (rare: qwen2 qkv)
         z = jnp.einsum("...d,dr->...r", x, a.astype(x.dtype))

@@ -26,7 +26,10 @@ def main() -> None:
     ap.add_argument("--remat", default=None, help="none|full|cola_m|dots")
     ap.add_argument("--fused", action="store_true",
                     help="train through the fused Pallas CoLA-AE path "
-                         "(fwd+bwd kernels; TPU)")
+                         "(fwd+bwd kernels; TPU). Composes with --mesh/"
+                         "--profile: under a 'model' axis the kernels run "
+                         "per-shard via shard_map with a collective-aware "
+                         "VJP (no unfused fallback)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-friendly)")
     ap.add_argument("--optimizer", default="adamw")

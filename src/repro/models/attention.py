@@ -251,7 +251,8 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     b, s, _ = x.shape
     dt = x.dtype
 
-    q = linear.linear_apply(cfg, params["q"], x, "attn", d, h * hd)
+    q = linear.linear_apply(cfg, params["q"], x, "attn", d, h * hd,
+                            in_ax="embed", out_ax="heads")
     q = q.reshape(b, s, h, hd)
     if cross_cache is not None:
         k, v = cross_cache.k.astype(dt), cross_cache.v.astype(dt)
@@ -259,8 +260,10 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     else:
         src = x if kv_from is None else kv_from
         sk = src.shape[1]
-        k = linear.linear_apply(cfg, params["k"], src, "attn", d, kv * hd)
-        v = linear.linear_apply(cfg, params["v"], src, "attn", d, kv * hd)
+        k = linear.linear_apply(cfg, params["k"], src, "attn", d, kv * hd,
+                                in_ax="embed", out_ax="kv_heads")
+        v = linear.linear_apply(cfg, params["v"], src, "attn", d, kv * hd,
+                                in_ax="embed", out_ax="kv_heads")
         k = k.reshape(b, sk, kv, hd)
         v = v.reshape(b, sk, kv, hd)
         new_cache = None
@@ -288,7 +291,8 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         q_positions = positions  # per-query causal visibility over the cache
     out = _sdpa(q, k, v, causal=causal, q_positions=q_positions)
     out = out.reshape(b, s, h * hd)
-    out = linear.linear_apply(cfg, params["o"], out, "attn", h * hd, d)
+    out = linear.linear_apply(cfg, params["o"], out, "attn", h * hd, d,
+                              in_ax="heads", out_ax="embed")
     return out, new_cache
 
 
@@ -337,7 +341,8 @@ def _mla_project_q(cfg, params, x):
                              m.q_lora_rank)
     cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
     q = linear.linear_apply(cfg, params["uq"], cq, "attn", m.q_lora_rank,
-                            h * qd).reshape(b, s, h, qd)
+                            h * qd, in_ax="rank",
+                            out_ax="heads").reshape(b, s, h, qd)
     return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
 
 
@@ -370,7 +375,8 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         # train/prefill: expand latent to per-head k_nope, v
         kvd = m.qk_nope_head_dim + m.v_head_dim
         kv = linear.linear_apply(cfg, ukv, latent, "attn", m.kv_lora_rank,
-                                 h * kvd).reshape(b, s, h, kvd)
+                                 h * kvd, in_ax="rank",
+                                 out_ax="heads").reshape(b, s, h, kvd)
         k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))],
@@ -379,7 +385,8 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         out = _sdpa(q, k, v, causal=True)
         out = out.reshape(b, s, h * m.v_head_dim)
         out = linear.linear_apply(cfg, params["o"], out, "attn",
-                                  h * m.v_head_dim, cfg.d_model)
+                                  h * m.v_head_dim, cfg.d_model,
+                                  in_ax="heads", out_ax="embed")
         return out, None
 
     # ---- cached paths -----------------------------------------------------
@@ -414,7 +421,8 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
                     q_positions=positions)
         out = out.reshape(b, s, h * m.v_head_dim)
         out = linear.linear_apply(cfg, params["o"], out, "attn",
-                                  h * m.v_head_dim, cfg.d_model)
+                                  h * m.v_head_dim, cfg.d_model,
+                                  in_ax="heads", out_ax="embed")
         return out, new_cache
 
     # ---- decode: absorbed MLA over the latent cache -----------------------
@@ -438,7 +446,8 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     out = jnp.einsum("bshr,rhv->bshv", lat_out, w_uv)
     out = out.reshape(b, s, h * m.v_head_dim)
     out = linear.linear_apply(cfg, params["o"], out, "attn",
-                              h * m.v_head_dim, cfg.d_model)
+                              h * m.v_head_dim, cfg.d_model,
+                              in_ax="heads", out_ax="embed")
     return out, new_cache
 
 

@@ -99,9 +99,11 @@ def build_cross_caches(cfg: ModelConfig, params: Dict,
 
     def per_layer(lp):
         k = linear.linear_apply(cfg, lp["cross_attn"]["k"], enc_out, "attn",
-                                cfg.d_model, kv * hd).reshape(b, se, kv, hd)
+                                cfg.d_model, kv * hd, in_ax="embed",
+                                out_ax="kv_heads").reshape(b, se, kv, hd)
         v = linear.linear_apply(cfg, lp["cross_attn"]["v"], enc_out, "attn",
-                                cfg.d_model, kv * hd).reshape(b, se, kv, hd)
+                                cfg.d_model, kv * hd, in_ax="embed",
+                                out_ax="kv_heads").reshape(b, se, kv, hd)
         return CrossCache(k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
 
     return jax.lax.map(per_layer, params["decoder"])

@@ -93,8 +93,17 @@ def _sltrain_indices(d_in: int, d_out: int, nnz: int) -> np.ndarray:
 
 def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
                  d_in: int, d_out: int,
-                 originally_nonlinear: bool = False) -> jax.Array:
-    """Apply a linear site; dispatches on which params exist."""
+                 originally_nonlinear: bool = False,
+                 in_ax: Optional[str] = None,
+                 out_ax: Optional[str] = None) -> jax.Array:
+    """Apply a linear site; dispatches on which params exist.
+
+    in_ax/out_ax mirror the logical weight axes the site declared in
+    ``linear_defs``; CoLA sites forward them so the fused path can resolve
+    its tensor-parallel partitioning (core/cola.py → ops.cola_ae_sharded).
+    Call sites that don't thread them keep the unfused path under a
+    'model' mesh.
+    """
     dt = x.dtype
     if "w" in params:  # dense
         h = jnp.einsum("...d,do->...o", x, params["w"].astype(dt))
@@ -103,9 +112,12 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
         return h
     if "a" in params:  # cola
         sigma = cola_mod.sigma_between(cfg, originally_nonlinear)
+        weight_axes = ((in_ax, out_ax)
+                       if in_ax is not None or out_ax is not None else None)
         return cola_mod.cola_apply(
             params, x, sigma=sigma,
-            use_fused=cfg.cola.use_fused_kernel)
+            use_fused=cfg.cola.use_fused_kernel,
+            weight_axes=weight_axes)
     if "w0" in params:  # lora — W0 frozen (stop_gradient), per paper Fig. 3a
         w0 = jax.lax.stop_gradient(params["w0"]).astype(dt)
         h = jnp.einsum("...d,do->...o", x, w0)

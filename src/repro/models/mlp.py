@@ -36,14 +36,17 @@ def swiglu_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
                  d_ff: int = 0, site: str = "mlp") -> jax.Array:
     d, f = cfg.d_model, (d_ff or cfg.d_ff)
     g = linear.linear_apply(cfg, params["gate"], x, site, d, f,
-                            originally_nonlinear=True)
-    u = linear.linear_apply(cfg, params["up"], x, site, d, f)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="ffw")
+    u = linear.linear_apply(cfg, params["up"], x, site, d, f,
+                            in_ax="embed", out_ax="ffw")
     g = shard(g, "batch", "seq", "act_ffw")
     u = shard(u, "batch", "seq", "act_ffw")
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         g = silu(g)
     h = g * u  # element-wise product kept unchanged (paper §3.2)
-    return linear.linear_apply(cfg, params["down"], h, site, f, d)
+    return linear.linear_apply(cfg, params["down"], h, site, f, d,
+                               in_ax="ffw", out_ax="embed")
 
 
 def gelu_mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
@@ -60,8 +63,10 @@ def gelu_mlp_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
                    d_ff: int = 0) -> jax.Array:
     d, f = cfg.d_model, (d_ff or cfg.d_ff)
     h = linear.linear_apply(cfg, params["fc1"], x, "mlp", d, f,
-                            originally_nonlinear=True)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="ffw")
     h = shard(h, "batch", "seq", "act_ffw")
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         h = jax.nn.gelu(h)
-    return linear.linear_apply(cfg, params["fc2"], h, "mlp", f, d)
+    return linear.linear_apply(cfg, params["fc2"], h, "mlp", f, d,
+                               in_ax="ffw", out_ax="embed")

@@ -59,11 +59,14 @@ def _expert_ffn(cfg: ModelConfig, eparams: Dict, x: jax.Array,
                 d: int, f: int) -> jax.Array:
     """SwiGLU for a single expert; x: (C, d). No shard() calls inside."""
     g = linear.linear_apply(cfg, eparams["gate"], x, "expert", d, f,
-                            originally_nonlinear=True)
-    u = linear.linear_apply(cfg, eparams["up"], x, "expert", d, f)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="ffw")
+    u = linear.linear_apply(cfg, eparams["up"], x, "expert", d, f,
+                            in_ax="embed", out_ax="ffw")
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         g = silu(g)
-    return linear.linear_apply(cfg, eparams["down"], g * u, "expert", f, d)
+    return linear.linear_apply(cfg, eparams["down"], g * u, "expert", f, d,
+                               in_ax="ffw", out_ax="embed")
 
 
 def _capacity(cfg: ModelConfig, tokens: int) -> int:

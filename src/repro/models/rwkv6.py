@@ -112,11 +112,15 @@ def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     w = p["decay"].astype(jnp.float32) + ww.astype(jnp.float32)
     w = jnp.exp(-jnp.exp(w))                                 # (b, s, d)
 
-    r = linear.linear_apply(cfg, p["r"], xr, "attn", d, d)
-    k = linear.linear_apply(cfg, p["k"], xk, "attn", d, d)
-    v = linear.linear_apply(cfg, p["v"], xv, "attn", d, d)
+    r = linear.linear_apply(cfg, p["r"], xr, "attn", d, d,
+                            in_ax="embed", out_ax="heads")
+    k = linear.linear_apply(cfg, p["k"], xk, "attn", d, d,
+                            in_ax="embed", out_ax="heads")
+    v = linear.linear_apply(cfg, p["v"], xv, "attn", d, d,
+                            in_ax="embed", out_ax="heads")
     g = linear.linear_apply(cfg, p["g"], xg, "attn", d, d,
-                            originally_nonlinear=True)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="heads")
 
     rh = r.reshape(b, s, h, dh)
     kh = k.reshape(b, s, h, dh)
@@ -129,7 +133,8 @@ def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
                         .reshape(h, dh), p["ln_x_bias"].astype(jnp.float32)
                         .reshape(h, dh))
     y = y.reshape(b, s, d) * silu(g)
-    out = linear.linear_apply(cfg, p["o"], y, "attn", d, d)
+    out = linear.linear_apply(cfg, p["o"], y, "attn", d, d,
+                              in_ax="heads", out_ax="embed")
     new_tm_x = x[:, -1, :] if state is not None else None
     return out, new_tm_x, (wkv_state if state is not None else None)
 
@@ -145,11 +150,14 @@ def channel_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     xk = x + xx * p["cm_maa_k"].astype(dt)
     xr = x + xx * p["cm_maa_r"].astype(dt)
     k = linear.linear_apply(cfg, p["cm_k"], xk, "mlp", d, ff,
-                            originally_nonlinear=True)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="ffw")
     k = jnp.square(jax.nn.relu(k))
-    kv = linear.linear_apply(cfg, p["cm_v"], k, "mlp", ff, d)
+    kv = linear.linear_apply(cfg, p["cm_v"], k, "mlp", ff, d,
+                             in_ax="ffw", out_ax="embed")
     r = linear.linear_apply(cfg, p["cm_r"], xr, "attn", d, d,
-                            originally_nonlinear=True)
+                            originally_nonlinear=True,
+                            in_ax="embed", out_ax="heads")
     out = jax.nn.sigmoid(r) * kv
     new_cm_x = x[:, -1, :] if state is not None else None
     return out, new_cm_x

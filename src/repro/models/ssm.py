@@ -93,7 +93,8 @@ def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     d = cfg.d_model
     di, N, dc, dtr = _dims(cfg)
     b, s, _ = x.shape
-    xz = linear.linear_apply(cfg, params["in_proj"], x, "mlp", d, 2 * di)
+    xz = linear.linear_apply(cfg, params["in_proj"], x, "mlp", d, 2 * di,
+                             in_ax="embed", out_ax="ffw")
     xin, z = jnp.split(xz, 2, axis=-1)
 
     prev_conv = state.conv if state is not None else None
@@ -113,7 +114,8 @@ def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     y, ssm = scan_ops.selective_scan(xc, dt.astype(xc.dtype), A, B, C,
                                      params["D"], init)
     y = y * silu(z)
-    out = linear.linear_apply(cfg, params["out_proj"], y, "mlp", di, d)
+    out = linear.linear_apply(cfg, params["out_proj"], y, "mlp", di, d,
+                              in_ax="ffw", out_ax="embed")
     new_state = (MambaState(conv=new_conv.astype(jnp.bfloat16), ssm=ssm)
                  if state is not None else None)
     return out, new_state

@@ -13,3 +13,12 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+class FakeMesh:
+    """Stands in for jax.sharding.Mesh in resolution-only sharding tests:
+    MeshEnv reads nothing but ``mesh.shape``, so arbitrary mesh geometries
+    can be tested without allocating devices."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)

@@ -131,3 +131,117 @@ def test_effective_rank_invariants():
     assert effective_rank(jnp.asarray(u @ v), 0.999) <= 4
     full = rng.randn(64, 32)
     assert effective_rank(jnp.asarray(full), 0.95) > 10
+
+
+# --------------------------------------------------------------------------
+# sharding resolution invariants (distributed/sharding.py)
+#
+# Pure-resolution properties need no devices: MeshEnv only reads
+# ``mesh.shape``, so conftest.FakeMesh stands in for arbitrary geometries.
+# --------------------------------------------------------------------------
+from conftest import FakeMesh as _FakeMesh  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    MeshEnv, _entry_axes, cola_ae_partition, logical_to_pspec, param_pspec)
+
+_SHARD_PROFILES = ("baseline", "megatron", "fsdp")
+_LOGICAL = ("batch", "seq", "embed", "heads", "kv_heads", "ffw", "rank",
+            "vocab", "expert", "w_fsdp", "act_rank", "act_ffw", "head_dim",
+            "null", None)
+_SIZES = (1, 2, 3, 4, 6, 8, 16, 32, 96, 100, 128, 256, 1024)
+
+
+@st.composite
+def _sharding_case(draw):
+    profile = draw(st.sampled_from(_SHARD_PROFILES))
+    mesh = {"pod": draw(st.sampled_from([1, 2])),
+            "data": draw(st.sampled_from([1, 2, 4])),
+            "model": draw(st.sampled_from([1, 2, 4, 8, 16]))}
+    n = draw(st.integers(1, 4))
+    names = tuple(draw(st.sampled_from(_LOGICAL)) for _ in range(n))
+    shape = tuple(draw(st.sampled_from(_SIZES)) for _ in range(n))
+    return profile, mesh, names, shape
+
+
+def _check_entries(spec, shape, mesh_shape):
+    """Every resolved entry divides its dim; no mesh axis appears twice.
+    Returns the total shard factor (so callers can check element counts)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    seen = set()
+    factor = 1
+    for entry, size in zip(entries, shape):
+        axes = _entry_axes(entry)
+        prod = int(np.prod([mesh_shape[a] for a in axes])) if axes else 1
+        assert size % prod == 0, (spec, shape)
+        assert not (set(axes) & seen), (spec, shape)
+        seen |= set(axes)
+        factor *= prod
+    return factor
+
+
+@settings(max_examples=80, deadline=None)
+@given(case=_sharding_case())
+def test_resolve_dim_divides_and_never_reuses_axes(case):
+    profile, mesh_shape, names, shape = case
+    env = MeshEnv(_FakeMesh(mesh_shape), profile)
+    spec = logical_to_pspec(names, shape, env)
+    _check_entries(spec, shape, mesh_shape)
+
+
+@settings(max_examples=80, deadline=None)
+@given(case=_sharding_case())
+def test_param_pspec_fsdp_fill_preserves_element_count(case):
+    """The ZeRO-3 fill may only place axes on dims they divide: the global
+    element count must equal local elements × total shard factor."""
+    profile, mesh_shape, names, shape = case
+    env = MeshEnv(_FakeMesh(mesh_shape), profile)
+    spec = param_pspec(names, shape, env)
+    factor = _check_entries(spec, shape, mesh_shape)
+    total = int(np.prod(shape))
+    assert total % factor == 0
+    assert (total // factor) * factor == total
+
+
+@st.composite
+def _ae_site_case(draw):
+    profile = draw(st.sampled_from(_SHARD_PROFILES))
+    mesh = {"data": draw(st.sampled_from([1, 2, 4])),
+            "model": draw(st.sampled_from([1, 2, 4, 8, 16]))}
+    b = draw(st.sampled_from([1, 2, 4, 8, 16]))
+    d_in = draw(st.sampled_from([16, 32, 64, 96, 128, 1024]))
+    r = draw(st.sampled_from([4, 6, 16, 32, 96, 128]))
+    d_out = draw(st.sampled_from([16, 32, 64, 96, 100, 128, 1024]))
+    in_ax = draw(st.sampled_from(["embed", "ffw", "heads", "rank"]))
+    out_ax = draw(st.sampled_from(["embed", "ffw", "heads", "kv_heads",
+                                   "vocab"]))
+    return profile, mesh, b, d_in, r, d_out, in_ax, out_ax
+
+
+@settings(max_examples=80, deadline=None)
+@given(case=_ae_site_case())
+def test_cola_ae_partition_invariants(case):
+    """The shard_map partitioning the fused TP path relies on: psum axis
+    groups divide their dims; rank axes never collide with the in/out axes
+    of the same factor; batch axes are disjoint from all weight axes; and
+    the specs agree with the axis groups (A's col dim == B's row dim ==
+    z_pre's rank dim)."""
+    profile, mesh_shape, b, d_in, r, d_out, in_ax, out_ax = case
+    env = MeshEnv(_FakeMesh(mesh_shape), profile)
+    part = cola_ae_partition(env, (b, 16, d_in), (d_in, r), (r, d_out),
+                             in_ax, out_ax)
+    prod = lambda axes: int(np.prod([mesh_shape[a] for a in axes])) \
+        if axes else 1
+    assert d_in % prod(part.in_axes) == 0
+    assert r % prod(part.rank_axes) == 0
+    assert d_out % prod(part.out_axes) == 0
+    assert b % prod(part.batch_axes) == 0
+    assert not (set(part.rank_axes) & set(part.in_axes))
+    assert not (set(part.rank_axes) & set(part.out_axes))
+    assert not (set(part.batch_axes)
+                & (set(part.in_axes) | set(part.rank_axes)
+                   | set(part.out_axes)))
+    assert _entry_axes(part.a_spec[0]) == part.in_axes
+    assert _entry_axes(part.a_spec[1]) == part.rank_axes
+    assert _entry_axes(part.b_spec[0]) == part.rank_axes
+    assert _entry_axes(part.b_spec[1]) == part.out_axes
+    assert _entry_axes(part.x_spec[2]) == part.in_axes
+    assert _entry_axes(part.zpre_spec[1]) == part.rank_axes

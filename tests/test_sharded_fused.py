@@ -1,0 +1,315 @@
+"""Tensor-parallel fused CoLA-AE: the multi-device parity harness.
+
+Proves that ``use_fused`` under a mesh with a 'model' axis no longer falls
+back: the Pallas kernels (interpret mode on CPU) run per-shard inside
+shard_map with a collective-aware custom VJP (kernels/cola_ae/ops.py), and
+their loss/gradients match the unfused sharded reference.
+
+The parity matrix:
+
+* op level    — profile (baseline/megatron/fsdp) × site weight axes
+                (column-, row-, and rank-contested sites) × all four σ
+                modes, f32 tight + bf16 loose,
+* model level — profile × remat policy (full/cola_m) × σ placement
+                (lowrank_only/fullrank_only), fused vs unfused loss+grads,
+* dispatch    — the ops.DISPATCH counters assert the sharded fused path was
+                actually taken (no silent fallback to the unfused math).
+
+Runs on an 8-virtual-device CPU mesh.  The CI multidevice job sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` at the job level and
+runs everything here in-process; under plain single-device tier-1 the suite
+re-execs itself once in a subprocess with that flag (the forced device
+count must not leak into other tests — see conftest.py).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import sharding as sh
+from repro.kernels.cola_ae import act as caa
+from repro.kernels.cola_ae import kernel as cak
+from repro.kernels.cola_ae import ops as cao
+from repro.kernels.cola_ae import ref as car
+
+MULTI = jax.device_count() >= 8
+needs_mesh = pytest.mark.skipif(
+    not MULTI, reason="needs 8 host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+PROFILES = ("baseline", "megatron", "fsdp")
+# (in_ax, out_ax): column-parallel under megatron; row-parallel under
+# megatron; rank-vs-in_ax axis contention (MLA uq-style site).
+SITE_AXES = (("embed", "ffw"), ("ffw", "embed"), ("rank", "heads"))
+
+
+@pytest.mark.skipif(MULTI, reason="already inside the multi-device run")
+@pytest.mark.skipif(bool(os.environ.get("CI")),
+                    reason="CI runs this suite in-process in the "
+                           "multidevice job; don't pay it twice")
+def test_suite_reexecs_on_8_virtual_devices():
+    """Local tier-1 entry point: run this whole file on an 8-device mesh."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__],
+        env=env, capture_output=True, text=True, timeout=1500,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-4000:]}\nstderr:\n{r.stderr[-2000:]}"
+
+
+def _rel(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32).reshape(got.shape)
+    return float(np.abs(got - want).max() / (np.abs(want).max() + 1e-12))
+
+
+def _mesh24():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _site_args(dtype, rng_seed=0):
+    rng = np.random.RandomState(rng_seed)
+    b, s, din, r, dout = 8, 16, 64, 32, 96
+    x = jnp.asarray(rng.randn(b, s, din), dtype)
+    wa = jnp.asarray(0.05 * rng.randn(din, r), dtype)
+    wb = jnp.asarray(0.05 * rng.randn(r, dout), dtype)
+    return x, wa, wb
+
+
+# --------------------------------------------------------------------------
+# op level
+# --------------------------------------------------------------------------
+@needs_mesh
+@pytest.mark.parametrize("sigma", list(caa.SIGMA_MODES))
+@pytest.mark.parametrize("site", SITE_AXES, ids=lambda s: "->".join(s))
+@pytest.mark.parametrize("profile", PROFILES)
+def test_sharded_op_grad_parity_f32(profile, site, sigma):
+    in_ax, out_ax = site
+    x, wa, wb = _site_args(jnp.float32)
+    with sh.mesh_env(_mesh24(), profile):
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma=sigma, in_ax=in_ax, out_ax=out_ax) ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    fr = lambda *t: (car.cola_ae(
+        t[0].reshape(-1, t[0].shape[-1]), t[1], t[2], sigma=sigma) ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, wa, wb)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5, (profile, site, sigma, u.shape, _rel(u, v))
+
+
+@needs_mesh
+@pytest.mark.parametrize("profile", PROFILES)
+def test_sharded_op_grad_parity_bf16(profile):
+    x, wa, wb = _site_args(jnp.bfloat16)
+    with sh.mesh_env(_mesh24(), profile):
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="embed", out_ax="ffw")
+                .astype(jnp.float32) ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    fr = lambda *t: (car.cola_ae(
+        t[0].reshape(-1, t[0].shape[-1]), t[1], t[2], sigma="silu")
+        .astype(jnp.float32) ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, wa, wb)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 2e-2, (profile, u.shape, _rel(u, v))
+
+
+@needs_mesh
+def test_sharded_op_dispatch_counts_kernels():
+    """The shard_map bodies run the Pallas kernels — not silent XLA — at
+    every site where no collective is needed mid-kernel."""
+    x, wa, wb = _site_args(jnp.float32)
+    with sh.mesh_env(_mesh24(), "baseline"):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="embed", out_ax="ffw") ** 2).sum()
+            jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    assert cao.DISPATCH["sharded_call"] > 0
+    assert cao.DISPATCH["sharded_fwd_pallas"] > 0
+    assert cao.DISPATCH["bwd_pallas"] > 0
+    assert cao.DISPATCH["sharded_fwd_ref"] == 0
+    assert cao.DISPATCH["bwd_ref"] == 0
+
+
+@needs_mesh
+def test_zpre_residual_is_rank_sharded_under_baseline():
+    """The fused VJP saves only (x, z_pre, a, b), and z_pre's rank dim is
+    sharded over 'model' — the saved residual is 1/4 per device."""
+    x, wa, wb = _site_args(jnp.float32)
+    T, r = x.shape[0] * x.shape[1], wa.shape[1]
+    with sh.mesh_env(_mesh24(), "baseline"):
+        with cao.force_impl("pallas", True):
+            _, vjp_fn = jax.vjp(
+                lambda x, a, b: cao.cola_ae_sharded(
+                    x, a, b, sigma="silu", in_ax="embed", out_ax="ffw"),
+                x, wa, wb)
+    leaves = jax.tree_util.tree_leaves(vjp_fn)
+    shapes = sorted(tuple(l.shape) for l in leaves)
+    assert shapes == sorted([x.shape, (T, r), wa.shape, wb.shape])
+    zp = next(l for l in leaves if l.shape == (T, r))
+    assert zp.dtype == jnp.float32
+    assert zp.sharding.spec[1] == "model", zp.sharding.spec
+
+
+# --------------------------------------------------------------------------
+# model level
+# --------------------------------------------------------------------------
+def _model_grads(cfg, batch_seed=0):
+    from repro.models.model import build_model
+    from repro.train.step import build_loss_fn
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(batch_seed)
+    batch = {"tokens": jnp.asarray(rng.randint(1, 500, (8, 32)), jnp.int32),
+             "labels": jnp.asarray(rng.randint(1, 500, (8, 32)), jnp.int32)}
+    loss_fn = build_loss_fn(model)
+    (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    return float(loss), g
+
+
+def _smoke_cfg(remat, sigma_mode, fused, dtype="float32"):
+    from repro.config import get_config
+    cfg = get_config("llama-60m").smoke().with_overrides(
+        remat=remat, dtype=dtype)
+    return cfg.with_overrides(cola=dataclasses.replace(
+        cfg.cola, sigma=sigma_mode, use_fused_kernel=fused))
+
+
+@needs_mesh
+@pytest.mark.parametrize("sigma_mode", ["lowrank_only", "fullrank_only"])
+@pytest.mark.parametrize("remat", ["full", "cola_m"])
+@pytest.mark.parametrize("profile", PROFILES)
+def test_model_fused_vs_unfused_parity(profile, remat, sigma_mode):
+    """The PR's acceptance matrix: on an 8-device mesh with a 'model' axis,
+    use_fused=True dispatches the sharded fused path at every AE site (no
+    silent fallback: counters checked) and its loss/grads match the unfused
+    sharded reference within f32 tolerances."""
+    with sh.mesh_env(_mesh24(), profile):
+        l0, g0 = _model_grads(_smoke_cfg(remat, sigma_mode, fused=False))
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            l1, g1 = _model_grads(_smoke_cfg(remat, sigma_mode, fused=True))
+    assert cao.DISPATCH["apply_fused_sharded"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["apply_fused_local"] == 0
+    assert cao.DISPATCH["apply_fused_fallback"] == 0
+    assert l0 == pytest.approx(l1, rel=1e-5)
+    for u, v in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        u = np.asarray(u, np.float32)
+        v = np.asarray(v, np.float32)
+        rel = np.abs(u - v).max() / (np.abs(u).max() + 1e-12)
+        assert rel <= 1e-4, (profile, remat, sigma_mode, u.shape, rel)
+
+
+@needs_mesh
+def test_model_fused_parity_bf16_activations():
+    """One bf16 point of the matrix: dtype-aware (loose) tolerance — bf16
+    GEMM rounding differs between the fused kernels and XLA's reassociated
+    einsums, compounding over 2 layers × 7 sites."""
+    with sh.mesh_env(_mesh24(), "baseline"):
+        l0, g0 = _model_grads(
+            _smoke_cfg("cola_m", "lowrank_only", False, dtype="bfloat16"))
+        with cao.force_impl("pallas", True):
+            l1, g1 = _model_grads(
+                _smoke_cfg("cola_m", "lowrank_only", True, dtype="bfloat16"))
+    assert l0 == pytest.approx(l1, rel=1e-2)
+    for u, v in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        u = np.asarray(u, np.float32)
+        v = np.asarray(v, np.float32)
+        # norm-based: single-element max-rel is dominated by bf16 rounding
+        rel = np.linalg.norm(u - v) / (np.linalg.norm(u) + 1e-12)
+        # headroom over the ~3e-2 observed worst case: CPU XLA numerics are
+        # mildly run-order dependent (see memory note on test_colam flakes)
+        assert rel <= 6e-2, (u.shape, rel)
+
+
+# --------------------------------------------------------------------------
+# partitioning + per-shard VMEM accounting (no mesh needed)
+# --------------------------------------------------------------------------
+from conftest import FakeMesh as _FakeMesh  # noqa: E402
+
+
+def _env(profile, **shape):
+    return sh.MeshEnv(_FakeMesh(shape or {"data": 2, "model": 4}), profile)
+
+
+def test_partition_baseline_shards_rank():
+    part = sh.cola_ae_partition(_env("baseline"), (8, 16, 64), (64, 16),
+                                (16, 128), "embed", "ffw")
+    assert part.rank_axes == ("model",)
+    assert part.in_axes == () and part.out_axes == ()
+    assert part.a_spec == jax.sharding.PartitionSpec(None, "model")
+    assert part.zpre_spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_partition_megatron_column_and_row():
+    up = sh.cola_ae_partition(_env("megatron"), (8, 16, 64), (64, 16),
+                              (16, 128), "embed", "ffw")
+    assert up.out_axes == ("model",) and up.in_axes == ()
+    assert up.rank_axes == ()
+    down = sh.cola_ae_partition(_env("megatron"), (8, 16, 128), (128, 16),
+                                (16, 64), "ffw", "embed")
+    assert down.in_axes == ("model",) and down.out_axes == ()
+    assert down.x_spec == jax.sharding.PartitionSpec("data", None, "model")
+
+
+def test_partition_rank_contention_resolves_consistently():
+    """MLA uq-style site (in_ax='rank'): rank wins the 'model' axis so A's
+    col dim and B's row dim agree; d_in degrades to replicated."""
+    part = sh.cola_ae_partition(_env("baseline"), (8, 16, 32), (32, 16),
+                                (16, 128), "rank", "heads")
+    assert part.rank_axes == ("model",) and part.in_axes == ()
+    assert part.a_spec == jax.sharding.PartitionSpec(None, "model")
+    assert part.b_spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_partition_fsdp_folds_model_into_batch():
+    part = sh.cola_ae_partition(_env("fsdp"), (8, 16, 64), (64, 16),
+                                (16, 128), "embed", "ffw")
+    assert part.in_axes == part.rank_axes == part.out_axes == ()
+    assert set(part.batch_axes) == {"data", "model"}
+
+
+def test_partition_nondividing_degrades_to_replicated():
+    # r=6 not divisible by model=4: rank replicated, no collective emitted
+    part = sh.cola_ae_partition(_env("baseline"), (8, 16, 64), (64, 6),
+                                (6, 128), "embed", "ffw")
+    assert part.rank_axes == ()
+    assert part.zpre_spec == jax.sharding.PartitionSpec("data", None)
+
+
+def test_vmem_guards_admit_per_shard_sites():
+    """The guards run inside the shard_map body on *local* shapes: a site
+    whose whole weights overflow the budget fits once its rank (baseline)
+    or output (megatron) dim is sharded 16-way."""
+    # (2048, 2048, 2048) bf16: A+B whole = 16.8 MB > FWD_VMEM_BUDGET
+    assert not cak.weights_fit_vmem(2048, 2048, 2048)
+    assert cak.weights_fit_vmem(2048, 2048 // 16, 2048)   # rank shard
+    assert not cak.dw_fits_vmem(4096, 1024, 4096)
+    assert cak.dw_fits_vmem(4096, 1024 // 16, 4096 // 16)
+
+
+def test_collective_bytes_profile_ordering():
+    """megatron moves r-dim f32 psums; baseline moves d-dim ones: for the
+    paper regime r = d/4 megatron's modeled wire bytes are strictly lower,
+    and fsdp is zero."""
+    T, din, r, dout = 4096, 1024, 256, 1024
+    got = {}
+    for profile in PROFILES:
+        env = _env(profile, data=2, model=8)
+        part = sh.cola_ae_partition(env, (8, T // 8, din), (din, r),
+                                    (r, dout), "embed", "ffw")
+        got[profile] = sh.cola_ae_collective_bytes(env, part, T, din, r,
+                                                   dout)
+    assert got["fsdp"] == 0
+    assert 0 < got["megatron"] < got["baseline"]
