@@ -71,6 +71,32 @@ def _cola_ae_bwd_bench(emit):
          f"unfused={hbm_u / 2**20:.1f}MB ratio={hbm_u / hbm_f:.2f}x")
 
 
+def _cola_ae_split_bench(emit):
+    """Monolith vs two-stage split vs old XLA fallback, modeled HBM bytes
+    (kernels/cola_ae/kernel.py traffic model) at the two site classes the
+    split exists for: megatron row-parallel (the z_pre-psum seam) and
+    over-VMEM (internlm2 down-proj — the monolith row is hypothetical
+    there: whole weights cannot stage, which is why the split exists;
+    'unfused' is what those sites actually ran before this refactor)."""
+    from repro.kernels.cola_ae import kernel as cak
+
+    sites = {
+        # (T, d_in, r, d_out): a llama-1b o-proj-class site, row-parallel
+        # under megatron — pre-split this took XLA math in fwd
+        "megatron_rowpar": (2048, 2048, 512, 2048),
+        # internlm2-20b down-proj: A alone 50 MB bf16, dw blocks 138 MB f32
+        "overvmem_internlm2_down": (4096, 16384, 1536, 6144),
+    }
+    for name, (T, din, r, dout) in sites.items():
+        fits = cak.weights_fit_vmem(din, r, dout)
+        for path in ("monolith", "staged", "unfused"):
+            note = f"T={T} d_in={din} r={r} d_out={dout}"
+            if path == "monolith" and not fits:
+                note += " (hypothetical: weights exceed VMEM, cannot run)"
+            emit(f"cola_ae_split/{name}_{path}_model_hbm_MB",
+                 cak.hbm_traffic(T, din, r, dout, path=path) / 2**20, note)
+
+
 def _cola_ae_sharded_bench(emit):
     """Sharded-fused (shard_map custom VJP) vs the old gated fallback
     (unfused XLA math, what --fused used to silently run under a 'model'
@@ -95,19 +121,25 @@ def _cola_ae_sharded_bench(emit):
     wa = jnp.asarray(0.05 * rng.randn(din, r), jnp.bfloat16)
     wb = jnp.asarray(0.05 * rng.randn(r, dout), jnp.bfloat16)
 
-    fused = lambda *t: cao.cola_ae_sharded(
-        *t, sigma="silu", in_ax="embed",
-        out_ax="ffw").astype(jnp.float32).sum()
+    def make_fused(in_ax, out_ax):
+        return lambda *t: cao.cola_ae_sharded(
+            *t, sigma="silu", in_ax=in_ax,
+            out_ax=out_ax).astype(jnp.float32).sum()
 
-    def unfused(x, wa, wb):
+    def make_unfused(in_ax):
         # what the old gate actually ran: cola_apply's unfused einsums with
         # the act_rank constraint on the bottleneck, GSPMD-sharded
-        x = sh.shard(x, "batch", "seq", "embed")
-        z = jnp.einsum("...d,dr->...r", x, wa.astype(x.dtype))
-        z = sh.shard(z, "batch", "seq", "act_rank")
-        z = silu(z)
-        h = jnp.einsum("...r,ro->...o", z, wb.astype(x.dtype))
-        return h.astype(jnp.float32).sum()
+        def unfused(x, wa, wb):
+            x = sh.shard(x, "batch", "seq", in_ax)
+            z = jnp.einsum("...d,dr->...r", x, wa.astype(x.dtype))
+            z = sh.shard(z, "batch", "seq", "act_rank")
+            z = silu(z)
+            h = jnp.einsum("...r,ro->...o", z, wb.astype(x.dtype))
+            return h.astype(jnp.float32).sum()
+        return unfused
+
+    fused = make_fused("embed", "ffw")
+    unfused = make_unfused("embed")
     for profile in ("baseline", "megatron", "fsdp"):
         with sh.mesh_env(mesh, profile) as env:
             part = sh.cola_ae_partition(env, x.shape, wa.shape, wb.shape,
@@ -122,9 +154,21 @@ def _cola_ae_sharded_bench(emit):
         emit(f"cola_ae_sharded/{profile}_model_collective_MB", cb / 2**20,
              f"ring-all-reduce wire bytes, 'model'={model}")
 
+    # megatron row-parallel (o/down class): the split-stage pipeline fuses
+    # around the z_pre psum — vs the pre-split XLA-math branch those sites
+    # used to run (the same GSPMD einsum reference, row-parallel axes)
+    with sh.mesh_env(mesh, "megatron"):
+        t_f = _time_grad(make_fused("ffw", "embed"), (x, wa, wb))
+        t_u = _time_grad(make_unfused("ffw"), (x, wa, wb))
+    emit("cola_ae_sharded/megatron_rowpar_split_fwdbwd_s", t_f,
+         f"model={model} — staged Pallas around the z_pre psum")
+    emit("cola_ae_sharded/megatron_rowpar_xla_branch_s", t_u,
+         f"pre-split XLA-math branch, split_speedup={t_u / t_f:.2f}x")
+
 
 def run(emit):
     _cola_ae_bwd_bench(emit)
+    _cola_ae_split_bench(emit)
     _cola_ae_sharded_bench(emit)
     variants = {
         "full_rank": dict(parameterization="dense", remat="none"),

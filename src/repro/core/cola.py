@@ -66,30 +66,34 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     same r-dim tensor the ``cola_m`` remat policy keeps via the
     ``cola_r`` name below — so kernel-level residency makes the policy a
     no-op at AE sites while the rest of the block still benefits from it.
+    The ops planner picks the monolithic kernel or the two-stage pipeline
+    per site; bias-carrying sites (qwen2 qkv, whisper MLP) ride the
+    two-stage path with the bias folded into the stage-B body.
 
     weight_axes: the site's (in_ax, out_ax) logical weight axes, as passed
     to ``cola_defs``.  Under a mesh with a nontrivial 'model' axis the
     fused path runs the kernels per-shard inside shard_map with explicit
-    collectives (ops.cola_ae_sharded) — the partitioning is resolved from
-    these names, so --fused now *composes* with tensor parallelism instead
-    of falling back.  Only sites that don't thread their axes (or carry
-    biases) still take the unfused sharded path below.
+    collectives between stages (ops.cola_ae_sharded) — the partitioning is
+    resolved from these names, so --fused composes with tensor parallelism
+    at every site kind, bias-carrying and row-parallel included.  Only
+    sites that don't thread their axes still take the unfused sharded
+    path below (counted as ``apply_fused_fallback``).
     """
     if use_fused and x.ndim == 3:
         from repro.kernels.cola_ae import ops as cola_ops
         env = _model_parallel_env()
         if env is None:
             # Fused Pallas path (TPU): keeps the r-dim intermediate in VMEM
-            # in forward AND backward; bias sites fall back inside cola_ae.
+            # in forward AND backward.
             cola_ops.DISPATCH["apply_fused_local"] += 1
             return cola_ops.cola_ae(x, params["a"], params["b"], sigma=sigma,
                                     bias_a=params.get("bias_a"),
                                     bias_b=params.get("bias_b"))
-        if (weight_axes is not None and "bias_a" not in params
-                and "bias_b" not in params):
+        if weight_axes is not None:
             cola_ops.DISPATCH["apply_fused_sharded"] += 1
             return cola_ops.cola_ae_sharded(
                 x, params["a"], params["b"], sigma=sigma, env=env,
+                bias_a=params.get("bias_a"), bias_b=params.get("bias_b"),
                 in_ax=weight_axes[0], out_ax=weight_axes[1])
         cola_ops.DISPATCH["apply_fused_fallback"] += 1
     a = params["a"].astype(x.dtype)

@@ -20,24 +20,33 @@ Policies:
     dots    — XLA heuristic (save matmul outputs); beyond-paper comparison
 
 Composition with the fused Pallas path (cola.use_fused_kernel): the fused
-AE's custom VJP already saves exactly (x, z_pre) — z_pre is the same
-r-dim, ``cola_r``-named tensor this policy keeps on the unfused path — so
-the kernel provides CoLA-M residency at AE sites *without* remat.  Remat
-policies cannot look inside a custom_vjp: under ``full`` the fused forward
-kernel is replayed once during backward (the CoLA-M compute trade, one
-kernel launch); under ``cola_m`` the policy still governs everything
-outside the AE sites (SDP, norms, element-wise products).
+AE's custom VJP saves exactly (x, z_pre) — z_pre is the same r-dim,
+``cola_r``-named tensor this policy keeps on the unfused path — so the
+kernel provides CoLA-M residency at AE sites *without* remat.  This holds
+**identically for both fused plans**: the monolithic kernel emits z_pre
+from its VMEM scratch, the two-stage pipeline materializes the same
+(post-psum, post-bias_a) z_pre between stage A and stage B, and either way
+the VJP residuals are only (x, z_pre) — the policy needs no plan
+awareness.  Remat policies cannot look inside a custom_vjp: under ``full``
+the fused forward (one or two kernels, per plan) is replayed once during
+backward (the CoLA-M compute trade); under ``cola_m`` the policy still
+governs everything outside the AE sites (SDP, norms, element-wise
+products).
 
-Composition with tensor parallelism: ``--fused`` now also composes with
-meshes carrying a 'model' axis — the kernels run per-shard inside
-shard_map with a collective-aware custom VJP (kernels/cola_ae/ops.py), and
-the z_pre residual is itself sharded (rank dim over 'model' under the
-``baseline`` profile), so the CoLA-M residency recipe survives sharding at
-1/|model| footprint per device.  Collective counts per AE site, fwd+bwd:
-``baseline`` 2 full-width psums (out, dx); ``megatron`` 1 r-dim f32 psum
-(z_pre at row-parallel o/down in fwd — the 2-per-block exits — or g·Bᵀ at
-column-parallel qkv/gate/up in bwd); ``fsdp`` 0.  All three are verified
-against the unfused sharded reference in tests/test_sharded_fused.py.
+Composition with tensor parallelism: ``--fused`` composes with meshes
+carrying a 'model' axis — the kernels run per-shard inside shard_map with
+a collective-aware custom VJP (kernels/cola_ae/ops.py) that places
+collectives *between* stages, and the z_pre residual is itself sharded
+(rank dim over 'model' under the ``baseline`` profile), so the CoLA-M
+residency recipe survives sharding at 1/|model| footprint per device.
+Collective counts per AE site, fwd+bwd: ``baseline`` 2 full-width psums
+(out; dx — a psum_scatter when the seq entry rides the same axes);
+``megatron`` 1 r-dim f32 psum (z_pre between stage A and stage B at
+row-parallel o/down — the 2-per-block exits — or g·Bᵀ between bwd_dzl and
+σ′ at column-parallel qkv/gate/up in bwd), plus the explicit sequence-
+parallel entry all-gathers where the profile seq-shards the residual
+stream; ``fsdp`` 0.  All are verified against the unfused sharded
+reference in tests/test_sharded_fused.py.
 """
 from __future__ import annotations
 

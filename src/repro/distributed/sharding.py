@@ -297,41 +297,54 @@ def _entry_axes(entry: Optional[Any]) -> Tuple[str, ...]:
 
 
 class ColaAePartition(NamedTuple):
-    """shard_map partitioning of one AE site ``out = B·σ(A·x)``.
+    """shard_map partitioning of one AE site ``out = B·σ(A·x [+ba]) [+bb]``.
 
     Specs (global-array views; shard_map reshards inputs to match, which is
     exactly the GSPMD layout the unfused path would use — e.g. FSDP-stored
     weight dims are all-gathered on entry):
 
-    * ``x_spec``    — (b, s, d_in): batch over the data axes, d_in over the
-                      weight's in-axis resolution (row-parallel sites),
+    * ``x_spec``    — (b, s, d_in): batch over the data axes, seq over the
+                      profile's 'seq_save' axes when they don't collide
+                      with batch/d_in (the sequence-parallel entry: the
+                      shard_map body gathers explicitly ahead of stage A
+                      instead of GSPMD gathering implicitly outside), d_in
+                      over the weight's in-axis resolution (row-parallel),
     * ``a_spec``    — (d_in, r), ``b_spec`` — (r, d_out),
     * ``out_spec``  — (b, s, d_out),
     * ``zpre_spec`` — (b·s, r): the f32 pre-activation residual the fused
                       VJP saves; its rank dim carries the same mesh axes as
                       the weights' rank dim, so the saved tensor is 1/|model|
-                      per device under the ``baseline`` profile.
+                      per device under the ``baseline`` profile,
+    * ``bias_a_spec`` — (r,) on the rank axes; ``bias_b_spec`` — (d_out,)
+                      on the out axes (bias-carrying sites only).
 
-    Axis groups (mesh axes to ``psum`` over; empty tuple = no collective):
+    Axis groups (mesh axes to ``psum``/gather over; empty = no collective):
 
     * ``in_axes``   — shard d_in (megatron row-parallel: o-proj/down-proj);
-                      psum of z_pre between the A-GEMM and σ,
+                      psum of z_pre between stage A and stage B,
     * ``rank_axes`` — shard r (baseline profile); psum of the B-GEMM output
                       in fwd and of ``dz·Aᵀ`` in bwd,
     * ``out_axes``  — shard d_out (megatron column-parallel: qkv/gate/up);
-                      psum of the r-dim ``g·Bᵀ`` partial in bwd,
+                      psum of the r-dim ``g·Bᵀ`` partial in bwd, between
+                      the bwd_dzl kernel and the σ′ product,
     * ``batch_axes``— shard tokens; psum of dA/dB (the per-site slice of the
-                      data-parallel gradient all-reduce).
+                      data-parallel gradient all-reduce),
+    * ``seq_axes``  — the sequence-sharded entry: explicit ``all_gather``
+                      of x at body entry (fwd and bwd), with dx re-sharded
+                      on exit (psum_scatter when it rides the rank psum).
     """
     x_spec: PartitionSpec
     a_spec: PartitionSpec
     b_spec: PartitionSpec
     out_spec: PartitionSpec
     zpre_spec: PartitionSpec
+    bias_a_spec: PartitionSpec
+    bias_b_spec: PartitionSpec
     in_axes: Tuple[str, ...]
     rank_axes: Tuple[str, ...]
     out_axes: Tuple[str, ...]
     batch_axes: Tuple[str, ...]
+    seq_axes: Tuple[str, ...]
 
 
 def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
@@ -344,9 +357,12 @@ def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
     rank dim resolves first (A's col dim and B's row dim must agree — under
     ``baseline`` rank wins the 'model' axis even at sites whose in-axis is
     itself 'rank', e.g. MLA's uq), then d_in avoiding rank's axes, then
-    d_out avoiding rank's axes, then batch avoiding all three.  Every entry
-    inherits `_resolve_dim`'s divisibility fallback, so non-dividing dims
-    degrade to replicated instead of producing an invalid shard_map spec.
+    d_out avoiding rank's axes, then batch avoiding all three, then the
+    seq entry avoiding x's other dims (batch + d_in — so row-parallel
+    sites, whose d_in owns 'model', keep a seq-replicated in_spec).  Every
+    entry inherits `_resolve_dim`'s divisibility fallback, so non-dividing
+    dims degrade to replicated instead of producing an invalid shard_map
+    spec.
     """
     d_in, r = a_shape
     d_out = b_shape[1]
@@ -360,44 +376,66 @@ def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
     used_x = (set(_entry_axes(erank)) | set(_entry_axes(ein))
               | set(_entry_axes(eout)))
     ebatch = _resolve_dim(env, "batch", x_shape[0], used_x)
+    used_seq = set(_entry_axes(ebatch)) | set(_entry_axes(ein))
+    eseq = _resolve_dim(env, "seq_save", x_shape[1], used_seq)
     return ColaAePartition(
-        x_spec=PartitionSpec(ebatch, None, ein),
+        x_spec=PartitionSpec(ebatch, eseq, ein),
         a_spec=PartitionSpec(ein, erank),
         b_spec=PartitionSpec(erank, eout),
         out_spec=PartitionSpec(ebatch, None, eout),
         zpre_spec=PartitionSpec(ebatch, erank),
+        bias_a_spec=PartitionSpec(erank),
+        bias_b_spec=PartitionSpec(eout),
         in_axes=_entry_axes(ein),
         rank_axes=_entry_axes(erank),
         out_axes=_entry_axes(eout),
         batch_axes=_entry_axes(ebatch),
+        seq_axes=_entry_axes(eseq),
     )
 
 
 def cola_ae_collective_bytes(env: MeshEnv, part: ColaAePartition, T: int,
                              d_in: int, r: int, d_out: int, *,
                              bytes_el: int = 2) -> int:
-    """Modeled all-reduce wire bytes for one fwd+bwd of a sharded fused AE
-    site (ring all-reduce: ``2(n-1)/n ×`` payload per psum).
+    """Modeled collective wire bytes for one fwd+bwd of a sharded fused AE
+    site (ring collectives: ``2(n-1)/n ×`` payload per all-reduce,
+    ``(n-1)/n ×`` per all-gather / reduce-scatter).
 
     Per profile and site this reproduces the design counts: ``baseline``
     pays a (T, d_out) psum in fwd and a (T, d_in) psum in bwd at *every*
     site (7×2/block — the naive port); ``megatron`` pays one f32 (T, r)
     psum per site — fwd at row-parallel sites (o/down: the 2-all-reduce/
-    block exits), bwd at column-parallel sites (qkv/gate/up) — r-dim, so
-    ~d/r cheaper than baseline's; ``fsdp`` pays none.  The dA/dB psums over
+    block exits, now placed between the stage kernels), bwd at column-
+    parallel sites (qkv/gate/up, between bwd_dzl and σ′) — r-dim, so ~d/r
+    cheaper than baseline's; ``fsdp`` pays none.  The sequence-parallel
+    entry adds two x all-gathers (fwd + the bwd recompute gather); when the
+    dx psum rides the same axes as the seq shard, the exit is a
+    reduce-scatter at half the all-reduce wire cost.  The dA/dB psums over
     the batch axes are excluded: they are the per-site slice of the data-
     parallel gradient all-reduce every strategy pays identically.  Token
     psum payloads are the per-device **local** token count (T divided by
     the batch-axes product): inside shard_map each device all-reduces only
     its own token shard.
     """
+    def _n(axes: Tuple[str, ...]) -> int:
+        return int(np.prod([env.axis_size(a) for a in axes])) if axes else 1
+
     def ring(axes: Tuple[str, ...], payload: int) -> int:
-        n = int(np.prod([env.axis_size(a) for a in axes])) if axes else 1
+        n = _n(axes)
         return 0 if n <= 1 else int(2 * (n - 1) / n * payload)
 
-    t_loc = T // (int(np.prod([env.axis_size(a) for a in part.batch_axes]))
-                  if part.batch_axes else 1)
-    return (ring(part.in_axes, 4 * t_loc * r)         # fwd psum of z_pre
+    def half_ring(axes: Tuple[str, ...], payload: int) -> int:
+        n = _n(axes)
+        return 0 if n <= 1 else int((n - 1) / n * payload)
+
+    t_loc = T // _n(part.batch_axes)
+    if part.rank_axes and part.seq_axes == part.rank_axes:
+        # bwd dx: psum_scatter instead of psum-then-slice
+        dx_bytes = half_ring(part.rank_axes, bytes_el * t_loc * d_in)
+    else:
+        dx_bytes = ring(part.rank_axes, bytes_el * t_loc * d_in)
+    return (2 * half_ring(part.seq_axes, bytes_el * t_loc * d_in)  # x gathers
+            + ring(part.in_axes, 4 * t_loc * r)       # fwd psum of z_pre
             + ring(part.rank_axes, bytes_el * t_loc * d_out)  # fwd: out
-            + ring(part.rank_axes, bytes_el * t_loc * d_in)   # bwd: dx
+            + dx_bytes                                # bwd: dx
             + ring(part.out_axes, 4 * t_loc * r))     # bwd psum of g·Bᵀ

@@ -62,3 +62,22 @@ def act_grad(z, mode: str):
     if mode == "none":
         return jnp.ones_like(z)
     raise ValueError(mode)
+
+
+def act_pair(z, mode: str):
+    """(σ(z), dσ/dz) sharing the transcendental subexpressions — the
+    sigmoid (silu) / erf cdf (gelu) is evaluated once for both.  Used by
+    kernel bodies and the unfused backward, which need z and dz together."""
+    if mode == "silu":
+        s = jax.nn.sigmoid(z)
+        return z * s, s * (1.0 + z * (1.0 - s))
+    if mode == "gelu":
+        cdf = 0.5 * (1.0 + jax.lax.erf(z * _INV_SQRT2))
+        pdf = _INV_SQRT2PI * jnp.exp(-0.5 * z * z)
+        return z * cdf, cdf + z * pdf
+    if mode == "relu":
+        pos = z > 0
+        return jnp.where(pos, z, jnp.zeros_like(z)), pos.astype(z.dtype)
+    if mode == "none":
+        return z, jnp.ones_like(z)
+    raise ValueError(mode)

@@ -1,17 +1,29 @@
-"""Fused CoLA auto-encoder Pallas kernels: out = B · σ(A · x), fwd **and** bwd.
+"""CoLA auto-encoder Pallas kernels: out = B · σ(A · x), fwd **and** bwd.
 
-The paper's core op (Eq. 3) as TPU kernels.  The r-dimensional bottleneck
-``z = σ(Ax)`` lives **entirely in VMEM scratch** — it never round-trips to
-HBM at full width, so the AE pair's HBM traffic drops from
-``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight tiles and one
-r-dim residual (DESIGN.md §2: the paper's activation-residency idea pushed
-one level down the memory hierarchy).
+The paper's core op (Eq. 3) as TPU kernels, in two flavors the ops-layer
+planner (ops.py) composes per site:
 
-Forward
--------
+* the **monolithic** fused kernel — one launch computes both GEMMs with the
+  r-dimensional bottleneck ``z = σ(Ax)`` living entirely in VMEM scratch
+  (it never round-trips HBM at full width), so the AE pair's HBM traffic
+  drops from ``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight
+  tiles and one r-dim residual.  Fastest path, but it stages A and B
+  *whole* in VMEM and cannot admit a collective between the A-GEMM and σ;
+* the **two-stage pipeline** — ``cola_ae_stage_a`` (x·A → z_pre, f32) and
+  ``cola_ae_stage_b`` (σ(z_pre)·B [+ bias] → out), each with a **weight-
+  grid dimension** that tiles d_in/d_out so weights stream through VMEM in
+  blocks instead of requiring whole-weight residency.  One extra f32 (T, r)
+  z_pre round-trip buys three things the monolith cannot give: sites whose
+  local weights exceed VMEM (internlm2 down-proj), a seam for the
+  row-parallel ``psum`` of z_pre between the A-GEMM and σ (megatron
+  o/down — previously XLA math), and a fused bias add in the stage-B body
+  (qwen2 qkv, whisper MLP — previously unfused).
+
+Monolithic forward
+------------------
 Grid: (T/bt, d_out/bo), TPU iterates the last dim innermost, so for each
 token tile the z-scratch is computed once (at j == 0) and reused across all
-d_out tiles.  The scratch now holds the f32 **pre-activation** ``z_pre``
+d_out tiles.  The scratch holds the f32 **pre-activation** ``z_pre``
 (σ is re-applied per output tile — (bt, r) VPU work, free next to the MXU
 GEMMs) and, when training, ``z_pre`` is emitted as a second output: the only
 extra HBM write the fused training path makes, and exactly the
@@ -19,8 +31,8 @@ extra HBM write the fused training path makes, and exactly the
 MXU alignment: bt/bo multiples of 128 (Mosaic pads r < 128 — whisper's
 r=96 — with the padding loss quantified in the roofline).
 
-Backward (two kernels; per-tile traffic model)
-----------------------------------------------
+Monolithic backward (two kernels)
+---------------------------------
 ``dx`` kernel, grid (T/bt, d_in/bi), d_in innermost:
     reads per token tile: g (bt·d_out) + z_pre (4·bt·r), plus B whole and
     A blocked (bi, r) per step; writes dx (bt·bi) per step.
@@ -36,29 +48,56 @@ Backward (two kernels; per-tile traffic model)
     (r, d_out) grad blocks stay resident in VMEM across all token tiles and
     are written to HBM exactly once.
 
-VMEM budget (honest accounting).  These kernels stage A and B *whole* into
-VMEM via full-array BlockSpecs — the inner ``pl.ds`` loops slice the
-VMEM-resident block for MXU sizing, they do not block the HBM copy.  That
-bounds the sites the fused path can serve: ``weights_fit_vmem`` models the
-residency (weights + per-step token tiles + f32 scratch ≤ FWD_VMEM_BUDGET)
-and the ops layer falls back to the unfused XLA math when it fails — e.g.
-the internlm2 down-proj (d_in=16384, r=1536, d_out=6144: A alone is 50 MB
-bf16) is out of reach until the weights gain their own grid dimension
-(future work).  The dA/dB kernel additionally keeps both f32 grad blocks
-resident; ``dw_fits_vmem`` budgets grads + B + token tiles against
-DW_VMEM_BUDGET and the ops layer keeps the fused dx kernel while taking
-XLA GEMMs for dA/dB when it fails (the r-dim residency story is unchanged:
-every fallback consumes the same (x, z_pre) residuals).
+Two-stage pipeline (weight-grid tiling)
+---------------------------------------
+Every stage kernel carries a weight-grid dimension whose block size is
+chosen per call by ``_fit_block`` so the *per-tile* residency fits the
+budget — ``weights_fit_vmem``/``dw_fits_vmem`` gate only the monolithic
+fast path now; the staged kernels admit any site by shrinking their weight
+blocks:
 
-Tensor parallelism changes the budget arithmetic in the kernels' favor:
-``ops.cola_ae_sharded`` resolves impl *inside* the shard_map body, so both
-guards receive the per-device **local** shapes.  A site whose whole weights
-overflow the budget can take the fused path once its rank dim (``baseline``
-profile) or output dim (``megatron``) is sharded — e.g. a (2048, 2048,
-2048) bf16 site is 16.8 MB of whole weights unsharded but ~1 MB of A+B per
-device on a 16-way rank shard.  The internlm2 down-proj still needs the
-future weight-grid dimension: its d_in/d_out token tiles dominate and those
-dims are not sharded by any current profile.
+* ``cola_ae_stage_a``   grid (T/bt, d_in/bi): A streams in (bi, r) blocks;
+  the f32 z_pre output block (bt, r) is revisited across the d_in grid and
+  accumulates partial GEMMs (same revisited-output trick as the dA/dB
+  kernel), flushed to HBM once per token tile.
+* ``cola_ae_stage_b``   grid (T/bt, d_out/bo): B streams in (r, bo)
+  blocks; σ is recomputed per output tile from the VMEM-resident z_pre
+  tile, and an optional (1, bo) f32 bias block is folded into the body.
+* ``cola_ae_bwd_dzl``   grid (T/bt, d_out/bo): ``dzl = g·Bᵀ`` accumulated
+  over d_out blocks into a revisited (bt, r) f32 output — the stage-B
+  backward; its HBM materialization is the seam for the column-parallel
+  psum.
+* ``cola_ae_bwd_dx_staged`` grid (T/bt, d_in/bi): fuses
+  ``dz = dzl ⊙ σ′(z_pre)`` into scratch at j == 0, then ``dx = dz·Aᵀ``
+  against streamed A blocks — the stage-A input backward.
+* ``cola_ae_bwd_da``    grid (d_in/bi, T/bt), tokens innermost: recomputes
+  dz per token tile and accumulates ``dA += xᵀ·dz`` into a revisited
+  (bi, r) f32 block; x streams in (bt, bi) tiles, so no full-width token
+  tile is ever resident.
+* ``cola_ae_bwd_db``    grid (d_out/bo, T/bt): recomputes σ(z_pre) per
+  token tile and accumulates ``dB += σ(z_pre)ᵀ·g`` into a revisited
+  (r, bo) f32 block.
+
+The streamed dA/dB pair replaces the old XLA-GEMM fallback for sites whose
+f32 grad blocks exceed DW_VMEM_BUDGET: over-budget sites now stay on
+Pallas with smaller weight blocks instead of leaving the fused path.
+
+VMEM budgets (honest accounting).  The monolithic kernels stage A and B
+whole via full-array BlockSpecs — ``weights_fit_vmem`` models that
+residency (weights + per-step token tiles + f32 scratch ≤ FWD_VMEM_BUDGET)
+and the planner takes the two-stage pipeline when it fails, e.g. the
+internlm2 down-proj (d_in=16384, r=1536, d_out=6144: A alone is 50 MB
+bf16).  ``dw_fits_vmem`` budgets the monolithic dA/dB kernel (both f32
+grad blocks + B whole + full-width token tiles ≤ DW_VMEM_BUDGET); over
+budget, the backward streams through bwd_dzl/bwd_da/bwd_db instead.
+
+Tensor parallelism still shifts the arithmetic in the monolith's favor:
+``ops.cola_ae_sharded`` resolves the plan *inside* the shard_map body, so
+the guards receive the per-device **local** shapes — a rank- (baseline) or
+output-sharded (megatron) site can take the monolith once sharded.  Sites
+that need a mid-pipeline collective (row-parallel z_pre psum, column-
+parallel dzl psum) take the two-stage path regardless of size, which is
+what makes megatron row-parallel sites fully fused for the first time.
 """
 from __future__ import annotations
 
@@ -120,16 +159,59 @@ def _pick_block(d: int, cap: int = 1024) -> int:
     return max(b, 1)
 
 
-def _pick_tiles(T: int, d_in: int, r: int, d_out: int):
+def _pick_bt(T: int) -> int:
+    """Token tile: 128 grown to ≤512 while it divides T (callers pad)."""
     bt = 128
     while bt * 2 <= min(T, 512) and T % (bt * 2) == 0:
         bt *= 2
+    return bt
+
+
+def _pick_tiles(T: int, d_in: int, r: int, d_out: int):
+    bt = _pick_bt(T)
     # bo must divide d_out — a non-dividing tile would silently truncate
     # the grid and leave output columns unwritten.
     bo = _pick_block(d_out, 128)
     while bo * 2 <= min(d_out, 512) and d_out % (bo * 2) == 0:
         bo *= 2
     return bt, bo, _pick_block(d_in, 1024)
+
+
+def _fit_block(d: int, per_unit_bytes: int, fixed_bytes: int,
+               budget: int, cap: int = 512) -> int:
+    """Weight-grid block size: the largest power-of-two divisor of ``d``
+    (≤ cap) whose per-tile residency ``fixed + block·per_unit`` fits the
+    budget.  Floors at the smallest dividing power of two ≥ 8 (MXU sublane
+    minimum) — best effort: a floor-sized block over a tiny forced budget
+    still streams, it just double-buffers less."""
+    blk = _pick_block(d, cap)
+    while blk > 8 and blk % 2 == 0 and \
+            fixed_bytes + blk * per_unit_bytes > budget:
+        blk //= 2
+    return blk
+
+
+def _pick_dw_tiles(T: int, d: int, r: int, bytes_el: int,
+                   fixed_per_bt: int, budget: int):
+    """(bt, blk) for the streamed dA/dB kernels, minimizing weight passes.
+
+    Each pass over the weight grid re-reads the f32 r-dim tiles (dzl,
+    z_pre) in full — the dominant streamed-path traffic term — so a
+    *smaller* token tile that frees VMEM for a larger weight block is
+    usually the right trade: the fixed cost scales with bt, the pass count
+    with d/blk.  Scans bt ∈ {128, 256, 512}, picks the fewest passes
+    (largest bt on ties, for longer MXU runs)."""
+    best = None
+    for bt in (512, 256, 128):
+        if bt > max(_pick_bt(T), 128):
+            continue
+        blk = _fit_block(d, bytes_el * bt + 4 * r, fixed_per_bt * bt,
+                         budget)
+        passes = -(-d // blk)
+        if best is None or passes < best[0]:
+            best = (passes, bt, blk)
+    _, bt, blk = best
+    return bt, blk
 
 
 def _pad_tokens(arrs, bt: int):
@@ -188,6 +270,299 @@ def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
 
 def _drop_zout(kernel, x_ref, a_ref, b_ref, out_ref, z_ref, **kw):
     kernel(x_ref, a_ref, b_ref, out_ref, None, z_ref)
+
+
+# --------------------------------------------------------------------------
+# two-stage pipeline: stage A (x·A → z_pre) / stage B (σ(z_pre)·B + bias)
+# with weight-grid tiling — weights stream through VMEM in blocks.
+# --------------------------------------------------------------------------
+def _stage_a_kernel(x_ref, a_ref, zp_ref):
+    """x_ref: (bt, bi); a_ref: (bi, r); zp_ref: (bt, r) f32 — revisited
+    across the d_in grid dim (innermost), accumulating partial GEMMs."""
+    j = pl.program_id(1)
+    acc = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        zp_ref[...] = acc
+
+    @pl.when(j > 0)
+    def _accum():
+        zp_ref[...] += acc
+
+
+def cola_ae_stage_a(x: jax.Array, a: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """x: (T, d_in); a: (d_in, r) → z_pre = x·A (T, r) f32.
+
+    A streams in (bi, r) blocks sized by ``_fit_block`` against
+    FWD_VMEM_BUDGET, so no whole-weight residency is ever required.
+    """
+    T, d_in = x.shape
+    r = a.shape[1]
+    e = jnp.dtype(x.dtype).itemsize
+    bt = _pick_bt(T)
+    # per-tile residency: zp f32 (fixed) + x tile col + A row per bi unit
+    bi = _fit_block(d_in, per_unit_bytes=e * (bt + r),
+                    fixed_bytes=4 * bt * r, budget=FWD_VMEM_BUDGET)
+    (x,), pad_t = _pad_tokens([x], bt)
+    Tp = x.shape[0]
+    zp = pl.pallas_call(
+        _stage_a_kernel,
+        grid=(Tp // bt, d_in // bi),
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, r), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+    return zp[:T] if pad_t else zp
+
+
+def _stage_b_kernel(zp_ref, b_ref, *rest, sigma: str, has_bias: bool):
+    """zp_ref: (bt, r) f32; b_ref: (r, bo); bias_ref: (1, bo) f32 when
+    has_bias; out_ref: (bt, bo).  σ recomputed per output tile (VPU)."""
+    bias_ref, out_ref = rest if has_bias else (None, rest[0])
+    z = _act.apply_act(zp_ref[...], sigma).astype(b_ref.dtype)
+    acc = jnp.dot(z, b_ref[...], preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + bias_ref[...]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def cola_ae_stage_b(z_pre: jax.Array, b: jax.Array,
+                    bias: "jax.Array | None" = None, *, sigma=True,
+                    out_dtype=None, interpret: bool = False) -> jax.Array:
+    """z_pre: (T, r) f32; b: (r, d_out); bias: (d_out,) or None
+    → out = σ(z_pre)·B [+ bias] (T, d_out).
+
+    B streams in (r, bo) blocks; the bias add is fused into the body as an
+    f32 (1, bo) block per output tile — bias-carrying AE sites stay on the
+    fused path.
+    """
+    sigma = _act.canon(sigma)
+    T, r = z_pre.shape
+    d_out = b.shape[1]
+    out_dtype = out_dtype or b.dtype
+    e = jnp.dtype(b.dtype).itemsize
+    bt = _pick_bt(T)
+    bo = _fit_block(d_out, per_unit_bytes=e * (r + bt) + 4,
+                    fixed_bytes=4 * bt * r, budget=FWD_VMEM_BUDGET)
+    (z_pre,), pad_t = _pad_tokens([z_pre], bt)
+    Tp = z_pre.shape[0]
+    in_specs = [
+        pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+        pl.BlockSpec((r, bo), lambda i, j: (0, j)),
+    ]
+    args = (z_pre, b)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, j: (0, j)))
+        args += (bias.astype(jnp.float32).reshape(1, d_out),)
+    out = pl.pallas_call(
+        functools.partial(_stage_b_kernel, sigma=sigma,
+                          has_bias=bias is not None),
+        grid=(Tp // bt, d_out // bo),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:T] if pad_t else out
+
+
+def _bwd_dzl_kernel(g_ref, b_ref, dzl_ref):
+    """g_ref: (bt, bo); b_ref: (r, bo); dzl_ref: (bt, r) f32 revisited
+    across the d_out grid dim, accumulating ``g·Bᵀ`` partials."""
+    j = pl.program_id(1)
+    # (bt, bo) · (r, bo)ᵀ — contract over d_out without transpose
+    acc = jax.lax.dot_general(
+        g_ref[...], b_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        dzl_ref[...] = acc
+
+    @pl.when(j > 0)
+    def _accum():
+        dzl_ref[...] += acc
+
+
+def cola_ae_bwd_dzl(g: jax.Array, b: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """g: (T, d_out) cotangent; b: (r, d_out) → dzl = g·Bᵀ (T, r) f32.
+
+    The stage-B backward.  Materializing dzl to HBM is the split path's
+    deliberate extra round-trip: it is the seam where the column-parallel
+    ``psum`` runs before σ′ is applied (ops._bwd_exec).
+    """
+    T, d_out = g.shape
+    r = b.shape[0]
+    e = jnp.dtype(g.dtype).itemsize
+    bt = _pick_bt(T)
+    bo = _fit_block(d_out, per_unit_bytes=e * (bt + r),
+                    fixed_bytes=4 * bt * r, budget=FWD_VMEM_BUDGET)
+    (g,), pad_t = _pad_tokens([g], bt)
+    Tp = g.shape[0]
+    dzl = pl.pallas_call(
+        _bwd_dzl_kernel,
+        grid=(Tp // bt, d_out // bo),
+        in_specs=[
+            pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
+            pl.BlockSpec((r, bo), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, r), jnp.float32),
+        interpret=interpret,
+    )(g, b)
+    return dzl[:T] if pad_t else dzl
+
+
+def _bwd_dx_staged_kernel(dzl_ref, zp_ref, a_ref, out_ref, dz_ref, *,
+                          sigma: str):
+    """dzl_ref/zp_ref: (bt, r) f32; a_ref: (bi, r); out_ref: (bt, bi);
+    dz_ref (scratch): (bt, r) f32.  At j == 0 fuses dz = dzl ⊙ σ′(z_pre);
+    every j computes dx = dz·Aᵀ against the streamed A block."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _compute_dz():
+        dz_ref[...] = dzl_ref[...] * _act.act_grad(zp_ref[...], sigma)
+
+    dz = dz_ref[...].astype(a_ref.dtype)
+    # (bt, r) · (bi, r)ᵀ — contract over r
+    out_ref[...] = jax.lax.dot_general(
+        dz, a_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def cola_ae_bwd_dx_staged(dzl: jax.Array, z_pre: jax.Array, a: jax.Array,
+                          *, sigma=True, out_dtype=None,
+                          interpret: bool = False) -> jax.Array:
+    """dzl: (T, r) f32 (post-psum at column-parallel sites); z_pre: (T, r)
+    f32; a: (d_in, r) → dx (T, d_in).  A streams in (bi, r) blocks."""
+    sigma = _act.canon(sigma)
+    T, r = dzl.shape
+    d_in = a.shape[0]
+    out_dtype = out_dtype or a.dtype
+    e = jnp.dtype(a.dtype).itemsize
+    bt = _pick_bt(T)
+    bi = _fit_block(d_in, per_unit_bytes=e * (r + bt),
+                    fixed_bytes=12 * bt * r, budget=FWD_VMEM_BUDGET)
+    (dzl, z_pre), pad_t = _pad_tokens([dzl, z_pre], bt)
+    Tp = dzl.shape[0]
+    dx = pl.pallas_call(
+        functools.partial(_bwd_dx_staged_kernel, sigma=sigma),
+        grid=(Tp // bt, d_in // bi),
+        in_specs=[
+            pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_in), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
+        interpret=interpret,
+    )(dzl, z_pre, a)
+    return dx[:T] if pad_t else dx
+
+
+def _bwd_da_kernel(x_ref, dzl_ref, zp_ref, da_ref, *, sigma: str):
+    """x_ref: (bt, bi); dzl_ref/zp_ref: (bt, r) f32; da_ref: (bi, r) f32
+    revisited across the token grid dim (innermost), accumulating
+    ``dA += xᵀ·dz`` with dz recomputed per token tile (VPU, r-dim)."""
+    k = pl.program_id(1)
+    dz = (dzl_ref[...] * _act.act_grad(zp_ref[...], sigma)
+          ).astype(x_ref.dtype)
+    # contract over the token tile dim (0, 0)
+    upd = jax.lax.dot_general(
+        x_ref[...], dz, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        da_ref[...] = upd
+
+    @pl.when(k > 0)
+    def _accum():
+        da_ref[...] += upd
+
+
+def cola_ae_bwd_da(x: jax.Array, dzl: jax.Array, z_pre: jax.Array, *,
+                   sigma=True, interpret: bool = False) -> jax.Array:
+    """x: (T, d_in); dzl/z_pre: (T, r) f32 → dA = xᵀ·dz (d_in, r) f32.
+
+    Grid (d_in/bi, T/bt), tokens innermost: x streams in (bt, bi) tiles —
+    no full-width token tile is ever VMEM-resident, so over-DW-budget
+    sites (internlm2 down-proj) stay on the fused path.
+    """
+    sigma = _act.canon(sigma)
+    T, d_in = x.shape
+    r = dzl.shape[1]
+    e = jnp.dtype(x.dtype).itemsize
+    bt, bi = _pick_dw_tiles(T, d_in, r, e, fixed_per_bt=8 * r,
+                            budget=DW_VMEM_BUDGET)
+    (x, dzl, z_pre), pad_t = _pad_tokens([x, dzl, z_pre], bt)
+    Tp = x.shape[0]
+    return pl.pallas_call(
+        functools.partial(_bwd_da_kernel, sigma=sigma),
+        grid=(d_in // bi, Tp // bt),
+        in_specs=[
+            pl.BlockSpec((bt, bi), lambda i, k: (k, i)),
+            pl.BlockSpec((bt, r), lambda i, k: (k, 0)),
+            pl.BlockSpec((bt, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, r), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_in, r), jnp.float32),
+        interpret=interpret,
+    )(x, dzl, z_pre)
+
+
+def _bwd_db_kernel(zp_ref, g_ref, db_ref, *, sigma: str):
+    """zp_ref: (bt, r) f32; g_ref: (bt, bo); db_ref: (r, bo) f32 revisited
+    across the token grid dim, accumulating ``dB += σ(z_pre)ᵀ·g``."""
+    k = pl.program_id(1)
+    z = _act.apply_act(zp_ref[...], sigma).astype(g_ref.dtype)
+    upd = jax.lax.dot_general(
+        z, g_ref[...], dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        db_ref[...] = upd
+
+    @pl.when(k > 0)
+    def _accum():
+        db_ref[...] += upd
+
+
+def cola_ae_bwd_db(z_pre: jax.Array, g: jax.Array, *, sigma=True,
+                   interpret: bool = False) -> jax.Array:
+    """z_pre: (T, r) f32; g: (T, d_out) → dB = σ(z_pre)ᵀ·g (r, d_out) f32.
+
+    Grid (d_out/bo, T/bt), tokens innermost; g streams in (bt, bo) tiles.
+    """
+    sigma = _act.canon(sigma)
+    T, d_out = g.shape
+    r = z_pre.shape[1]
+    e = jnp.dtype(g.dtype).itemsize
+    bt, bo = _pick_dw_tiles(T, d_out, r, e, fixed_per_bt=4 * r,
+                            budget=DW_VMEM_BUDGET)
+    (z_pre, g), pad_t = _pad_tokens([z_pre, g], bt)
+    Tp = g.shape[0]
+    return pl.pallas_call(
+        functools.partial(_bwd_db_kernel, sigma=sigma),
+        grid=(d_out // bo, Tp // bt),
+        in_specs=[
+            pl.BlockSpec((bt, r), lambda i, k: (k, 0)),
+            pl.BlockSpec((bt, bo), lambda i, k: (k, i)),
+        ],
+        out_specs=pl.BlockSpec((r, bo), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, d_out), jnp.float32),
+        interpret=interpret,
+    )(z_pre, g)
 
 
 # --------------------------------------------------------------------------
@@ -272,8 +647,9 @@ def _bwd_dw_kernel(x_ref, g_ref, zp_ref, b_ref, da_ref, db_ref, *,
         0, n_o, body, jnp.zeros((g_ref.shape[0], b_ref.shape[0]),
                                 jnp.float32))
     dt = x_ref.dtype
-    dz = (dzl * _act.act_grad(zp, sigma)).astype(dt)
-    z = _act.apply_act(zp, sigma).astype(dt)
+    z32, dsig = _act.act_pair(zp, sigma)
+    dz = (dzl * dsig).astype(dt)
+    z = z32.astype(dt)
     # contract over the token tile dim (0, 0)
     da = jax.lax.dot_general(
         x_ref[...], dz, dimension_numbers=(((0,), (0,)), ((), ())),
@@ -329,9 +705,11 @@ def cola_ae_bwd_dw(x: jax.Array, g: jax.Array, z_pre: jax.Array,
 
 def weights_fit_vmem(d_in: int, r: int, d_out: int, *,
                      bytes_el: int = 2) -> bool:
-    """Whether the fwd/dx kernels' residency fits FWD_VMEM_BUDGET:
-    A and B whole, a worst-case token tile of x/g/out, and the f32
-    z scratch."""
+    """Whether the *monolithic* fwd/dx kernels' residency fits
+    FWD_VMEM_BUDGET: A and B whole, a worst-case token tile of x/g/out,
+    and the f32 z scratch.  Failing this no longer leaves the fused path —
+    the planner (ops._plan_fwd) takes the two-stage pipeline, whose
+    weight-grid tiles fit by construction (per-tile ``_fit_block``)."""
     resident = (bytes_el * (d_in * r + r * d_out)            # A + B whole
                 + _MAX_BT * bytes_el * (d_in + d_out)        # x/g + out tile
                 + _MAX_BT * 8 * r)                           # z_pre + dz f32
@@ -340,8 +718,10 @@ def weights_fit_vmem(d_in: int, r: int, d_out: int, *,
 
 def dw_fits_vmem(d_in: int, r: int, d_out: int, *,
                  bytes_el: int = 2) -> bool:
-    """Whether the dA/dB kernel's residency fits DW_VMEM_BUDGET: both f32
-    grad blocks, B whole, and a worst-case token tile of x/g/z_pre."""
+    """Whether the *monolithic* dA/dB kernel's residency fits
+    DW_VMEM_BUDGET: both f32 grad blocks, B whole, and a worst-case token
+    tile of x/g/z_pre.  Over budget, the backward streams through the
+    bwd_dzl/bwd_da/bwd_db kernels instead of falling back to XLA GEMMs."""
     resident = (4 * (d_in + d_out) * r                       # dA + dB f32
                 + bytes_el * r * d_out                       # B whole
                 + _MAX_BT * (bytes_el * (d_in + d_out) + 4 * r))
@@ -349,26 +729,66 @@ def dw_fits_vmem(d_in: int, r: int, d_out: int, *,
 
 
 # --------------------------------------------------------------------------
-# HBM traffic model (benchmarks/throughput_table.py `cola_ae_bwd` row)
+# HBM traffic model (benchmarks/throughput_table.py `cola_ae_*` rows)
 # --------------------------------------------------------------------------
 def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
-                bytes_el: int = 2, fused: bool = True) -> int:
+                bytes_el: int = 2, fused=True, path: str = None) -> int:
     """Modeled fwd+bwd HBM bytes for one AE site over T tokens.
 
-    fused: one fwd kernel (z_pre is the only extra write, f32), one dx
-    kernel (dz stays in VMEM), one dA/dB kernel (grads written once).
-    unfused: every XLA GEMM and the σ/σ′ element-wise ops round-trip their
-    full operands, including the (T, r) dzl/dz intermediates.  Weight grads
-    are written in f32 in both cases.
+    path (``fused`` kept as a legacy bool alias: True → 'monolith',
+    False → 'unfused'):
+
+    * ``monolith`` — one fwd kernel (z_pre is the only extra write, f32),
+      one dx kernel (dz stays in VMEM), one dA/dB kernel (grads written
+      once).  Weights counted once: A's index map is constant and B's
+      revisits are consecutive per token tile (double-buffered).
+    * ``staged``  — the two-stage pipeline.  Two extra costs vs the
+      monolith, both deliberate: the f32 z_pre/dzl round-trips between
+      stages (the collective/bias seam), and weight *re-streaming* — each
+      stage re-reads its streamed weight once per token tile (n_t =
+      ⌈T/bt⌉ passes), the price of dropping whole-weight residency.  The
+      dA/dB kernels conversely re-read the r-dim dzl/z_pre once per
+      weight block (n_wi/n_wo passes) while reading x/g exactly once.
+    * ``unfused`` — every XLA GEMM and the σ/σ′ element-wise ops round-
+      trip their full operands, including the (T, r) dzl/dz
+      intermediates.  Weight grads are written in f32 in all cases.
+
+    Read the comparison honestly: the monolith strictly beats the split
+    (the split's whole point is sites the monolith cannot serve), and the
+    split's *modeled* bytes can exceed the unfused model's because the two
+    models are not symmetric — the staged model charges every real
+    re-stream, while the unfused model charges each XLA GEMM operand once
+    (an infinite-cache ideal; real XLA tiling re-streams too, it just
+    doesn't tell you).  The split's wins are structural: σ/σ′ and the
+    elementwise products never round-trip at full precision as separate
+    ops, six launches replace ~12 XLA ops, per-tile VMEM residency is
+    bounded for *any* site, and the z_pre/dzl HBM materializations are
+    exactly the seams where the TP collectives and bias adds fuse.
     """
+    if path is None:
+        path = "monolith" if fused else "unfused"
+    e = bytes_el
     w = d_in * r + r * d_out          # weight elements
     zp32 = 4 * T * r                  # f32 z_pre residual
-    if fused:
-        fwd = bytes_el * (T * d_in + w + T * d_out) + zp32
-        bwd_dx = bytes_el * (T * d_out + w + T * d_in) + zp32
-        bwd_dw = bytes_el * (T * d_in + T * d_out + r * d_out) + zp32 + 4 * w
+    if path == "monolith":
+        fwd = e * (T * d_in + w + T * d_out) + zp32
+        bwd_dx = e * (T * d_out + w + T * d_in) + zp32
+        bwd_dw = e * (T * d_in + T * d_out + r * d_out) + zp32 + 4 * w
         return fwd + bwd_dx + bwd_dw
-    e = bytes_el
+    if path == "staged":
+        bt = _pick_bt(T)
+        n_t = -(-T // bt)             # weight re-streams, one per token tile
+        _, bi = _pick_dw_tiles(T, d_in, r, e, 8 * r, DW_VMEM_BUDGET)
+        _, bo = _pick_dw_tiles(T, d_out, r, e, 4 * r, DW_VMEM_BUDGET)
+        n_wi = -(-d_in // bi)         # dA passes re-reading dzl + z_pre
+        n_wo = -(-d_out // bo)        # dB passes re-reading z_pre
+        stage_a = e * T * d_in + n_t * e * d_in * r + zp32
+        stage_b = zp32 + n_t * e * r * d_out + e * T * d_out
+        bwd_dzl = e * T * d_out + n_t * e * r * d_out + zp32
+        bwd_dx = 2 * zp32 + n_t * e * d_in * r + e * T * d_in
+        bwd_da = e * T * d_in + n_wi * 2 * zp32 + 4 * d_in * r
+        bwd_db = n_wo * zp32 + e * T * d_out + 4 * r * d_out
+        return stage_a + stage_b + bwd_dzl + bwd_dx + bwd_da + bwd_db
     fwd = (e * (T * d_in + d_in * r) + zp32          # x·A → z_pre
            + 2 * zp32 + e * T * r                    # σ: read z_pre, write z
            + e * (T * r + r * d_out + T * d_out))    # z·B → out

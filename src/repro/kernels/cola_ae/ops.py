@@ -1,49 +1,67 @@
-"""jit'd wrapper for the fused CoLA auto-encoder with custom VJP.
+"""jit'd wrappers for the fused CoLA auto-encoder with custom VJPs, plus
+the **stage planner** that picks how each site executes.
 
-Forward: the Pallas kernel (or ref off-TPU).  The VJP saves only
-(x, z_pre) where z_pre = A·x is r-dimensional — the CoLA-M residency recipe
-at kernel level; σ and both grad GEMMs are evaluated from those:
+Every entry point resolves to one of three plans (pure function of shapes,
+bias presence, and whether a collective must run mid-pipeline — forward and
+backward agree by construction):
+
+* ``monolith`` — the single fused kernel (kernel.cola_ae_fwd + the fused
+  bwd pair).  Fast path: weights stay whole in VMEM, z_pre never leaves
+  the chip except as the (T, r) residual.  Requires
+  ``kernel.weights_fit_vmem``, no bias, and no mid-pipeline collective.
+* ``staged``   — the two-stage pipeline: ``stage_a`` (x·A → z_pre, f32)
+  → optional z_pre ``psum`` (megatron row-parallel) → optional bias_a add
+  → ``stage_b`` (σ·B + bias_b).  Backward mirrors it: ``bwd_dzl``
+  (g·Bᵀ) → optional ``psum`` (megatron column-parallel) → ``bwd_dx_staged``
+  ‖ ``bwd_da`` ‖ ``bwd_db``.  Weight-grid tiling means *any* site fits —
+  over-VMEM sites (internlm2 down-proj), bias sites (qwen2 qkv, whisper
+  MLP), and collective-split sites all stay fused.
+* ``ref``      — plain XLA math; the off-TPU/interpret oracle only.
+
+Both fused plans save only ``(x, z_pre)`` where z_pre = A·x [+ bias_a] is
+r-dimensional — the CoLA-M residency recipe at kernel level; σ and the
+grad GEMMs are evaluated from those:
 
     dz = (g · Bᵀ) ⊙ σ'(z_pre);  dx = dz · Aᵀ;  dA = xᵀ·dz;  dB = σ(z_pre)ᵀ·g
+    dbias_a = Σ_t dz;           dbias_b = Σ_t g
 
-On the Pallas path the forward kernel *emits* z_pre (its VMEM scratch) as a
-second output, so training issues exactly one A-GEMM — no recompute — and
-the backward runs as two fused kernels (kernel.cola_ae_bwd_dx /
-cola_ae_bwd_dw) in which the r-dim ``dz`` never round-trips HBM.  The
-unfused XLA math below (`_bwd_unfused`) is kept as the off-TPU/interpret
-reference and as the dA/dB fallback for sites whose f32 grad blocks exceed
-the VMEM budget (kernel.dw_fits_vmem).
+Composition with CoLA-M (core/colam.py): the custom VJP residuals are the
+same r-dim, ``cola_r``-named tensor the ``cola_m`` policy saves on the
+unfused path — identically for the monolith and the two-stage pipeline, so
+the remat policy needs no plan awareness; wrapping a fused block in
+``jax.checkpoint(save_only_these_names('cola_r'))`` simply replays the
+fused forward (one or two kernels) during backward.
 
-Composition with CoLA-M (core/colam.py): the unfused path tags its r-dim
-activation with ``checkpoint_name('cola_r')`` so the ``cola_m`` policy saves
-exactly that tensor.  The fused path achieves the same residency *without*
-the policy — its VJP residuals are already only (x, z_pre) — so wrapping a
-fused block in ``jax.checkpoint(save_only_these_names('cola_r'))`` simply
-replays the one fused forward kernel during backward (policies cannot see
-inside a custom_vjp); residency is minimal either way.
-
-Tensor parallelism (``cola_ae_sharded``): under a mesh with a nontrivial
-'model' axis the fused path no longer falls back — the same kernels run
-per-shard inside ``shard_map`` with a collective-aware custom VJP.  The
+Tensor parallelism (``cola_ae_sharded``): the kernels run per-shard inside
+``shard_map`` with explicit collectives placed *between* stages.  The
 partitioning is resolved per sharding profile by
 ``distributed.sharding.cola_ae_partition``:
 
-* ``baseline``  — the rank dim of A/B and of the z_pre residual shard over
+* ``baseline``  — rank dim of A/B and of the z_pre residual shard over
                   'model'; one psum at the B-GEMM output in fwd and one at
-                  ``dz·Aᵀ`` in bwd,
+                  ``dz·Aᵀ`` in bwd (a psum_scatter when the sequence dim
+                  re-shards, see below),
 * ``megatron``  — rank replicated; column-parallel sites (qkv/gate/up)
                   shard B's d_out with a bwd psum of the r-dim ``g·Bᵀ``
-                  partial, row-parallel sites (o/down) shard A's d_in with
-                  a fwd psum of z_pre between the A-GEMM and σ (the block-
-                  exit all-reduce, matching sharding.py's 2/block design) —
-                  those fwd A-GEMMs take XLA math because a collective
-                  cannot run between the fused kernel's two GEMMs,
+                  partial *between* bwd_dzl and the σ′ product;
+                  row-parallel sites (o/down) shard A's d_in with a fwd
+                  psum of z_pre *between* stage A and stage B — both run
+                  the Pallas stage kernels on each side of the collective
+                  (the old XLA-math row-parallel branch is gone),
 * ``fsdp``      — trivially local: kernels per batch shard, no collective.
 
-Because impl resolution happens *inside* the shard_map body, the VMEM
-guards (kernel.weights_fit_vmem / dw_fits_vmem) see the per-shard local
-shapes: a rank- or output-sharded site can take the fused path even when
-the unsharded weights would not fit.
+Sequence-parallel entry: when the profile seq-shards the residual stream
+('seq_save' over 'model') and the site's d_in is not itself model-sharded,
+``x_spec`` consumes x sequence-sharded and the body runs an explicit
+``all_gather`` fused ahead of the first stage-A token-tile load — the
+gather that GSPMD used to insert implicitly outside the shard_map now has
+an owner (DISPATCH['sharded_entry_allgather']).  The dx cotangent re-
+shards on exit: a single ``psum_scatter`` when the rank psum and the seq
+shard ride the same axes (baseline), a local slice otherwise.
+
+Because plan resolution happens *inside* the shard_map body, the monolith
+guards see the per-device local shapes: a rank- or output-sharded site can
+take the monolith even when the unsharded weights would not fit.
 """
 from __future__ import annotations
 
@@ -55,16 +73,16 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.cola_ae import act as _act
-from repro.kernels.cola_ae import ref as _ref
 
 # --------------------------------------------------------------------------
 # Dispatch accounting + test override
 # --------------------------------------------------------------------------
 # Trace-time counters: which path each AE site actually took.  Incremented
 # while tracing (once per eager call; once per compile under jit), so tests
-# can assert "the fused sharded path dispatched, no silent fallback".
+# can assert "the fused path dispatched, no silent fallback to XLA math".
 DISPATCH = collections.Counter()
 
 
@@ -76,15 +94,24 @@ _force = threading.local()
 
 
 @contextlib.contextmanager
-def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None):
-    """Override impl/interpret for every cola_ae entry point in scope.
+def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None,
+               plan: Optional[str] = None):
+    """Override impl/interpret/plan for every cola_ae entry point in scope.
 
     Lets CPU test harnesses drive the real Pallas kernels in interpret mode
     through code paths (model apply, shard_map bodies) that do not expose
-    the ``impl`` argument.
+    the ``impl`` argument.  ``plan`` pins the planner to 'monolith' or
+    'staged' (ignored where the plan is structurally impossible — bias or
+    mid-pipeline collective sites cannot take the monolith).
+
+    All three overrides act at *trace time*: they are resolved when a
+    cola_ae entry point is traced and baked into the custom_vjp's static
+    args.  A callable jitted and executed before entering this context
+    keeps its cached lowering — trace (or jit) inside the context, as the
+    tests do.
     """
-    prev = getattr(_force, "v", (None, None))
-    _force.v = (impl, interpret)
+    prev = getattr(_force, "v", (None, None, None))
+    _force.v = (impl, interpret, plan)
     try:
         yield
     finally:
@@ -92,221 +119,438 @@ def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None):
 
 
 def _apply_force(impl: str, interpret: bool) -> Tuple[str, bool]:
-    fi, fint = getattr(_force, "v", (None, None))
-    return (fi or impl), (interpret if fint is None else fint)
+    """Resolve the force_impl overrides at entry (= trace time).  The plan
+    override is *baked into* the returned impl string ("pallas:staged") so
+    it travels through the custom_vjp's static nondiff args and therefore
+    participates in jit cache keys — a jitted callable traced under
+    force_impl(plan=...) and one traced outside it lower separately."""
+    fi, fint, fplan = getattr(_force, "v", (None, None, None))
+    impl = fi or impl
+    if fplan is not None:
+        impl = f"{impl}:{fplan}"
+    return impl, (interpret if fint is None else fint)
+
+
+def _split_impl(impl: str) -> Tuple[str, Optional[str]]:
+    """'pallas:staged' -> ('pallas', 'staged'); 'pallas' -> ('pallas', None)."""
+    if ":" in impl:
+        base, plan = impl.split(":", 1)
+        return base, plan
+    return impl, None
 
 
 def _canon_impl(impl: str) -> str:
+    impl, _ = _split_impl(impl)
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
 
 
-def _resolve_impl(impl: str, a, b) -> str:
-    """Shape-aware dispatch: sites whose whole weights exceed the kernels'
-    VMEM residency (kernel.weights_fit_vmem) take the unfused path.  Pure
-    function of (impl, shapes) — forward and backward agree by construction.
-    """
+# --------------------------------------------------------------------------
+# The planner: shapes + structure -> 'monolith' | 'staged' | 'ref'
+# --------------------------------------------------------------------------
+def _plan(impl: str, a, b, *, needs_seam: bool) -> str:
+    """Shared plan resolution — one function so forward and backward agree
+    by construction.  ``needs_seam``: the pipeline must expose an HBM
+    materialization between the two GEMMs — a mid-pipeline collective
+    (row-parallel z_pre psum in fwd, column-parallel dzl psum in bwd) or a
+    bias fold/grad — which structurally excludes the monolith."""
+    _, forced = _split_impl(impl)
     impl = _canon_impl(impl)
     if impl != "pallas":
-        return impl
+        return "ref"
+    if needs_seam:
+        return "staged"
+    if forced in ("monolith", "staged"):
+        return forced
     from repro.kernels.cola_ae import kernel as _k
     d_in, r = a.shape
     d_out = b.shape[1]
     bytes_el = jnp.dtype(a.dtype).itemsize
-    return ("pallas"
+    return ("monolith"
             if _k.weights_fit_vmem(d_in, r, d_out, bytes_el=bytes_el)
-            else "ref")
+            else "staged")
 
 
-def _fwd_compute(x2d, a, b, sigma, impl, interpret):
-    if _resolve_impl(impl, a, b) == "pallas":
-        from repro.kernels.cola_ae import kernel as _k
-        return _k.cola_ae_fwd(x2d, a, b, sigma=sigma, interpret=interpret)
-    return _ref.cola_ae(x2d, a, b, sigma=sigma)
+def _plan_fwd(impl: str, a, b, *, has_bias: bool = False,
+              mid_psum: bool = False) -> str:
+    """Forward plan.  ``mid_psum``: a collective must run between the
+    A-GEMM and σ (row-parallel z_pre psum)."""
+    return _plan(impl, a, b, needs_seam=has_bias or mid_psum)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _cola_ae2d(x2d, a, b, sigma, impl, interpret):
-    return _fwd_compute(x2d, a, b, sigma, impl, interpret)
+def _plan_bwd(impl: str, a, b, *, want_dbias: bool = False,
+              mid_psum: bool = False) -> str:
+    """Backward plan.  ``mid_psum``: the r-dim ``g·Bᵀ`` partial must be
+    psummed before σ′ (column-parallel) — only the staged backward
+    materializes that seam; bias grads also need the materialized dzl."""
+    return _plan(impl, a, b, needs_seam=want_dbias or mid_psum)
 
 
-def _fwd_pair(x2d, a, b, sigma, impl, interpret, tag="fwd"):
-    """(out, z_pre) with one A-GEMM — the shared training forward of the
-    local custom VJP and of the shard_map body (where a/b/x2d are the
-    per-device shards, so _resolve_impl budgets against local shapes)."""
-    if _resolve_impl(impl, a, b) == "pallas":
+# --------------------------------------------------------------------------
+# Forward execution (shared by the local VJPs and the shard_map bodies —
+# under shard_map the args are per-device shards, so the planner budgets
+# against local shapes)
+# --------------------------------------------------------------------------
+def _fwd_exec(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
+              psum_zpre=None, tag="fwd"):
+    """(out, z_pre) with one A-GEMM — the shared training forward.
+
+    psum_zpre: optional collective applied to the partial z_pre between
+    stage A and σ (megatron row-parallel); its presence forces the
+    two-stage pipeline.  The saved z_pre is post-psum and post-bias_a, so
+    σ/σ′ recomputation in backward sees the true pre-activation.
+    """
+    plan = _plan_fwd(impl, a, b,
+                     has_bias=bias_a is not None or bias_b is not None,
+                     mid_psum=psum_zpre is not None)
+    if plan == "monolith":
         DISPATCH[f"{tag}_pallas"] += 1
+        DISPATCH[f"{tag}_monolith"] += 1
         from repro.kernels.cola_ae import kernel as _k
         # one kernel, one A-GEMM: z_pre comes out of the VMEM scratch
-        return _k.cola_ae_fwd(x2d, a, b, sigma=sigma,
+        return _k.cola_ae_fwd(x2, a, b, sigma=sigma,
                               interpret=interpret, return_zpre=True)
+    if plan == "staged":
+        DISPATCH[f"{tag}_pallas"] += 1
+        DISPATCH[f"{tag}_staged"] += 1
+        from repro.kernels.cola_ae import kernel as _k
+        z_pre = _k.cola_ae_stage_a(x2, a, interpret=interpret)
+        if psum_zpre is not None:
+            z_pre = psum_zpre(z_pre)
+        if bias_a is not None:
+            z_pre = z_pre + bias_a.astype(jnp.float32)
+        out = _k.cola_ae_stage_b(z_pre, b, bias_b, sigma=sigma,
+                                 out_dtype=x2.dtype, interpret=interpret)
+        return out, z_pre
     DISPATCH[f"{tag}_ref"] += 1
-    z_pre = jnp.dot(x2d, a.astype(x2d.dtype)).astype(jnp.float32)
-    z = _act.apply_act(z_pre, sigma).astype(x2d.dtype)
-    out = jnp.dot(z, b.astype(x2d.dtype))
+    z_pre = jnp.dot(x2, a.astype(x2.dtype)).astype(jnp.float32)
+    if psum_zpre is not None:
+        z_pre = psum_zpre(z_pre)
+    if bias_a is not None:
+        z_pre = z_pre + bias_a.astype(jnp.float32)
+    z = _act.apply_act(z_pre, sigma).astype(x2.dtype)
+    out = jnp.dot(z, b.astype(x2.dtype))
+    if bias_b is not None:
+        out = out + bias_b.astype(out.dtype)
     return out, z_pre
+
+
+def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret):
+    """Inference forward: no z_pre emitted/saved."""
+    plan = _plan_fwd(impl, a, b,
+                     has_bias=bias_a is not None or bias_b is not None,
+                     mid_psum=False)
+    if plan == "monolith":
+        from repro.kernels.cola_ae import kernel as _k
+        return _k.cola_ae_fwd(x2, a, b, sigma=sigma, interpret=interpret)
+    if plan == "staged":
+        from repro.kernels.cola_ae import kernel as _k
+        z_pre = _k.cola_ae_stage_a(x2, a, interpret=interpret)
+        if bias_a is not None:
+            z_pre = z_pre + bias_a.astype(jnp.float32)
+        return _k.cola_ae_stage_b(z_pre, b, bias_b, sigma=sigma,
+                                  out_dtype=x2.dtype, interpret=interpret)
+    from repro.kernels.cola_ae import ref as _ref
+    return _ref.cola_ae(x2, a, b, sigma=sigma, bias_a=bias_a, bias_b=bias_b)
+
+
+# --------------------------------------------------------------------------
+# Backward execution
+# --------------------------------------------------------------------------
+def _bwd_exec(sigma, impl, interpret, res, g, *, psum_dzl=None,
+              want_dbias=False):
+    """(dx, da, db[, dbias_a, dbias_b]) from the (x, z_pre) residuals.
+
+    psum_dzl: optional collective applied to the r-dim ``g·Bᵀ`` partial
+    before the σ′ product (megatron column-parallel) — forces the staged
+    backward, whose bwd_dzl kernel materializes exactly that seam.
+    """
+    x2, z_pre, a, b = res
+    g = g.astype(x2.dtype)
+    plan = _plan_bwd(impl, a, b, want_dbias=want_dbias,
+                     mid_psum=psum_dzl is not None)
+    if plan == "ref":
+        DISPATCH["bwd_ref"] += 1
+        return _bwd_unfused(sigma, x2, z_pre, a, b, g,
+                            psum_dzl=psum_dzl, want_dbias=want_dbias)
+    from repro.kernels.cola_ae import kernel as _k
+    if plan == "monolith":
+        DISPATCH["bwd_pallas"] += 1
+        DISPATCH["bwd_monolith"] += 1
+        dx = _k.cola_ae_bwd_dx(g, z_pre, a, b, sigma=sigma,
+                               interpret=interpret)
+        d_in, r = a.shape
+        d_out = b.shape[1]
+        if _k.dw_fits_vmem(d_in, r, d_out,
+                           bytes_el=jnp.dtype(a.dtype).itemsize):
+            da, db = _k.cola_ae_bwd_dw(x2, g, z_pre, b, sigma=sigma,
+                                       interpret=interpret)
+        else:
+            # grad blocks exceed VMEM: stream them through the weight-grid
+            # kernels (the old XLA-GEMM fallback is gone)
+            DISPATCH["bwd_dw_streamed"] += 1
+            dzl = _k.cola_ae_bwd_dzl(g, b, interpret=interpret)
+            da = _k.cola_ae_bwd_da(x2, dzl, z_pre, sigma=sigma,
+                                   interpret=interpret)
+            db = _k.cola_ae_bwd_db(z_pre, g, sigma=sigma,
+                                   interpret=interpret)
+        return dx, da, db
+    DISPATCH["bwd_pallas"] += 1
+    DISPATCH["bwd_staged"] += 1
+    dzl = _k.cola_ae_bwd_dzl(g, b, interpret=interpret)
+    if psum_dzl is not None:
+        dzl = psum_dzl(dzl)
+    dx = _k.cola_ae_bwd_dx_staged(dzl, z_pre, a, sigma=sigma,
+                                  out_dtype=x2.dtype, interpret=interpret)
+    da = _k.cola_ae_bwd_da(x2, dzl, z_pre, sigma=sigma, interpret=interpret)
+    db = _k.cola_ae_bwd_db(z_pre, g, sigma=sigma, interpret=interpret)
+    if not want_dbias:
+        return dx, da, db
+    # bias grads from the already-materialized r-dim seam: XLA reductions
+    # over (T, r)/(T, d_out) — no extra GEMM, no extra kernel
+    dba = (dzl * _act.act_grad(z_pre, sigma)).sum(axis=0)
+    dbb = g.astype(jnp.float32).sum(axis=0)
+    return dx, da, db, dba, dbb
+
+
+def _bwd_unfused(sigma, x2, z_pre, a, b, g, *, psum_dzl=None,
+                 want_dbias=False):
+    """Reference backward: XLA GEMMs from the (x, z_pre) residuals."""
+    dzl = jax.lax.dot_general(
+        g, b.astype(g.dtype), dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (T, r)
+    if psum_dzl is not None:
+        dzl = psum_dzl(dzl)
+    z32, dsig = _act.act_pair(z_pre.astype(jnp.float32), sigma)
+    dz = (dzl * dsig).astype(x2.dtype)
+    z = z32.astype(x2.dtype)
+    dx = jnp.dot(dz, a.T.astype(dz.dtype))
+    da = jnp.dot(x2.T, dz)
+    db = jnp.dot(z.T, g)
+    if not want_dbias:
+        return dx, da, db
+    return dx, da, db, (dzl * dsig).sum(axis=0), \
+        g.astype(jnp.float32).sum(axis=0)
+
+
+# --------------------------------------------------------------------------
+# Local custom VJPs (no mesh) — bias-free and bias-carrying variants
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _cola_ae2d(x2d, a, b, sigma, impl, interpret):
+    return _fwd_infer(x2d, a, b, None, None, sigma, impl, interpret)
 
 
 def _fwd2(x2d, a, b, sigma, impl, interpret):
     sigma = _act.canon(sigma)
-    out, z_pre = _fwd_pair(x2d, a, b, sigma, impl, interpret)
+    out, z_pre = _fwd_exec(x2d, a, b, None, None, sigma, impl, interpret)
     return out, (x2d, z_pre, a, b)
 
 
-def _dz_and_z(sigma, z_pre, g, b, dt):
-    """dz = (g·Bᵀ)⊙σ′(z_pre) and z = σ(z_pre), both in dt — the shared
-    r-dim backward math of the reference path and the dA/dB fallback."""
-    zp32 = z_pre.astype(jnp.float32)
-    dzl = jax.lax.dot_general(
-        g, b.astype(g.dtype), dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)  # (T, r)
-    dz = (dzl * _act.act_grad(zp32, sigma)).astype(dt)
-    z = _act.apply_act(zp32, sigma).astype(dt)
-    return dz, z
-
-
-def _bwd_unfused(sigma, res, g):
-    """Reference backward: four XLA GEMMs from the (x, z_pre) residuals."""
-    x2d, z_pre, a, b = res
-    g = g.astype(x2d.dtype)
-    dz, z = _dz_and_z(sigma, z_pre, g, b, x2d.dtype)
-    dx = jnp.dot(dz, a.T.astype(dz.dtype))
-    da = jnp.dot(x2d.T, dz).astype(a.dtype)
-    db = jnp.dot(z.T, g).astype(b.dtype)
-    return dx, da, db
-
-
-def _bwd_impl(sigma, impl, interpret, res, g):
+def _bwd2(sigma, impl, interpret, res, g):
     sigma = _act.canon(sigma)
     x2d, z_pre, a, b = res
-    if _resolve_impl(impl, a, b) != "pallas":
-        DISPATCH["bwd_ref"] += 1
-        return _bwd_unfused(sigma, res, g)
-    DISPATCH["bwd_pallas"] += 1
-    from repro.kernels.cola_ae import kernel as _k
-    g = g.astype(x2d.dtype)
-    dx = _k.cola_ae_bwd_dx(g, z_pre, a, b, sigma=sigma, interpret=interpret)
-    d_in, r = a.shape
-    d_out = b.shape[1]
-    if _k.dw_fits_vmem(d_in, r, d_out,
-                       bytes_el=jnp.dtype(a.dtype).itemsize):
-        da, db = _k.cola_ae_bwd_dw(x2d, g, z_pre, b, sigma=sigma,
-                                   interpret=interpret)
-    else:
-        # grad blocks exceed VMEM: same math from the same r-dim residuals
-        dz, z = _dz_and_z(sigma, z_pre, g, b, x2d.dtype)
-        da = jnp.dot(x2d.T, dz)
-        db = jnp.dot(z.T, g)
+    dx, da, db = _bwd_exec(sigma, impl, interpret, (x2d, z_pre, a, b), g)
     return dx.astype(x2d.dtype), da.astype(a.dtype), db.astype(b.dtype)
 
 
-_cola_ae2d.defvjp(_fwd2, _bwd_impl)
+_cola_ae2d.defvjp(_fwd2, _bwd2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _cola_ae2d_bias(x2d, a, b, bias_a, bias_b, sigma, impl, interpret):
+    return _fwd_infer(x2d, a, b, bias_a, bias_b, sigma, impl, interpret)
+
+
+def _fwd2_bias(x2d, a, b, bias_a, bias_b, sigma, impl, interpret):
+    sigma = _act.canon(sigma)
+    out, z_pre = _fwd_exec(x2d, a, b, bias_a, bias_b, sigma, impl,
+                           interpret)
+    return out, (x2d, z_pre, a, b, bias_a, bias_b)
+
+
+def _bwd2_bias(sigma, impl, interpret, res, g):
+    sigma = _act.canon(sigma)
+    x2d, z_pre, a, b, bias_a, bias_b = res
+    dx, da, db, dba, dbb = _bwd_exec(
+        sigma, impl, interpret, (x2d, z_pre, a, b), g, want_dbias=True)
+    return (dx.astype(x2d.dtype), da.astype(a.dtype), db.astype(b.dtype),
+            dba.astype(bias_a.dtype), dbb.astype(bias_b.dtype))
+
+
+_cola_ae2d_bias.defvjp(_fwd2_bias, _bwd2_bias)
 
 
 # --------------------------------------------------------------------------
-# Tensor-parallel fused path: shard_map around the kernels, explicit
-# collectives in a custom VJP (see module docstring for the per-profile
-# placement).  The nondiff args (mesh, ColaAePartition) are hashable
-# statics, so jit caches one lowering per (site shape, partitioning).
+# Tensor-parallel fused path: shard_map around the stage planner, explicit
+# collectives between stages in a custom VJP (see module docstring for the
+# per-profile placement).  The nondiff args (mesh, ColaAePartition) are
+# hashable statics, so jit caches one lowering per (site shape,
+# partitioning).
 # --------------------------------------------------------------------------
-def _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part):
+def _flat_axis_index(axes, mesh):
+    idx = 0
+    for ax in axes:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def _seq_size(axes, mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _sh_fwd_res(x, a, b, biases, sigma, impl, interpret, mesh, part):
     from jax.experimental.shard_map import shard_map
+    has_bias = biases is not None
 
-    def body(xl, al, bl):
+    def body(xl, al, bl, *bias_l):
+        ba_l, bb_l = bias_l if has_bias else (None, None)
+        if part.seq_axes:
+            # Sequence-parallel entry: consume the residual stream seq-
+            # sharded and gather explicitly, fused ahead of the first
+            # stage-A token-tile load — no hidden GSPMD gather outside.
+            DISPATCH["sharded_entry_allgather"] += 1
+            xl = jax.lax.all_gather(xl, part.seq_axes, axis=1, tiled=True)
         x2 = xl.reshape(-1, xl.shape[-1])
-        if part.in_axes:
-            # Row-parallel input (megatron o/down): the partial z_pre must
-            # be psummed *between* the A-GEMM and σ — a collective cannot
-            # run inside the fused kernel, so this branch is XLA math.  The
-            # residual stays the r-dim z_pre; residency is unchanged.
-            DISPATCH["sharded_fwd_rowpar_xla"] += 1
-            zp = jnp.dot(x2, al.astype(x2.dtype),
-                         preferred_element_type=jnp.float32)
-            zp = jax.lax.psum(zp.astype(jnp.float32), part.in_axes)
-            z = _act.apply_act(zp, sigma).astype(x2.dtype)
-            out = jnp.dot(z, bl.astype(x2.dtype))
-        else:
-            out, zp = _fwd_pair(x2, al, bl, sigma, impl, interpret,
-                                tag="sharded_fwd")
+        psum_zpre = ((lambda zp: jax.lax.psum(zp, part.in_axes))
+                     if part.in_axes else None)
+        # rank-sharded B (baseline): each shard's B-GEMM output is a
+        # partial that still needs a psum — fold bias_b after it, once.
+        bb_kernel = None if part.rank_axes else bb_l
+        out, z_pre = _fwd_exec(x2, al, bl, ba_l, bb_kernel, sigma, impl,
+                               interpret, psum_zpre=psum_zpre,
+                               tag="sharded_fwd")
         if part.rank_axes:
-            # rank-sharded B (baseline): each shard's B-GEMM is a partial
             out = jax.lax.psum(out, part.rank_axes)
-        return out.reshape(*xl.shape[:-1], out.shape[-1]), zp
+            if bb_l is not None:
+                out = out + bb_l.astype(out.dtype)
+        return out.reshape(*xl.shape[:-1], out.shape[-1]), z_pre
 
+    in_specs = (part.x_spec, part.a_spec, part.b_spec)
+    args = (x, a, b)
+    if has_bias:
+        in_specs += (part.bias_a_spec, part.bias_b_spec)
+        args += tuple(biases)
     out, z_pre = shard_map(
-        body, mesh, in_specs=(part.x_spec, part.a_spec, part.b_spec),
-        out_specs=(part.out_spec, part.zpre_spec), check_rep=False)(x, a, b)
+        body, mesh, in_specs=in_specs,
+        out_specs=(part.out_spec, part.zpre_spec), check_rep=False)(*args)
     return out, z_pre
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _cola_ae3d_sh(x, a, b, sigma, impl, interpret, mesh, part):
-    out, _ = _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part)
-    return out
-
-
-def _sh_fwd(x, a, b, sigma, impl, interpret, mesh, part):
-    out, z_pre = _sh_fwd_res(x, a, b, sigma, impl, interpret, mesh, part)
-    return out, (x, z_pre, a, b)
-
-
-def _sh_bwd(sigma, impl, interpret, mesh, part, res, g):
+def _sh_bwd_core(sigma, impl, interpret, mesh, part, has_bias, res, g):
     from jax.experimental.shard_map import shard_map
-    x, z_pre, a, b = res
+    if has_bias:
+        x, z_pre, a, b, bias_a, bias_b = res
+    else:
+        x, z_pre, a, b = res
 
     def body(xl, zpl, al, bl, gl):
+        if part.seq_axes:
+            # second gather of the saved x shard (Megatron-SP recompute
+            # gather) — dA needs full-sequence x against the full-seq dz
+            DISPATCH["sharded_entry_allgather"] += 1
+            xl = jax.lax.all_gather(xl, part.seq_axes, axis=1, tiled=True)
         x2 = xl.reshape(-1, xl.shape[-1])
         g2 = gl.reshape(-1, gl.shape[-1]).astype(x2.dtype)
-        if part.out_axes:
-            # Column-parallel output (megatron qkv/gate/up): g·Bᵀ contracts
-            # over the sharded d_out, so the r-dim partial must be psummed
-            # before the σ′ product — XLA math, one f32 (T, r) all-reduce.
-            DISPATCH["sharded_bwd_colpar_xla"] += 1
-            dzl = jax.lax.dot_general(
-                g2, bl.astype(g2.dtype),
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            dzl = jax.lax.psum(dzl, part.out_axes)
-            dz = (dzl * _act.act_grad(zpl, sigma)).astype(x2.dtype)
-            z = _act.apply_act(zpl, sigma).astype(x2.dtype)
-            dx = jnp.dot(dz, al.T.astype(dz.dtype))
-            da = jnp.dot(x2.T, dz)
-            db = jnp.dot(z.T, g2)
+        psum_dzl = ((lambda v: jax.lax.psum(v, part.out_axes))
+                    if part.out_axes else None)
+        outs = _bwd_exec(sigma, impl, interpret, (x2, zpl, al, bl), g2,
+                         psum_dzl=psum_dzl, want_dbias=has_bias)
+        dx, da, db = outs[:3]
+        dx3 = dx.reshape(xl.shape)
+        if part.rank_axes and part.seq_axes == part.rank_axes:
+            # dz·Aᵀ partials over r, re-sharding the seq dim on exit: one
+            # ring pass instead of psum-then-slice
+            dx3 = jax.lax.psum_scatter(dx3, part.rank_axes,
+                                       scatter_dimension=1, tiled=True)
         else:
-            # d_out whole per shard: the fused backward kernels apply
-            # unchanged to the local (rank- or batch-) shard.
-            dx, da, db = _bwd_impl(sigma, impl, interpret,
-                                   (x2, zpl, al, bl), g2)
-        if part.rank_axes:
-            dx = jax.lax.psum(dx, part.rank_axes)  # dz·Aᵀ partials over r
+            if part.rank_axes:
+                dx3 = jax.lax.psum(dx3, part.rank_axes)
+            if part.seq_axes:
+                n = _seq_size(part.seq_axes, mesh)
+                chunk = dx3.shape[1] // n
+                idx = _flat_axis_index(part.seq_axes, mesh)
+                dx3 = jax.lax.dynamic_slice_in_dim(
+                    dx3, idx * chunk, chunk, axis=1)
         if part.batch_axes:
             # per-site slice of the data-parallel gradient all-reduce
             da = jax.lax.psum(da, part.batch_axes)
             db = jax.lax.psum(db, part.batch_axes)
-        return (dx.reshape(xl.shape).astype(xl.dtype),
-                da.astype(al.dtype), db.astype(bl.dtype))
+        rets = [dx3.astype(x.dtype), da.astype(al.dtype),
+                db.astype(bl.dtype)]
+        if has_bias:
+            dba, dbb = outs[3], outs[4]
+            if part.batch_axes:
+                dba = jax.lax.psum(dba, part.batch_axes)
+                dbb = jax.lax.psum(dbb, part.batch_axes)
+            rets += [dba.astype(bias_a.dtype), dbb.astype(bias_b.dtype)]
+        return tuple(rets)
 
+    out_specs = [part.x_spec, part.a_spec, part.b_spec]
+    if has_bias:
+        out_specs += [part.bias_a_spec, part.bias_b_spec]
     return shard_map(
         body, mesh,
         in_specs=(part.x_spec, part.zpre_spec, part.a_spec, part.b_spec,
                   part.out_spec),
-        out_specs=(part.x_spec, part.a_spec, part.b_spec),
-        check_rep=False)(x, z_pre, a, b, g)
+        out_specs=tuple(out_specs), check_rep=False)(x, z_pre, a, b, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _cola_ae3d_sh(x, a, b, sigma, impl, interpret, mesh, part):
+    out, _ = _sh_fwd_res(x, a, b, None, sigma, impl, interpret, mesh, part)
+    return out
+
+
+def _sh_fwd(x, a, b, sigma, impl, interpret, mesh, part):
+    out, z_pre = _sh_fwd_res(x, a, b, None, sigma, impl, interpret, mesh,
+                             part)
+    return out, (x, z_pre, a, b)
+
+
+def _sh_bwd(sigma, impl, interpret, mesh, part, res, g):
+    return _sh_bwd_core(sigma, impl, interpret, mesh, part, False, res, g)
 
 
 _cola_ae3d_sh.defvjp(_sh_fwd, _sh_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _cola_ae3d_sh_bias(x, a, b, bias_a, bias_b, sigma, impl, interpret,
+                       mesh, part):
+    out, _ = _sh_fwd_res(x, a, b, (bias_a, bias_b), sigma, impl, interpret,
+                         mesh, part)
+    return out
+
+
+def _sh_fwd_bias(x, a, b, bias_a, bias_b, sigma, impl, interpret, mesh,
+                 part):
+    out, z_pre = _sh_fwd_res(x, a, b, (bias_a, bias_b), sigma, impl,
+                             interpret, mesh, part)
+    return out, (x, z_pre, a, b, bias_a, bias_b)
+
+
+def _sh_bwd_bias(sigma, impl, interpret, mesh, part, res, g):
+    return _sh_bwd_core(sigma, impl, interpret, mesh, part, True, res, g)
+
+
+_cola_ae3d_sh_bias.defvjp(_sh_fwd_bias, _sh_bwd_bias)
+
+
 def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
-                    sigma=True, env=None, in_ax: Optional[str] = None,
+                    sigma=True, bias_a: Optional[jax.Array] = None,
+                    bias_b: Optional[jax.Array] = None, env=None,
+                    in_ax: Optional[str] = None,
                     out_ax: Optional[str] = None, impl: str = "auto",
                     interpret: bool = False) -> jax.Array:
     """Tensor-parallel fused auto-encoder over a (b, s, d_in) activation.
 
     in_ax/out_ax are the *logical* axis names of the site's weight dims
     (cola_defs convention: a is (in_ax, 'rank'), b is ('rank', out_ax));
-    the active MeshEnv's profile decides what they shard over.
+    the active MeshEnv's profile decides what they shard over.  Bias sites
+    (both biases, as cola_defs creates them) stay on the fused two-stage
+    path — bias_a folds into the saved z_pre, bias_b into the stage-B body.
     """
     from repro.distributed import sharding as _sh
     env = env or _sh.current_env()
@@ -315,11 +559,17 @@ def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
     if x.ndim != 3:
         raise ValueError(f"cola_ae_sharded expects (b, s, d) input, "
                          f"got ndim={x.ndim}")
+    if (bias_a is None) != (bias_b is None):
+        raise ValueError("cola_ae_sharded expects both biases or neither")
     mode = _act.canon(sigma)
     impl, interpret = _apply_force(impl, interpret)
     part = _sh.cola_ae_partition(env, x.shape, a.shape, b.shape,
                                  in_ax, out_ax)
     DISPATCH["sharded_call"] += 1
+    if bias_a is not None:
+        return _cola_ae3d_sh_bias(x, a.astype(x.dtype), b.astype(x.dtype),
+                                  bias_a, bias_b, mode, impl, interpret,
+                                  env.mesh, part)
     return _cola_ae3d_sh(x, a.astype(x.dtype), b.astype(x.dtype), mode,
                          impl, interpret, env.mesh, part)
 
@@ -330,23 +580,21 @@ def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
             interpret: bool = False) -> jax.Array:
     """Fused auto-encoder over the last dim of x (any leading dims).
 
-    sigma: bool (legacy; True → silu) or one of act.SIGMA_MODES.
+    sigma: bool (legacy; True → silu) or one of act.SIGMA_MODES.  Bias
+    sites no longer fall back: they route through the two-stage pipeline
+    with bias_a folded into z_pre and bias_b into the stage-B kernel body.
     """
     mode = _act.canon(sigma)
     impl, interpret = _apply_force(impl, interpret)
-    if bias_a is not None or bias_b is not None:
-        # bias sites fall back to the unfused path (rare: qwen2 qkv)
-        z = jnp.einsum("...d,dr->...r", x, a.astype(x.dtype))
-        if bias_a is not None:
-            z = z + bias_a.astype(x.dtype)
-        if mode != "none":
-            z = _act.apply_act(z.astype(jnp.float32), mode).astype(x.dtype)
-        h = jnp.einsum("...r,ro->...o", z, b.astype(x.dtype))
-        if bias_b is not None:
-            h = h + bias_b.astype(x.dtype)
-        return h
+    if (bias_a is None) != (bias_b is None):
+        raise ValueError("cola_ae expects both biases or neither "
+                         "(cola_defs always creates the pair)")
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), mode,
-                     impl, interpret)
+    if bias_a is not None:
+        out = _cola_ae2d_bias(x2d, a.astype(x.dtype), b.astype(x.dtype),
+                              bias_a, bias_b, mode, impl, interpret)
+    else:
+        out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), mode,
+                         impl, interpret)
     return out.reshape(*lead, b.shape[-1])

@@ -2,9 +2,13 @@
 
 ``sigma`` accepts the legacy bool (True → silu) or one of the four modes in
 :mod:`repro.kernels.cola_ae.act`.  ``jax.grad`` of this function is the
-gradient oracle the fused backward kernels are tested against.
+gradient oracle the fused kernels (monolithic and two-stage) are tested
+against.  ``bias_a`` is added to the pre-activation before σ and ``bias_b``
+to the output — the same placement the stage-A/stage-B pipeline fuses.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +17,17 @@ from repro.kernels.cola_ae import act as _act
 
 
 def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
-            sigma=True) -> jax.Array:
+            sigma=True, bias_a: Optional[jax.Array] = None,
+            bias_b: Optional[jax.Array] = None) -> jax.Array:
     mode = _act.canon(sigma)
     z = jnp.dot(x, a.astype(x.dtype))
+    if bias_a is not None:
+        z = z.astype(jnp.float32) + bias_a.astype(jnp.float32)
+        z = z.astype(x.dtype) if mode == "none" else z
     if mode != "none":
         z32 = z.astype(jnp.float32)
         z = _act.apply_act(z32, mode).astype(x.dtype)
-    return jnp.dot(z, b.astype(x.dtype))
+    out = jnp.dot(z.astype(x.dtype), b.astype(x.dtype))
+    if bias_b is not None:
+        out = out + bias_b.astype(out.dtype)
+    return out

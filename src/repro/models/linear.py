@@ -101,8 +101,11 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
     in_ax/out_ax mirror the logical weight axes the site declared in
     ``linear_defs``; CoLA sites forward them so the fused path can resolve
     its tensor-parallel partitioning (core/cola.py → ops.cola_ae_sharded).
-    Call sites that don't thread them keep the unfused path under a
-    'model' mesh.
+    Bias-carrying CoLA sites (cola_defs bias=True: bias_a pre-σ, bias_b on
+    the output) ride the fused two-stage pipeline — the biases travel in
+    ``params`` and fold into the stage kernels.  Call sites that don't
+    thread their axes keep the unfused path under a 'model' mesh (counted
+    as ``apply_fused_fallback`` — every bundled config threads them).
     """
     dt = x.dtype
     if "w" in params:  # dense

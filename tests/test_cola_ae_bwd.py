@@ -149,24 +149,191 @@ def test_bwd_kernels_direct_parity(rng):
 
 def test_dw_vmem_fallback_guard():
     assert cak.dw_fits_vmem(128, 32, 256)
-    # internlm2 down-proj: f32 grad blocks are ~138 MB — must fall back
+    # internlm2 down-proj: f32 grad blocks are ~138 MB — monolith dA/dB out
     assert not cak.dw_fits_vmem(16384, 1536, 6144)
     # grad blocks exactly at budget but tiles/B push residency over
     assert not cak.dw_fits_vmem(8192, 128, 8192)
 
 
-def test_weights_vmem_guard_routes_to_unfused(rng):
-    assert cak.weights_fit_vmem(256, 64, 384)
-    # internlm2 down-proj: A alone is 50 MB bf16 — whole-weight staging
-    # cannot fit; ops must dispatch the unfused path for fwd AND bwd
-    assert not cak.weights_fit_vmem(16384, 1536, 6144)
-    from repro.kernels.cola_ae.ops import _resolve_impl
+def test_planner_routes_by_shape_and_structure():
+    """Over-VMEM sites (internlm2 down-proj) now plan 'staged' — never
+    'ref'; small no-bias sites keep the monolith; bias and mid-pipeline
+    collectives structurally force the staged pipeline."""
+    from repro.kernels.cola_ae.ops import _plan_bwd, _plan_fwd
     big_a = jax.ShapeDtypeStruct((16384, 1536), jnp.bfloat16)
     big_b = jax.ShapeDtypeStruct((1536, 6144), jnp.bfloat16)
-    assert _resolve_impl("pallas", big_a, big_b) == "ref"
+    assert not cak.weights_fit_vmem(16384, 1536, 6144)
+    assert _plan_fwd("pallas", big_a, big_b) == "staged"
+    assert _plan_bwd("pallas", big_a, big_b) == "staged"
     small_a = jax.ShapeDtypeStruct((256, 64), jnp.bfloat16)
     small_b = jax.ShapeDtypeStruct((64, 384), jnp.bfloat16)
-    assert _resolve_impl("pallas", small_a, small_b) == "pallas"
+    assert _plan_fwd("pallas", small_a, small_b) == "monolith"
+    assert _plan_fwd("pallas", small_a, small_b, has_bias=True) == "staged"
+    assert _plan_fwd("pallas", small_a, small_b, mid_psum=True) == "staged"
+    assert _plan_bwd("pallas", small_a, small_b, want_dbias=True) == "staged"
+    assert _plan_bwd("pallas", small_a, small_b, mid_psum=True) == "staged"
+    assert _plan_fwd("ref", small_a, small_b) == "ref"
+
+
+# --------------------------------------------------------------------------
+# two-stage pipeline: weight-grid tiling coverage
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("sigma", list(caa.SIGMA_MODES))
+def test_staged_grad_parity_non_128_multiple_dims(sigma, rng):
+    """Forced staged plan over d_in/d_out that are not 128-multiples: the
+    weight-grid tiles must shrink to divide, never truncate."""
+    T, din, r, dout = 70, 192, 48, 160
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    with cao.force_impl("pallas", True, plan="staged"):
+        f = lambda *t: (cao.cola_ae(*t, sigma=sigma) ** 2).sum()
+        got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+    fr = lambda *t: (car.cola_ae(*t, sigma=sigma) ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5, (sigma, u.shape, _rel(u, v))
+
+
+def test_tiny_budget_streams_weight_grid(rng, monkeypatch):
+    """Forced-tiny VMEM budgets: the planner must route the internlm2
+    down-proj *shape class* (over-budget at every tile) through the
+    streamed path, the weight-grid blocks must shrink below the dims, and
+    gradients stay exact."""
+    monkeypatch.setattr(cak, "FWD_VMEM_BUDGET", 64 * 1024)
+    monkeypatch.setattr(cak, "DW_VMEM_BUDGET", 48 * 1024)
+    T, din, r, dout = 48, 1024, 96, 384  # internlm2 down-proj, scaled
+    assert not cak.weights_fit_vmem(din, r, dout, bytes_el=4)
+    # the weight grid actually tiles: more than one block per weight dim
+    bt = cak._pick_bt(T)
+    bi = cak._fit_block(din, 4 * (bt + r), 4 * bt * r, cak.FWD_VMEM_BUDGET)
+    assert bi < din and din % bi == 0
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    cao.reset_dispatch()
+    with cao.force_impl("pallas", True):
+        f = lambda *t: (cao.cola_ae(*t) ** 2).sum()
+        got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+    assert cao.DISPATCH["fwd_staged"] == 1
+    assert cao.DISPATCH["bwd_staged"] == 1
+    assert cao.DISPATCH["fwd_ref"] == 0 and cao.DISPATCH["bwd_ref"] == 0
+    fr = lambda *t: (car.cola_ae(*t) ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5
+
+
+def test_monolith_dw_overflow_streams_not_xla(rng, monkeypatch):
+    """dw over DW_VMEM_BUDGET while weights still fit FWD: the backward
+    keeps the monolith dx kernel and streams dA/dB through the weight-grid
+    kernels (old behavior: XLA GEMM fallback)."""
+    monkeypatch.setattr(cak, "DW_VMEM_BUDGET", 32 * 1024)
+    T, din, r, dout = 96, 256, 32, 192
+    assert cak.weights_fit_vmem(din, r, dout, bytes_el=4)
+    assert not cak.dw_fits_vmem(din, r, dout, bytes_el=4)
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    cao.reset_dispatch()
+    with cao.force_impl("pallas", True):
+        f = lambda *t: (cao.cola_ae(*t) ** 2).sum()
+        got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+    assert cao.DISPATCH["bwd_monolith"] == 1
+    assert cao.DISPATCH["bwd_dw_streamed"] == 1
+    fr = lambda *t: (car.cola_ae(*t) ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5
+
+
+def test_staged_bias_grad_parity(rng):
+    """Bias sites ride the staged pipeline end to end: grads for x, A, B,
+    bias_a (pre-σ) and bias_b (output) all match the oracle."""
+    T, din, r, dout = 64, 128, 32, 192
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    ba = jnp.asarray(0.1 * rng.randn(r), jnp.float32)
+    bb = jnp.asarray(0.1 * rng.randn(dout), jnp.float32)
+    for sigma in caa.SIGMA_MODES:
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae(t[0], t[1], t[2], bias_a=t[3],
+                                        bias_b=t[4], sigma=sigma) ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, a, b, ba, bb)
+        fr = lambda *t: (car.cola_ae(t[0], t[1], t[2], bias_a=t[3],
+                                     bias_b=t[4], sigma=sigma) ** 2).sum()
+        want = jax.grad(fr, argnums=(0, 1, 2, 3, 4))(x, a, b, ba, bb)
+        for u, v in zip(got, want):
+            assert _rel(u, v) <= 1e-5, (sigma, u.shape, _rel(u, v))
+
+
+def test_staged_path_is_six_kernels_zero_gemms(rng):
+    """grad(staged) = stage_a + stage_b fwd, dzl + dx + dA + dB bwd —
+    six Pallas launches, zero XLA GEMMs (the bias-less case)."""
+    with cao.force_impl(plan="staged"):
+        loss = lambda x, a, b: (cao.cola_ae(x, a, b, impl="pallas",
+                                            interpret=True) ** 2).sum()
+        jx = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(*_args(rng))
+    assert _count_prims(jx.jaxpr, "pallas_call") == 6
+    assert _count_prims(jx.jaxpr, "dot_general") == 0
+
+
+def test_staged_vjp_saves_only_lowrank_residuals(rng):
+    """The staged VJP saves the same (x, z_pre, a, b) residual set as the
+    monolith — the remat story is plan-independent."""
+    T, din, r, dout = 64, 128, 32, 192
+    x = jnp.asarray(rng.randn(T, din), jnp.float32)
+    a = jnp.asarray(0.05 * rng.randn(din, r), jnp.float32)
+    b = jnp.asarray(0.05 * rng.randn(r, dout), jnp.float32)
+    with cao.force_impl(plan="staged"):
+        f = lambda x, a, b: cao.cola_ae(x, a, b, impl="pallas",
+                                        interpret=True)
+        _, vjp_fn = jax.vjp(f, x, a, b)
+    shapes = sorted(tuple(l.shape) for l in jax.tree_util.tree_leaves(vjp_fn))
+    assert shapes == sorted([(T, din), (T, r), (din, r), (r, dout)])
+    assert (T, dout) not in shapes  # no full-rank activation residual
+
+
+def test_local_model_bias_sites_stay_fused():
+    """No mesh: a bias-carrying config (qwen2 qkv_bias) with use_fused
+    routes every AE site through the fused planner — bias sites included
+    (previously they fell back to unfused einsums inside cola_ae) — and
+    loss/grads match the unfused reference."""
+    import dataclasses
+
+    from repro.config import get_config
+    from repro.models.model import build_model
+    from repro.train.step import build_loss_fn
+
+    def grads(fused):
+        cfg = get_config("qwen2-1.5b").smoke().with_overrides(
+            dtype="float32")
+        cfg = cfg.with_overrides(cola=dataclasses.replace(
+            cfg.cola, use_fused_kernel=fused))
+        assert cfg.qkv_bias
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        batch = {"tokens": jnp.asarray(rng.randint(1, 500, (2, 32)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.randint(1, 500, (2, 32)),
+                                       jnp.int32)}
+        loss_fn = build_loss_fn(model)
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                 batch)
+        return float(loss), g
+
+    l0, g0 = grads(fused=False)
+    cao.reset_dispatch()
+    with cao.force_impl("pallas", True):
+        l1, g1 = grads(fused=True)
+    assert cao.DISPATCH["apply_fused_local"] > 0
+    assert cao.DISPATCH["fwd_staged"] > 0, dict(cao.DISPATCH)  # bias sites
+    assert cao.DISPATCH["fwd_ref"] == 0 and cao.DISPATCH["bwd_ref"] == 0
+    assert l0 == pytest.approx(l1, rel=1e-5)
+    for u, v in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        assert _rel(u, v) <= 1e-4
 
 
 def test_traffic_model_fused_below_unfused():
@@ -174,3 +341,19 @@ def test_traffic_model_fused_below_unfused():
         f = cak.hbm_traffic(*shape, fused=True)
         u = cak.hbm_traffic(*shape, fused=False)
         assert f < u, shape
+
+
+def test_traffic_model_staged_pays_for_its_seams():
+    """The split strictly pays vs the monolith (z_pre round-trips + weight
+    re-streams) — that's the price of the collective/bias seams and of
+    unbounded sites; the model must show it, not hide it.  The re-stream
+    terms must also respond to the tile pickers: a shape with more token
+    tiles models more weight traffic."""
+    for shape in [(4096, 1024, 256, 1024), (2048, 2048, 512, 5632),
+                  (4096, 16384, 1536, 6144)]:  # incl. internlm2 down-proj
+        m = cak.hbm_traffic(*shape, path="monolith")
+        s = cak.hbm_traffic(*shape, path="staged")
+        assert m < s, (shape, m, s)
+    # legacy bool alias still routes
+    assert cak.hbm_traffic(2048, 512, 128, 512, fused=True) == \
+        cak.hbm_traffic(2048, 512, 128, 512, path="monolith")

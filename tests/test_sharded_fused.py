@@ -9,11 +9,15 @@ The parity matrix:
 
 * op level    — profile (baseline/megatron/fsdp) × site weight axes
                 (column-, row-, and rank-contested sites) × all four σ
-                modes, f32 tight + bf16 loose,
+                modes, f32 tight + bf16 loose, plus bias-carrying sites
+                (two-stage pipeline) and the sequence-parallel entry,
 * model level — profile × remat policy (full/cola_m) × σ placement
                 (lowrank_only/fullrank_only), fused vs unfused loss+grads,
-* dispatch    — the ops.DISPATCH counters assert the sharded fused path was
-                actually taken (no silent fallback to the unfused math).
+* dispatch    — the ops.DISPATCH counters assert the fused plans were
+                actually taken at every site: no XLA math at megatron
+                row-parallel sites (now staged Pallas around the z_pre
+                psum), none at bias sites, and none in any bundled config
+                (test_no_config_silently_takes_xla_math).
 
 Runs on an 8-virtual-device CPU mesh.  The CI multidevice job sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` at the job level and
@@ -143,6 +147,127 @@ def test_sharded_op_dispatch_counts_kernels():
 
 
 @needs_mesh
+def test_megatron_row_parallel_is_fully_fused():
+    """The PR's headline: the megatron row-parallel forward (o/down: psum
+    of z_pre between the A-GEMM and σ) no longer drops to XLA math — the
+    two-stage pipeline runs Pallas kernels on both sides of the psum."""
+    x, wa, wb = _site_args(jnp.float32)
+    with sh.mesh_env(_mesh24(), "megatron"):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="ffw", out_ax="embed") ** 2).sum()
+            jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    assert cao.DISPATCH["sharded_fwd_staged"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["sharded_fwd_ref"] == 0
+    assert cao.DISPATCH["bwd_ref"] == 0
+    # the old fallback counters must be gone, not just zero
+    assert "sharded_fwd_rowpar_xla" not in cao.DISPATCH
+    # column-parallel bwd (dzl psum) likewise rides the staged kernels
+    with sh.mesh_env(_mesh24(), "megatron"):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="embed", out_ax="ffw") ** 2).sum()
+            jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    assert cao.DISPATCH["bwd_staged"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["bwd_ref"] == 0
+    assert "sharded_bwd_colpar_xla" not in cao.DISPATCH
+
+
+@needs_mesh
+@pytest.mark.parametrize("profile", PROFILES)
+def test_sharded_bias_site_grad_parity(profile):
+    """Bias-carrying AE sites (qwen2 qkv, whisper MLP) stay fused under a
+    'model' mesh: bias_a folds into the saved z_pre, bias_b into the
+    stage-B body (post-psum under rank sharding), and all five gradients
+    match the oracle."""
+    rng = np.random.RandomState(3)
+    x, wa, wb = _site_args(jnp.float32)
+    ba = jnp.asarray(0.1 * rng.randn(wa.shape[1]), jnp.float32)
+    bb = jnp.asarray(0.1 * rng.randn(wb.shape[1]), jnp.float32)
+    with sh.mesh_env(_mesh24(), profile):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                t[0], t[1], t[2], bias_a=t[3], bias_b=t[4], sigma="gelu",
+                in_ax="embed", out_ax="ffw") ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, wa, wb, ba, bb)
+    assert cao.DISPATCH["sharded_fwd_staged"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["sharded_fwd_ref"] == 0
+    assert cao.DISPATCH["bwd_ref"] == 0
+    fr = lambda *t: (car.cola_ae(
+        t[0].reshape(-1, t[0].shape[-1]), t[1], t[2], bias_a=t[3],
+        bias_b=t[4], sigma="gelu") ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2, 3, 4))(x, wa, wb, ba, bb)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5, (profile, u.shape, _rel(u, v))
+
+
+@needs_mesh
+def test_overvmem_site_stays_fused_under_mesh(monkeypatch):
+    """Over-VMEM sites (internlm2 down-proj class): with the per-shard
+    local weights still over budget, the shard_map body streams the
+    weight grid instead of dropping to XLA — zero ref dispatches, parity
+    intact."""
+    monkeypatch.setattr(cak, "FWD_VMEM_BUDGET", 16 * 1024)
+    monkeypatch.setattr(cak, "DW_VMEM_BUDGET", 12 * 1024)
+    x, wa, wb = _site_args(jnp.float32)
+    d_in, r = wa.shape
+    assert not cak.weights_fit_vmem(d_in, r, wb.shape[1], bytes_el=4)
+    with sh.mesh_env(_mesh24(), "megatron"):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="embed", out_ax="ffw") ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    assert cao.DISPATCH["sharded_fwd_staged"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["sharded_fwd_monolith"] == 0
+    assert cao.DISPATCH["sharded_fwd_ref"] == 0
+    assert cao.DISPATCH["bwd_staged"] > 0
+    assert cao.DISPATCH["bwd_ref"] == 0
+    fr = lambda *t: (car.cola_ae(
+        t[0].reshape(-1, t[0].shape[-1]), t[1], t[2], sigma="silu")
+        ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, wa, wb)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5
+
+
+@needs_mesh
+def test_sequence_parallel_entry_explicit_gather():
+    """Seq-sharded residual streams enter the shard_map seq-sharded and
+    are gathered *inside* the body (DISPATCH-owned), not implicitly by
+    GSPMD outside; parity is preserved."""
+    x, wa, wb = _site_args(jnp.float32)
+    with sh.mesh_env(_mesh24(), "baseline") as env:
+        part = sh.cola_ae_partition(env, x.shape, wa.shape, wb.shape,
+                                    "embed", "ffw")
+        assert part.seq_axes == ("model",)
+        assert part.x_spec[1] == "model"
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            f = lambda *t: (cao.cola_ae_sharded(
+                *t, sigma="silu", in_ax="embed", out_ax="ffw") ** 2).sum()
+            got = jax.grad(f, argnums=(0, 1, 2))(x, wa, wb)
+    # one gather in fwd, one in bwd (plus the inference fwd of jax.vjp is
+    # not traced here) — at least both directions fired
+    assert cao.DISPATCH["sharded_entry_allgather"] >= 2, dict(cao.DISPATCH)
+    fr = lambda *t: (car.cola_ae(
+        t[0].reshape(-1, t[0].shape[-1]), t[1], t[2], sigma="silu")
+        ** 2).sum()
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, wa, wb)
+    for u, v in zip(got, want):
+        assert _rel(u, v) <= 1e-5
+    # row-parallel sites keep 'model' on d_in: seq entry must step aside
+    with sh.mesh_env(_mesh24(), "megatron") as env:
+        down = sh.cola_ae_partition(env, (8, 16, 128), (128, 16), (16, 64),
+                                    "ffw", "embed")
+        assert down.seq_axes == ()
+        assert down.in_axes == ("model",)
+
+
+@needs_mesh
 def test_zpre_residual_is_rank_sharded_under_baseline():
     """The fused VJP saves only (x, z_pre, a, b), and z_pre's rank dim is
     sharded over 'model' — the saved residual is 1/4 per device."""
@@ -212,6 +337,47 @@ def test_model_fused_vs_unfused_parity(profile, remat, sigma_mode):
 
 
 @needs_mesh
+@pytest.mark.parametrize("arch", [
+    # every bundled architecture family: dense llama, bias qkv (qwen2),
+    # GQA+deep (internlm2 — the over-VMEM down-proj at full scale), MLA
+    # (minicpm3), hybrid ssm+moe (jamba), moe (phi3.5), rwkv6, encdec
+    # audio with bias MLPs (whisper), vlm (qwen2-vl), iRoPE moe (llama4)
+    "llama3.2-1b", "qwen2-1.5b", "internlm2-20b", "minicpm3-4b",
+    "jamba-v0.1-52b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b", "whisper-tiny",
+    "qwen2-vl-2b", "llama4-maverick-400b-a17b",
+])
+def test_no_config_silently_takes_xla_math(arch):
+    """Satellite acceptance: under an 8-device 'model' mesh, every CoLA AE
+    site in every bundled config dispatches a fused plan — zero unfused
+    fallbacks (no apply-level fallback, no ref math inside the shard_map
+    bodies), bias sites and row-parallel sites included."""
+    import dataclasses as _dc
+
+    from repro.config import get_config
+    from repro.models.model import build_model
+    from repro.train.step import build_loss_fn
+    cfg = get_config(arch).smoke()
+    cfg = cfg.with_overrides(cola=_dc.replace(
+        cfg.cola, use_fused_kernel=True))
+    from test_arch_smoke import _batch_for
+    batch = _batch_for(cfg)
+    with sh.mesh_env(_mesh24(), "megatron"):
+        cao.reset_dispatch()
+        with cao.force_impl("pallas", True):
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            loss_fn = build_loss_fn(model)
+            (loss, _), _ = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+    assert np.isfinite(float(loss))
+    assert cao.DISPATCH["apply_fused_sharded"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["apply_fused_fallback"] == 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["apply_fused_local"] == 0
+    assert cao.DISPATCH["sharded_fwd_ref"] == 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["bwd_ref"] == 0, dict(cao.DISPATCH)
+
+
+@needs_mesh
 def test_model_fused_parity_bf16_activations():
     """One bf16 point of the matrix: dtype-aware (loose) tolerance — bf16
     GEMM rounding differs between the fused kernels and XLA's reassociated
@@ -250,6 +416,19 @@ def test_partition_baseline_shards_rank():
     assert part.in_axes == () and part.out_axes == ()
     assert part.a_spec == jax.sharding.PartitionSpec(None, "model")
     assert part.zpre_spec == jax.sharding.PartitionSpec("data", "model")
+    # bias specs follow the factor dims they attach to
+    assert part.bias_a_spec == jax.sharding.PartitionSpec("model")
+    assert part.bias_b_spec == jax.sharding.PartitionSpec(None)
+    # seq entry: 'model' is free on x's seq dim (rank only shards weights)
+    assert part.seq_axes == ("model",)
+
+
+def test_partition_seq_entry_degrades_on_nondividing_seq():
+    # s=10 not divisible by model=4: seq entry degrades to replicated
+    part = sh.cola_ae_partition(_env("baseline"), (8, 10, 64), (64, 16),
+                                (16, 128), "embed", "ffw")
+    assert part.seq_axes == ()
+    assert part.x_spec[1] is None
 
 
 def test_partition_megatron_column_and_row():
@@ -261,6 +440,9 @@ def test_partition_megatron_column_and_row():
                                 (16, 64), "ffw", "embed")
     assert down.in_axes == ("model",) and down.out_axes == ()
     assert down.x_spec == jax.sharding.PartitionSpec("data", None, "model")
+    assert up.seq_axes == ("model",)   # column-parallel: seq entry active
+    assert down.seq_axes == ()         # row-parallel: d_in owns 'model'
+    assert up.bias_b_spec == jax.sharding.PartitionSpec("model")
 
 
 def test_partition_rank_contention_resolves_consistently():
