@@ -54,8 +54,8 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
                act_axes: Optional[Tuple[Optional[str], ...]] = None,
                use_fused: bool = False,
                weight_axes: Optional[Tuple[Optional[str],
-                                           Optional[str]]] = None
-               ) -> jax.Array:
+                                           Optional[str]]] = None,
+               mode: str = "train") -> jax.Array:
     """Apply ``B·σ(A·x)`` over the last dim of x.
 
     act_axes: logical axes of the low-rank activation (defaults to
@@ -66,9 +66,8 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     same r-dim tensor the ``cola_m`` remat policy keeps via the
     ``cola_r`` name below — so kernel-level residency makes the policy a
     no-op at AE sites while the rest of the block still benefits from it.
-    The ops planner picks the monolithic kernel or the two-stage pipeline
-    per site; bias-carrying sites (qwen2 qkv, whisper MLP) ride the
-    two-stage path with the bias folded into the stage-B body.
+    The ops planner picks the monolithic kernel (biases folded into its
+    body) or the two-stage pipeline per site.
 
     weight_axes: the site's (in_ax, out_ax) logical weight axes, as passed
     to ``cola_defs``.  Under a mesh with a nontrivial 'model' axis the
@@ -78,6 +77,14 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
     at every site kind, bias-carrying and row-parallel included.  Only
     sites that don't thread their axes still take the unfused sharded
     path below (counted as ``apply_fused_fallback``).
+
+    mode: 'train' | 'infer', threaded from linear_apply.  'infer' (the
+    model facade's prefill/decode paths) drops the custom VJP entirely —
+    no (x, z_pre) residual exists, so inference never interacts with the
+    remat policy — and adds the decode plan: T ≤ ops.DECODE_T_MAX
+    dispatches the GEMV-shaped ``cola_ae_decode`` single launch.  The
+    unfused path below is mode-agnostic (no residuals beyond autodiff's,
+    and none when not differentiated).
     """
     if use_fused and x.ndim == 3:
         from repro.kernels.cola_ae import ops as cola_ops
@@ -88,13 +95,13 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
             cola_ops.DISPATCH["apply_fused_local"] += 1
             return cola_ops.cola_ae(x, params["a"], params["b"], sigma=sigma,
                                     bias_a=params.get("bias_a"),
-                                    bias_b=params.get("bias_b"))
+                                    bias_b=params.get("bias_b"), mode=mode)
         if weight_axes is not None:
             cola_ops.DISPATCH["apply_fused_sharded"] += 1
             return cola_ops.cola_ae_sharded(
                 x, params["a"], params["b"], sigma=sigma, env=env,
                 bias_a=params.get("bias_a"), bias_b=params.get("bias_b"),
-                in_ax=weight_axes[0], out_ax=weight_axes[1])
+                in_ax=weight_axes[0], out_ax=weight_axes[1], mode=mode)
         cola_ops.DISPATCH["apply_fused_fallback"] += 1
     a = params["a"].astype(x.dtype)
     b = params["b"].astype(x.dtype)

@@ -47,6 +47,16 @@ row-parallel o/down — the 2-per-block exits — or g·Bᵀ between bwd_dzl and
 parallel entry all-gathers where the profile seq-shards the residual
 stream; ``fsdp`` 0.  All are verified against the unfused sharded
 reference in tests/test_sharded_fused.py.
+
+Non-interaction with inference (``mode='infer'``): the serving paths
+(Model.prefill / Model.decode_step → linear_apply → cola_apply →
+kernels/cola_ae/ops.py) bypass the custom VJP entirely — no (x, z_pre)
+residual is ever created, prefill rides the fused no-residual forward and
+decode dispatches the GEMV-shaped ``cola_ae_decode`` plan below the T
+threshold.  With nothing saved there is nothing for a remat policy to
+keep or recompute: these policies wrap only the training scan body
+(transformer.stack_forward with ``training=True`` and no caches), so the
+decode subsystem and CoLA-M compose trivially — by never meeting.
 """
 from __future__ import annotations
 

@@ -1,23 +1,32 @@
 """CoLA auto-encoder Pallas kernels: out = B · σ(A · x), fwd **and** bwd.
 
-The paper's core op (Eq. 3) as TPU kernels, in two flavors the ops-layer
+The paper's core op (Eq. 3) as TPU kernels, in three flavors the ops-layer
 planner (ops.py) composes per site:
 
 * the **monolithic** fused kernel — one launch computes both GEMMs with the
   r-dimensional bottleneck ``z = σ(Ax)`` living entirely in VMEM scratch
   (it never round-trips HBM at full width), so the AE pair's HBM traffic
   drops from ``n(d_in + 2r + d_out)`` to ``n(d_in + d_out)`` plus weight
-  tiles and one r-dim residual.  Fastest path, but it stages A and B
-  *whole* in VMEM and cannot admit a collective between the A-GEMM and σ;
+  tiles and one r-dim residual.  Fastest path; biases fold directly into
+  the body (bias_a into the z scratch + emitted residual, bias_b into the
+  output tile), so small bias sites (whisper MLP) keep the single launch.
+  It stages A and B *whole* in VMEM and cannot admit a collective between
+  the A-GEMM and σ;
 * the **two-stage pipeline** — ``cola_ae_stage_a`` (x·A → z_pre, f32) and
   ``cola_ae_stage_b`` (σ(z_pre)·B [+ bias] → out), each with a **weight-
   grid dimension** that tiles d_in/d_out so weights stream through VMEM in
   blocks instead of requiring whole-weight residency.  One extra f32 (T, r)
-  z_pre round-trip buys three things the monolith cannot give: sites whose
-  local weights exceed VMEM (internlm2 down-proj), a seam for the
+  z_pre round-trip buys two things the monolith cannot give: sites whose
+  local weights exceed VMEM (internlm2 down-proj) and a seam for the
   row-parallel ``psum`` of z_pre between the A-GEMM and σ (megatron
-  o/down — previously XLA math), and a fused bias add in the stage-B body
-  (qwen2 qkv, whisper MLP — previously unfused).
+  o/down — previously XLA math);
+* the **decode** kernel (``cola_ae_decode``) — GEMV-shaped single launch
+  for small T (a decode step's B×1 tokens, where the token-tile grids
+  above are degenerate): one phased grid streams A then B through VMEM in
+  weight-grid blocks against a whole resident token tile, fusing both
+  GEMMs, σ and both biases with f32 accumulation and emitting no z_pre.
+  Decode is weight-traffic-bound (see ``decode_hbm_traffic``); this kernel
+  reads each weight element exactly once.
 
 Monolithic forward
 ------------------
@@ -70,8 +79,11 @@ blocks:
 * ``cola_ae_bwd_dx_staged`` grid (T/bt, d_in/bi): fuses
   ``dz = dzl ⊙ σ′(z_pre)`` into scratch at j == 0, then ``dx = dz·Aᵀ``
   against streamed A blocks — the stage-A input backward.
-* ``cola_ae_bwd_da``    grid (d_in/bi, T/bt), tokens innermost: recomputes
-  dz per token tile and accumulates ``dA += xᵀ·dz`` into a revisited
+* ``cola_ae_dz``        grid (T/bt,): materializes ``dz = dzl ⊙ σ′(z_pre)``
+  once (pure VPU, one extra f32 (T, r) round-trip) so the dA weight passes
+  below re-read a single r-dim tensor instead of two.
+* ``cola_ae_bwd_da``    grid (d_in/bi, T/bt), tokens innermost: consumes
+  the materialized dz and accumulates ``dA += xᵀ·dz`` into a revisited
   (bi, r) f32 block; x streams in (bt, bi) tiles, so no full-width token
   tile is ever resident.
 * ``cola_ae_bwd_db``    grid (d_out/bo, T/bt): recomputes σ(z_pre) per
@@ -125,11 +137,19 @@ _MAX_BT = 512
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------
-def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_out_ref, z_ref, *, n_k: int,
-                bk: int, sigma: str, emit_z: bool):
+def _fwd_kernel(x_ref, a_ref, b_ref, *rest, n_k: int, bk: int, sigma: str,
+                emit_z: bool, has_ba: bool, has_bb: bool):
     """x_ref: (bt, d_in); a_ref: (d_in, r); b_ref: (r, bo);
-    out_ref: (bt, bo); z_out_ref: (bt, r) f32 (None unless emit_z);
-    z_ref (scratch): (bt, r) f32 holding the *pre-activation*."""
+    ba_ref: (1, r) f32 when has_ba; bb_ref: (1, bo) f32 when has_bb;
+    out_ref: (bt, bo); z_out_ref: (bt, r) f32 (only when emit_z);
+    z_ref (scratch): (bt, r) f32 holding the *pre-activation* — post-bias_a,
+    so the emitted residual is the true σ input."""
+    refs = list(rest)
+    ba_ref = refs.pop(0) if has_ba else None
+    bb_ref = refs.pop(0) if has_bb else None
+    out_ref = refs.pop(0)
+    z_out_ref = refs.pop(0) if emit_z else None
+    z_ref = refs.pop(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -141,14 +161,17 @@ def _fwd_kernel(x_ref, a_ref, b_ref, out_ref, z_out_ref, z_ref, *, n_k: int,
         acc = jax.lax.fori_loop(
             0, n_k, body,
             jnp.zeros((x_ref.shape[0], a_ref.shape[1]), jnp.float32))
+        if has_ba:
+            acc = acc + ba_ref[...]
         z_ref[...] = acc
         if emit_z:
             z_out_ref[...] = acc
 
     z = _act.apply_act(z_ref[...], sigma).astype(x_ref.dtype)
-    out_ref[...] = jnp.dot(z, b_ref[...],
-                           preferred_element_type=jnp.float32
-                           ).astype(out_ref.dtype)
+    acc = jnp.dot(z, b_ref[...], preferred_element_type=jnp.float32)
+    if has_bb:
+        acc = acc + bb_ref[...]
+    out_ref[...] = acc.astype(out_ref.dtype)
 
 
 def _pick_block(d: int, cap: int = 1024) -> int:
@@ -223,13 +246,19 @@ def _pad_tokens(arrs, bt: int):
     return arrs, pad
 
 
-def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
+def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array,
+                bias_a: "jax.Array | None" = None,
+                bias_b: "jax.Array | None" = None, *,
                 sigma=True, interpret: bool = False,
                 return_zpre: bool = False):
-    """x: (T, d_in) [callers flatten (b, s)]; a: (d_in, r); b: (r, d_out).
+    """x: (T, d_in) [callers flatten (b, s)]; a: (d_in, r); b: (r, d_out);
+    bias_a: (r,) folded into the pre-activation (and the emitted residual),
+    bias_b: (d_out,) folded into the output tile — the monolith bias fold,
+    which keeps small bias sites (whisper MLP) on the single-launch path.
 
     With ``return_zpre=True`` also returns the f32 pre-activation
-    ``z_pre = A·x`` (T, r) — the training residual; the A-GEMM runs once.
+    ``z_pre = A·x [+ bias_a]`` (T, r) — the training residual; the A-GEMM
+    runs once.
     """
     sigma = _act.canon(sigma)
     T, d_in = x.shape
@@ -240,9 +269,21 @@ def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
     n_k = d_in // bk
     grid = (Tp // bt, d_out // bo)
     kernel = functools.partial(_fwd_kernel, n_k=n_k, bk=bk, sigma=sigma,
-                               emit_z=return_zpre)
-    if not return_zpre:
-        kernel = functools.partial(_drop_zout, kernel)
+                               emit_z=return_zpre,
+                               has_ba=bias_a is not None,
+                               has_bb=bias_b is not None)
+    in_specs = [
+        pl.BlockSpec((bt, d_in), lambda i, j: (i, 0)),
+        pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
+        pl.BlockSpec((r, bo), lambda i, j: (0, j)),
+    ]
+    args = [x, a, b]
+    if bias_a is not None:
+        in_specs.append(pl.BlockSpec((1, r), lambda i, j: (0, 0)))
+        args.append(bias_a.astype(jnp.float32).reshape(1, r))
+    if bias_b is not None:
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, j: (0, j)))
+        args.append(bias_b.astype(jnp.float32).reshape(1, d_out))
     out_shape = [jax.ShapeDtypeStruct((Tp, d_out), x.dtype)]
     out_specs = [pl.BlockSpec((bt, bo), lambda i, j: (i, j))]
     if return_zpre:
@@ -251,16 +292,12 @@ def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
     res = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, d_in), lambda i, j: (i, 0)),
-            pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
-            pl.BlockSpec((r, bo), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
         interpret=interpret,
-    )(x, a, b)
+    )(*args)
     if return_zpre:
         out, z_pre = res
         return (out[:T], z_pre[:T]) if pad_t else (out, z_pre)
@@ -268,8 +305,108 @@ def cola_ae_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *,
     return out[:T] if pad_t else out
 
 
-def _drop_zout(kernel, x_ref, a_ref, b_ref, out_ref, z_ref, **kw):
-    kernel(x_ref, a_ref, b_ref, out_ref, None, z_ref)
+# --------------------------------------------------------------------------
+# decode: GEMV-shaped fused auto-encoder for small T (B×1 decode batches)
+# --------------------------------------------------------------------------
+def _decode_kernel(x_ref, a_ref, b_ref, *rest, n_i: int, sigma: str,
+                   has_ba: bool, has_bb: bool):
+    """Phased single-grid kernel over (n_i + n_o) steps: the first n_i
+    steps stream A in (bi, r) blocks and accumulate the f32 pre-activation
+    into the VMEM scratch; the remaining n_o steps apply σ (+ bias_a) and
+    stream B in (r, bo) blocks to emit output tiles (+ bias_b).  TPU grids
+    iterate sequentially, so the scratch is complete before the first
+    emit step.  z never touches HBM — decode's only residual is nothing."""
+    refs = list(rest)
+    ba_ref = refs.pop(0) if has_ba else None
+    bb_ref = refs.pop(0) if has_bb else None
+    out_ref, z_ref = refs
+    k = pl.program_id(0)
+
+    @pl.when(k < n_i)
+    def _accum_z():
+        acc = jnp.dot(x_ref[...], a_ref[...],
+                      preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _init():
+            z_ref[...] = acc
+
+        @pl.when(k > 0)
+        def _add():
+            z_ref[...] += acc
+
+    @pl.when(k >= n_i)
+    def _emit():
+        zp = z_ref[...]
+        if has_ba:
+            zp = zp + ba_ref[...]
+        z = _act.apply_act(zp, sigma).astype(b_ref.dtype)
+        acc = jnp.dot(z, b_ref[...], preferred_element_type=jnp.float32)
+        if has_bb:
+            acc = acc + bb_ref[...]
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def cola_ae_decode(x: jax.Array, a: jax.Array, b: jax.Array,
+                   bias_a: "jax.Array | None" = None,
+                   bias_b: "jax.Array | None" = None, *, sigma=True,
+                   out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Fused GEMV-shaped auto-encoder for decode: x is (T, d_in) with T the
+    decode batch (B slots × 1 token) — weight-traffic-bound, so both GEMMs,
+    σ and both biases run in ONE launch with A and B streamed through VMEM
+    in weight-grid blocks and the whole (padded) token tile resident.  No
+    z_pre is emitted: decode saves no residuals.
+
+    The training kernels' token-tile grids are degenerate here (bt=128
+    against T=1 pads 127/128 of every MXU pass); this kernel instead tiles
+    only the weight dims, reading each weight element exactly once.
+    """
+    sigma = _act.canon(sigma)
+    T, d_in = x.shape
+    r, d_out = b.shape
+    out_dtype = out_dtype or x.dtype
+    e = jnp.dtype(x.dtype).itemsize
+    # whole token tile resident: pad T to the f32 sublane minimum
+    pad = (-T) % 8
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = x.shape[0]
+    # per-phase residency: f32 z scratch is the fixed cost; weight blocks
+    # stream.  Large caps — decode makes exactly one pass over each weight,
+    # so bigger blocks just mean fewer grid steps.
+    bi = _fit_block(d_in, per_unit_bytes=e * (Tp + r),
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    bo = _fit_block(d_out, per_unit_bytes=e * (r + Tp) + 4,
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    n_i, n_o = d_in // bi, d_out // bo
+    in_specs = [
+        pl.BlockSpec((Tp, bi), lambda k: (0, jnp.minimum(k, n_i - 1))),
+        pl.BlockSpec((bi, r), lambda k: (jnp.minimum(k, n_i - 1), 0)),
+        pl.BlockSpec((r, bo), lambda k: (0, jnp.maximum(k - n_i, 0))),
+    ]
+    args = [x, a, b]
+    if bias_a is not None:
+        in_specs.append(pl.BlockSpec((1, r), lambda k: (0, 0)))
+        args.append(bias_a.astype(jnp.float32).reshape(1, r))
+    if bias_b is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bo), lambda k: (0, jnp.maximum(k - n_i, 0))))
+        args.append(bias_b.astype(jnp.float32).reshape(1, d_out))
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, n_i=n_i, sigma=sigma,
+                          has_ba=bias_a is not None,
+                          has_bb=bias_b is not None),
+        grid=(n_i + n_o,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Tp, bo),
+                               lambda k: (0, jnp.maximum(k - n_i, 0))),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((Tp, r), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out[:T] if pad else out
 
 
 # --------------------------------------------------------------------------
@@ -469,13 +606,46 @@ def cola_ae_bwd_dx_staged(dzl: jax.Array, z_pre: jax.Array, a: jax.Array,
     return dx[:T] if pad_t else dx
 
 
-def _bwd_da_kernel(x_ref, dzl_ref, zp_ref, da_ref, *, sigma: str):
-    """x_ref: (bt, bi); dzl_ref/zp_ref: (bt, r) f32; da_ref: (bi, r) f32
-    revisited across the token grid dim (innermost), accumulating
-    ``dA += xᵀ·dz`` with dz recomputed per token tile (VPU, r-dim)."""
+def _dz_kernel(dzl_ref, zp_ref, dz_ref, *, sigma: str):
+    """dzl_ref/zp_ref/dz_ref: (bt, r) f32 — dz = dzl ⊙ σ′(z_pre), pure VPU."""
+    dz_ref[...] = dzl_ref[...] * _act.act_grad(zp_ref[...], sigma)
+
+
+def cola_ae_dz(dzl: jax.Array, z_pre: jax.Array, *, sigma=True,
+               interpret: bool = False) -> jax.Array:
+    """dzl/z_pre: (T, r) f32 → dz = dzl ⊙ σ′(z_pre) (T, r) f32.
+
+    Materializes dz ONCE (one extra f32 (T, r) round-trip) so the streamed
+    dA kernel re-reads a single r-dim tensor per weight pass instead of
+    recomputing dz from (dzl, z_pre) — halving the dominant per-pass
+    re-read term (see ``hbm_traffic`` 'staged').  Bias grads reuse it too
+    (dbias_a = Σ_t dz) with no extra GEMM.
+    """
+    sigma = _act.canon(sigma)
+    T, r = dzl.shape
+    bt = _pick_bt(T)
+    (dzl, z_pre), pad_t = _pad_tokens([dzl, z_pre], bt)
+    Tp = dzl.shape[0]
+    dz = pl.pallas_call(
+        functools.partial(_dz_kernel, sigma=sigma),
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, r), lambda i: (i, 0)),
+            pl.BlockSpec((bt, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, r), jnp.float32),
+        interpret=interpret,
+    )(dzl, z_pre)
+    return dz[:T] if pad_t else dz
+
+
+def _bwd_da_kernel(x_ref, dz_ref, da_ref):
+    """x_ref: (bt, bi); dz_ref: (bt, r) f32; da_ref: (bi, r) f32 revisited
+    across the token grid dim (innermost), accumulating ``dA += xᵀ·dz``
+    from the pre-materialized dz (cola_ae_dz)."""
     k = pl.program_id(1)
-    dz = (dzl_ref[...] * _act.act_grad(zp_ref[...], sigma)
-          ).astype(x_ref.dtype)
+    dz = dz_ref[...].astype(x_ref.dtype)
     # contract over the token tile dim (0, 0)
     upd = jax.lax.dot_general(
         x_ref[...], dz, dimension_numbers=(((0,), (0,)), ((), ())),
@@ -490,34 +660,35 @@ def _bwd_da_kernel(x_ref, dzl_ref, zp_ref, da_ref, *, sigma: str):
         da_ref[...] += upd
 
 
-def cola_ae_bwd_da(x: jax.Array, dzl: jax.Array, z_pre: jax.Array, *,
-                   sigma=True, interpret: bool = False) -> jax.Array:
-    """x: (T, d_in); dzl/z_pre: (T, r) f32 → dA = xᵀ·dz (d_in, r) f32.
+def cola_ae_bwd_da(x: jax.Array, dz: jax.Array, *,
+                   interpret: bool = False) -> jax.Array:
+    """x: (T, d_in); dz: (T, r) f32 (from cola_ae_dz) → dA = xᵀ·dz
+    (d_in, r) f32.
 
     Grid (d_in/bi, T/bt), tokens innermost: x streams in (bt, bi) tiles —
     no full-width token tile is ever VMEM-resident, so over-DW-budget
-    sites (internlm2 down-proj) stay on the fused path.
+    sites (internlm2 down-proj) stay on the fused path.  Each weight pass
+    re-reads only dz (4·bt·r fixed bytes per token tile), half of what the
+    old recompute-from-(dzl, z_pre) body paid.
     """
-    sigma = _act.canon(sigma)
     T, d_in = x.shape
-    r = dzl.shape[1]
+    r = dz.shape[1]
     e = jnp.dtype(x.dtype).itemsize
-    bt, bi = _pick_dw_tiles(T, d_in, r, e, fixed_per_bt=8 * r,
+    bt, bi = _pick_dw_tiles(T, d_in, r, e, fixed_per_bt=4 * r,
                             budget=DW_VMEM_BUDGET)
-    (x, dzl, z_pre), pad_t = _pad_tokens([x, dzl, z_pre], bt)
+    (x, dz), pad_t = _pad_tokens([x, dz], bt)
     Tp = x.shape[0]
     return pl.pallas_call(
-        functools.partial(_bwd_da_kernel, sigma=sigma),
+        _bwd_da_kernel,
         grid=(d_in // bi, Tp // bt),
         in_specs=[
             pl.BlockSpec((bt, bi), lambda i, k: (k, i)),
-            pl.BlockSpec((bt, r), lambda i, k: (k, 0)),
             pl.BlockSpec((bt, r), lambda i, k: (k, 0)),
         ],
         out_specs=pl.BlockSpec((bi, r), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((d_in, r), jnp.float32),
         interpret=interpret,
-    )(x, dzl, z_pre)
+    )(x, dz)
 
 
 def _bwd_db_kernel(zp_ref, g_ref, db_ref, *, sigma: str):
@@ -747,8 +918,10 @@ def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
       stages (the collective/bias seam), and weight *re-streaming* — each
       stage re-reads its streamed weight once per token tile (n_t =
       ⌈T/bt⌉ passes), the price of dropping whole-weight residency.  The
-      dA/dB kernels conversely re-read the r-dim dzl/z_pre once per
-      weight block (n_wi/n_wo passes) while reading x/g exactly once.
+      dA kernel consumes the once-materialized dz (cola_ae_dz: one extra
+      f32 (T, r) round-trip) and re-reads only it per weight pass (n_wi
+      passes) — half the old recompute-from-(dzl, z_pre) term; the dB
+      kernel still re-reads z_pre per pass (n_wo).  x/g are read once.
     * ``unfused`` — every XLA GEMM and the σ/σ′ element-wise ops round-
       trip their full operands, including the (T, r) dzl/dz
       intermediates.  Weight grads are written in f32 in all cases.
@@ -778,17 +951,19 @@ def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
     if path == "staged":
         bt = _pick_bt(T)
         n_t = -(-T // bt)             # weight re-streams, one per token tile
-        _, bi = _pick_dw_tiles(T, d_in, r, e, 8 * r, DW_VMEM_BUDGET)
+        _, bi = _pick_dw_tiles(T, d_in, r, e, 4 * r, DW_VMEM_BUDGET)
         _, bo = _pick_dw_tiles(T, d_out, r, e, 4 * r, DW_VMEM_BUDGET)
-        n_wi = -(-d_in // bi)         # dA passes re-reading dzl + z_pre
+        n_wi = -(-d_in // bi)         # dA passes re-reading dz (only)
         n_wo = -(-d_out // bo)        # dB passes re-reading z_pre
         stage_a = e * T * d_in + n_t * e * d_in * r + zp32
         stage_b = zp32 + n_t * e * r * d_out + e * T * d_out
         bwd_dzl = e * T * d_out + n_t * e * r * d_out + zp32
         bwd_dx = 2 * zp32 + n_t * e * d_in * r + e * T * d_in
-        bwd_da = e * T * d_in + n_wi * 2 * zp32 + 4 * d_in * r
+        dz_mat = 3 * zp32             # cola_ae_dz: read dzl + z_pre, write dz
+        bwd_da = e * T * d_in + n_wi * zp32 + 4 * d_in * r
         bwd_db = n_wo * zp32 + e * T * d_out + 4 * r * d_out
-        return stage_a + stage_b + bwd_dzl + bwd_dx + bwd_da + bwd_db
+        return (stage_a + stage_b + bwd_dzl + bwd_dx + dz_mat + bwd_da
+                + bwd_db)
     fwd = (e * (T * d_in + d_in * r) + zp32          # x·A → z_pre
            + 2 * zp32 + e * T * r                    # σ: read z_pre, write z
            + e * (T * r + r * d_out + T * d_out))    # z·B → out
@@ -798,3 +973,23 @@ def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
            + e * (T * d_in + T * r) + 4 * d_in * r         # xᵀ·dz → dA
            + e * (T * r + T * d_out) + 4 * r * d_out)      # σ(z)ᵀ·g → dB
     return fwd + bwd
+
+
+def decode_hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
+                       bytes_el: int = 2, fused: bool = True) -> int:
+    """Modeled forward-only HBM bytes for one AE site at decode (T = decode
+    batch, typically 1–64 — weight-traffic-bound, activations negligible).
+
+    ``fused`` — the single-launch ``cola_ae_decode`` kernel: x, each weight
+    element exactly once, out; the r-dim z never leaves VMEM.  ``unfused``
+    — the XLA GEMV pair: z and σ(z) round-trip HBM between ops.  The gap is
+    the paper's Table-11 story at kernel grain: CoLA decode moves ~half the
+    dense weight bytes, and fusing the bottleneck keeps the remainder pure
+    weight traffic."""
+    e = bytes_el
+    w = d_in * r + r * d_out
+    if fused:
+        return e * (T * d_in + w + T * d_out)
+    return (e * (T * d_in + d_in * r + T * r)       # x·A → z
+            + 2 * e * T * r                         # σ: read z, write σ(z)
+            + e * (T * r + r * d_out + T * d_out))  # σ(z)·B → out

@@ -1,22 +1,40 @@
 """jit'd wrappers for the fused CoLA auto-encoder with custom VJPs, plus
 the **stage planner** that picks how each site executes.
 
-Every entry point resolves to one of three plans (pure function of shapes,
-bias presence, and whether a collective must run mid-pipeline — forward and
-backward agree by construction):
+Every entry point resolves to one of four plans (pure function of shapes,
+mode, bias presence, and whether a collective must run mid-pipeline):
 
 * ``monolith`` — the single fused kernel (kernel.cola_ae_fwd + the fused
-  bwd pair).  Fast path: weights stay whole in VMEM, z_pre never leaves
-  the chip except as the (T, r) residual.  Requires
-  ``kernel.weights_fit_vmem``, no bias, and no mid-pipeline collective.
+  bwd pair), biases folded into the body.  Fast path: weights stay whole
+  in VMEM, z_pre never leaves the chip except as the (T, r) residual.
+  Requires ``kernel.weights_fit_vmem`` and no mid-pipeline collective.
 * ``staged``   — the two-stage pipeline: ``stage_a`` (x·A → z_pre, f32)
   → optional z_pre ``psum`` (megatron row-parallel) → optional bias_a add
   → ``stage_b`` (σ·B + bias_b).  Backward mirrors it: ``bwd_dzl``
-  (g·Bᵀ) → optional ``psum`` (megatron column-parallel) → ``bwd_dx_staged``
-  ‖ ``bwd_da`` ‖ ``bwd_db``.  Weight-grid tiling means *any* site fits —
-  over-VMEM sites (internlm2 down-proj), bias sites (qwen2 qkv, whisper
-  MLP), and collective-split sites all stay fused.
+  (g·Bᵀ) → optional ``psum`` (megatron column-parallel) → ``cola_ae_dz``
+  (dz materialized once) → ``bwd_dx_staged`` ‖ ``bwd_da`` ‖ ``bwd_db``.
+  Weight-grid tiling means *any* site fits — over-VMEM sites (internlm2
+  down-proj) and collective-split sites stay fused.
+* ``decode``   — inference only: the GEMV-shaped ``cola_ae_decode`` single
+  launch for T ≤ ``DECODE_T_MAX`` (a decode step's B×1 tokens).  No z_pre
+  is computed or emitted; both biases fuse into the launch.
 * ``ref``      — plain XLA math; the off-TPU/interpret oracle only.
+
+Forward and backward planning agree on the structural seams (a mid-
+pipeline collective forces ``staged`` on both sides); they no longer need
+to pick the *same* plan — a bias site takes the monolith forward (bias
+folded) while its backward rides the staged kernels, whose materialized
+dzl seam yields the bias grads for free.  Both fused plans save the
+identical ``(x, z_pre)`` residual pair, so any fwd/bwd pairing composes.
+
+Inference mode (``mode='infer'``, threaded ``linear_apply → cola_apply →``
+here from the model facade's prefill/decode paths): the custom VJP is
+bypassed entirely — no residual is saved, no z_pre emitted (prefill rides
+the fused no-residual forward; decode picks ``cola_ae_decode`` below the T
+threshold).  Because no residual exists, infer mode cannot interact with
+remat policies: ``cola_m`` wraps only the training stack (see
+core/colam.py).  The ``infer_*`` DISPATCH counters let the serve tests
+assert decode never silently takes a training-shaped kernel.
 
 Both fused plans save only ``(x, z_pre)`` where z_pre = A·x [+ bias_a] is
 r-dimensional — the CoLA-M residency recipe at kernel level; σ and the
@@ -100,9 +118,11 @@ def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None,
 
     Lets CPU test harnesses drive the real Pallas kernels in interpret mode
     through code paths (model apply, shard_map bodies) that do not expose
-    the ``impl`` argument.  ``plan`` pins the planner to 'monolith' or
-    'staged' (ignored where the plan is structurally impossible — bias or
-    mid-pipeline collective sites cannot take the monolith).
+    the ``impl`` argument.  ``plan`` pins the planner to 'monolith',
+    'staged' or (infer entry points only) 'decode' — ignored where the
+    plan is structurally impossible: mid-pipeline collective sites cannot
+    take the monolith or decode launch, and bias *grads* still require the
+    staged backward.
 
     All three overrides act at *trace time*: they are resolved when a
     cola_ae entry point is traced and baked into the custom_vjp's static
@@ -147,14 +167,23 @@ def _canon_impl(impl: str) -> str:
 
 
 # --------------------------------------------------------------------------
-# The planner: shapes + structure -> 'monolith' | 'staged' | 'ref'
+# The planner: shapes + structure -> 'monolith' | 'staged' | 'decode' | 'ref'
 # --------------------------------------------------------------------------
+# Largest flattened token count that dispatches the GEMV-shaped decode
+# kernel in infer mode — sized to cover a full slot batch (B×1) of the
+# serve engine.  The boundary is by token count, not by caller: a
+# production prefill (B×P in the hundreds+) lands above it and takes
+# monolith/staged, but a tiny prefill (smoke configs: B=2, P=16 → T=32)
+# legitimately takes the decode launch too — small-T is small-T.
+DECODE_T_MAX = 64
+
+
 def _plan(impl: str, a, b, *, needs_seam: bool) -> str:
-    """Shared plan resolution — one function so forward and backward agree
-    by construction.  ``needs_seam``: the pipeline must expose an HBM
-    materialization between the two GEMMs — a mid-pipeline collective
+    """Shared plan resolution.  ``needs_seam``: the pipeline must expose an
+    HBM materialization between the two GEMMs — a mid-pipeline collective
     (row-parallel z_pre psum in fwd, column-parallel dzl psum in bwd) or a
-    bias fold/grad — which structurally excludes the monolith."""
+    bias *grad* (the materialized dzl yields dbias) — which structurally
+    excludes the monolith."""
     _, forced = _split_impl(impl)
     impl = _canon_impl(impl)
     if impl != "pallas":
@@ -175,8 +204,12 @@ def _plan(impl: str, a, b, *, needs_seam: bool) -> str:
 def _plan_fwd(impl: str, a, b, *, has_bias: bool = False,
               mid_psum: bool = False) -> str:
     """Forward plan.  ``mid_psum``: a collective must run between the
-    A-GEMM and σ (row-parallel z_pre psum)."""
-    return _plan(impl, a, b, needs_seam=has_bias or mid_psum)
+    A-GEMM and σ (row-parallel z_pre psum).  Bias no longer forces the
+    two-stage pipeline — the monolith folds both biases into its body
+    (``has_bias`` is kept for signature stability; only the *backward*
+    needs the dzl seam for bias grads)."""
+    del has_bias
+    return _plan(impl, a, b, needs_seam=mid_psum)
 
 
 def _plan_bwd(impl: str, a, b, *, want_dbias: bool = False,
@@ -185,6 +218,26 @@ def _plan_bwd(impl: str, a, b, *, want_dbias: bool = False,
     psummed before σ′ (column-parallel) — only the staged backward
     materializes that seam; bias grads also need the materialized dzl."""
     return _plan(impl, a, b, needs_seam=want_dbias or mid_psum)
+
+
+def _plan_infer(impl: str, a, b, T: int, *, mid_psum: bool = False) -> str:
+    """Inference plan: like ``_plan_fwd`` but with the decode fast path —
+    T ≤ DECODE_T_MAX (and no mid-pipeline collective) takes the GEMV-shaped
+    single launch, which streams weights so *any* site fits and fuses both
+    biases.  ``force_impl(plan='decode')`` pins it for tests."""
+    _, forced = _split_impl(impl)
+    base = _canon_impl(impl)
+    if base != "pallas":
+        return "ref"
+    if mid_psum:
+        return "staged"
+    if forced == "decode":
+        return "decode"
+    if forced in ("monolith", "staged"):
+        return forced
+    if T <= DECODE_T_MAX:
+        return "decode"
+    return _plan(impl, a, b, needs_seam=False)
 
 
 # --------------------------------------------------------------------------
@@ -208,8 +261,9 @@ def _fwd_exec(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
         DISPATCH[f"{tag}_pallas"] += 1
         DISPATCH[f"{tag}_monolith"] += 1
         from repro.kernels.cola_ae import kernel as _k
-        # one kernel, one A-GEMM: z_pre comes out of the VMEM scratch
-        return _k.cola_ae_fwd(x2, a, b, sigma=sigma,
+        # one kernel, one A-GEMM: z_pre comes out of the VMEM scratch,
+        # post-bias_a so backward sees the true σ input
+        return _k.cola_ae_fwd(x2, a, b, bias_a, bias_b, sigma=sigma,
                               interpret=interpret, return_zpre=True)
     if plan == "staged":
         DISPATCH[f"{tag}_pallas"] += 1
@@ -236,23 +290,48 @@ def _fwd_exec(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
     return out, z_pre
 
 
-def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret):
-    """Inference forward: no z_pre emitted/saved."""
-    plan = _plan_fwd(impl, a, b,
-                     has_bias=bias_a is not None or bias_b is not None,
-                     mid_psum=False)
+def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
+               psum_zpre=None, tag="infer"):
+    """Inference forward: no z_pre emitted or saved, no residuals.
+
+    The plan adds the decode fast path: T ≤ DECODE_T_MAX dispatches the
+    GEMV-shaped single launch — a decode step's slot batch always lands
+    here, and so does any prefill small enough to be GEMV-shaped (smoke
+    configs).  Production-sized prefills (B×P above the threshold) ride
+    the same monolith/staged kernels as training, minus the z_pre write.
+    """
+    plan = _plan_infer(impl, a, b, x2.shape[0],
+                       mid_psum=psum_zpre is not None)
+    DISPATCH[f"{tag}_{plan}"] += 1
+    if plan != "ref":
+        DISPATCH[f"{tag}_pallas"] += 1
+    if plan == "decode":
+        from repro.kernels.cola_ae import kernel as _k
+        return _k.cola_ae_decode(x2, a, b, bias_a, bias_b, sigma=sigma,
+                                 out_dtype=x2.dtype, interpret=interpret)
     if plan == "monolith":
         from repro.kernels.cola_ae import kernel as _k
-        return _k.cola_ae_fwd(x2, a, b, sigma=sigma, interpret=interpret)
+        return _k.cola_ae_fwd(x2, a, b, bias_a, bias_b, sigma=sigma,
+                              interpret=interpret)
     if plan == "staged":
         from repro.kernels.cola_ae import kernel as _k
         z_pre = _k.cola_ae_stage_a(x2, a, interpret=interpret)
+        if psum_zpre is not None:
+            z_pre = psum_zpre(z_pre)
         if bias_a is not None:
             z_pre = z_pre + bias_a.astype(jnp.float32)
         return _k.cola_ae_stage_b(z_pre, b, bias_b, sigma=sigma,
                                   out_dtype=x2.dtype, interpret=interpret)
-    from repro.kernels.cola_ae import ref as _ref
-    return _ref.cola_ae(x2, a, b, sigma=sigma, bias_a=bias_a, bias_b=bias_b)
+    z_pre = jnp.dot(x2, a.astype(x2.dtype)).astype(jnp.float32)
+    if psum_zpre is not None:
+        z_pre = psum_zpre(z_pre)
+    if bias_a is not None:
+        z_pre = z_pre + bias_a.astype(jnp.float32)
+    z = _act.apply_act(z_pre, sigma).astype(x2.dtype)
+    out = jnp.dot(z, b.astype(x2.dtype))
+    if bias_b is not None:
+        out = out + bias_b.astype(out.dtype)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -291,8 +370,8 @@ def _bwd_exec(sigma, impl, interpret, res, g, *, psum_dzl=None,
             # kernels (the old XLA-GEMM fallback is gone)
             DISPATCH["bwd_dw_streamed"] += 1
             dzl = _k.cola_ae_bwd_dzl(g, b, interpret=interpret)
-            da = _k.cola_ae_bwd_da(x2, dzl, z_pre, sigma=sigma,
-                                   interpret=interpret)
+            dz = _k.cola_ae_dz(dzl, z_pre, sigma=sigma, interpret=interpret)
+            da = _k.cola_ae_bwd_da(x2, dz, interpret=interpret)
             db = _k.cola_ae_bwd_db(z_pre, g, sigma=sigma,
                                    interpret=interpret)
         return dx, da, db
@@ -301,15 +380,18 @@ def _bwd_exec(sigma, impl, interpret, res, g, *, psum_dzl=None,
     dzl = _k.cola_ae_bwd_dzl(g, b, interpret=interpret)
     if psum_dzl is not None:
         dzl = psum_dzl(dzl)
+    # dz materialized ONCE (one extra f32 (T, r) round-trip) so the dA
+    # weight passes re-read a single r-dim tensor — see cola_ae_dz
+    dz = _k.cola_ae_dz(dzl, z_pre, sigma=sigma, interpret=interpret)
     dx = _k.cola_ae_bwd_dx_staged(dzl, z_pre, a, sigma=sigma,
                                   out_dtype=x2.dtype, interpret=interpret)
-    da = _k.cola_ae_bwd_da(x2, dzl, z_pre, sigma=sigma, interpret=interpret)
+    da = _k.cola_ae_bwd_da(x2, dz, interpret=interpret)
     db = _k.cola_ae_bwd_db(z_pre, g, sigma=sigma, interpret=interpret)
     if not want_dbias:
         return dx, da, db
-    # bias grads from the already-materialized r-dim seam: XLA reductions
+    # bias grads from the already-materialized r-dim seams: XLA reductions
     # over (T, r)/(T, d_out) — no extra GEMM, no extra kernel
-    dba = (dzl * _act.act_grad(z_pre, sigma)).sum(axis=0)
+    dba = dz.sum(axis=0)
     dbb = g.astype(jnp.float32).sum(axis=0)
     return dx, da, db, dba, dbb
 
@@ -538,19 +620,60 @@ def _sh_bwd_bias(sigma, impl, interpret, mesh, part, res, g):
 _cola_ae3d_sh_bias.defvjp(_sh_fwd_bias, _sh_bwd_bias)
 
 
+def _sh_infer(x, a, b, biases, sigma, impl, interpret, mesh, part):
+    """Inference-mode shard_map forward: per-shard ``_fwd_infer`` bodies
+    with the same collective placement as the training forward (z_pre psum
+    at row-parallel sites, rank psum of out) — but no residual, no custom
+    VJP, and the decode plan available whenever no mid-pipeline collective
+    is required."""
+    from jax.experimental.shard_map import shard_map
+    has_bias = biases is not None
+
+    def body(xl, al, bl, *bias_l):
+        ba_l, bb_l = bias_l if has_bias else (None, None)
+        if part.seq_axes:
+            DISPATCH["sharded_entry_allgather"] += 1
+            xl = jax.lax.all_gather(xl, part.seq_axes, axis=1, tiled=True)
+        x2 = xl.reshape(-1, xl.shape[-1])
+        psum_zpre = ((lambda zp: jax.lax.psum(zp, part.in_axes))
+                     if part.in_axes else None)
+        bb_kernel = None if part.rank_axes else bb_l
+        out = _fwd_infer(x2, al, bl, ba_l, bb_kernel, sigma, impl,
+                         interpret, psum_zpre=psum_zpre,
+                         tag="sharded_infer")
+        if part.rank_axes:
+            out = jax.lax.psum(out, part.rank_axes)
+            if bb_l is not None:
+                out = out + bb_l.astype(out.dtype)
+        return out.reshape(*xl.shape[:-1], out.shape[-1])
+
+    in_specs = (part.x_spec, part.a_spec, part.b_spec)
+    args = (x, a, b)
+    if has_bias:
+        in_specs += (part.bias_a_spec, part.bias_b_spec)
+        args += tuple(biases)
+    return shard_map(body, mesh, in_specs=in_specs,
+                     out_specs=part.out_spec, check_rep=False)(*args)
+
+
 def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
                     sigma=True, bias_a: Optional[jax.Array] = None,
                     bias_b: Optional[jax.Array] = None, env=None,
                     in_ax: Optional[str] = None,
                     out_ax: Optional[str] = None, impl: str = "auto",
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False,
+                    mode: str = "train") -> jax.Array:
     """Tensor-parallel fused auto-encoder over a (b, s, d_in) activation.
 
     in_ax/out_ax are the *logical* axis names of the site's weight dims
     (cola_defs convention: a is (in_ax, 'rank'), b is ('rank', out_ax));
     the active MeshEnv's profile decides what they shard over.  Bias sites
-    (both biases, as cola_defs creates them) stay on the fused two-stage
-    path — bias_a folds into the saved z_pre, bias_b into the stage-B body.
+    (both biases, as cola_defs creates them) stay fused — bias_a folds into
+    the saved z_pre (monolith body or staged seam), bias_b into the output
+    tile / stage-B body.
+
+    mode='infer' (prefill/decode): runs the fwd-only shard_map body — no
+    custom VJP, no z_pre residual, decode kernel below the T threshold.
     """
     from repro.distributed import sharding as _sh
     env = env or _sh.current_env()
@@ -561,40 +684,58 @@ def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
                          f"got ndim={x.ndim}")
     if (bias_a is None) != (bias_b is None):
         raise ValueError("cola_ae_sharded expects both biases or neither")
-    mode = _act.canon(sigma)
+    if mode not in ("train", "infer"):
+        raise ValueError(f"mode must be 'train'|'infer', got {mode!r}")
+    act_mode = _act.canon(sigma)
     impl, interpret = _apply_force(impl, interpret)
     part = _sh.cola_ae_partition(env, x.shape, a.shape, b.shape,
                                  in_ax, out_ax)
     DISPATCH["sharded_call"] += 1
+    if mode == "infer":
+        biases = (bias_a, bias_b) if bias_a is not None else None
+        return _sh_infer(x, a.astype(x.dtype), b.astype(x.dtype), biases,
+                         act_mode, impl, interpret, env.mesh, part)
     if bias_a is not None:
         return _cola_ae3d_sh_bias(x, a.astype(x.dtype), b.astype(x.dtype),
-                                  bias_a, bias_b, mode, impl, interpret,
+                                  bias_a, bias_b, act_mode, impl, interpret,
                                   env.mesh, part)
-    return _cola_ae3d_sh(x, a.astype(x.dtype), b.astype(x.dtype), mode,
+    return _cola_ae3d_sh(x, a.astype(x.dtype), b.astype(x.dtype), act_mode,
                          impl, interpret, env.mesh, part)
 
 
 def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
             sigma=True, bias_a: Optional[jax.Array] = None,
             bias_b: Optional[jax.Array] = None, impl: str = "auto",
-            interpret: bool = False) -> jax.Array:
+            interpret: bool = False, mode: str = "train") -> jax.Array:
     """Fused auto-encoder over the last dim of x (any leading dims).
 
     sigma: bool (legacy; True → silu) or one of act.SIGMA_MODES.  Bias
-    sites no longer fall back: they route through the two-stage pipeline
-    with bias_a folded into z_pre and bias_b into the stage-B kernel body.
+    sites stay fused on every plan: the monolith folds both biases into
+    its body, the staged pipeline into z_pre / the stage-B body, the
+    decode kernel into its single launch.
+
+    mode='infer' (threaded from the model facade's prefill/decode paths):
+    bypasses the custom VJP — no residual is saved, no z_pre emitted, and
+    T ≤ DECODE_T_MAX dispatches ``cola_ae_decode``.  mode='train' keeps
+    the custom-VJP path whose primal is the same no-residual forward.
     """
-    mode = _act.canon(sigma)
+    act_mode = _act.canon(sigma)
     impl, interpret = _apply_force(impl, interpret)
     if (bias_a is None) != (bias_b is None):
         raise ValueError("cola_ae expects both biases or neither "
                          "(cola_defs always creates the pair)")
+    if mode not in ("train", "infer"):
+        raise ValueError(f"mode must be 'train'|'infer', got {mode!r}")
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    if bias_a is not None:
+    if mode == "infer":
+        DISPATCH["infer_call"] += 1
+        out = _fwd_infer(x2d, a.astype(x.dtype), b.astype(x.dtype),
+                         bias_a, bias_b, act_mode, impl, interpret)
+    elif bias_a is not None:
         out = _cola_ae2d_bias(x2d, a.astype(x.dtype), b.astype(x.dtype),
-                              bias_a, bias_b, mode, impl, interpret)
+                              bias_a, bias_b, act_mode, impl, interpret)
     else:
-        out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype), mode,
-                         impl, interpret)
+        out = _cola_ae2d(x2d, a.astype(x.dtype), b.astype(x.dtype),
+                         act_mode, impl, interpret)
     return out.reshape(*lead, b.shape[-1])

@@ -1,49 +1,90 @@
-"""Serving launcher: batched generation through the KV-cache engine.
+"""Serving launcher: drives the continuous-batching scheduler with a
+synthetic ragged request stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --batch 4 --prompt-len 16 --new-tokens 32
+        --requests 16 --min-prompt 4 --max-prompt 24 --new-tokens 16 \
+        --slots 4 --decode-block 8
+
+Each request draws a prompt length uniformly from [min-prompt, max-prompt]
+and a generation budget from [1, new-tokens]; the scheduler left-pads the
+ragged admissions, recycles slots on EOS/length, and decodes k tokens per
+device dispatch through the jitted ``lax.scan`` loop.
 """
 from __future__ import annotations
 
 import argparse
-
-import numpy as np
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--param", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--param", default=None,
+                    help="parameterization override (cola|dense|...)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16,
+                    help="max generation budget per request")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching slot count (decode batch)")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="tokens decoded per device dispatch")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="treat this token id as EOS (early slot recycle)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
+    import numpy as np
     from repro.config import get_config
     from repro.serve.engine import make_engine
+    from repro.serve.scheduler import Request
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     if args.param:
         cfg = cfg.with_overrides(parameterization=args.param)
-    max_seq = args.prompt_len + args.new_tokens
-    eng = make_engine(cfg, max_batch=args.batch, max_seq=max_seq,
-                      seed=args.seed)
+    max_seq = args.max_prompt + args.new_tokens + 1  # +1: pad-parking slot
+    eng = make_engine(cfg, max_batch=args.slots, max_seq=max_seq,
+                      seed=args.seed, decode_block=args.decode_block)
+
     rng = np.random.RandomState(args.seed)
-    prompts = rng.randint(1, cfg.vocab_size,
-                          (args.batch, args.prompt_len)).astype(np.int32)
-    toks, stats = eng.generate(
-        prompts, args.new_tokens, temperature=args.temperature,
-        rng=jax.random.PRNGKey(args.seed) if args.temperature > 0 else None)
-    print(f"generated {toks.shape} tokens")
-    print(f"prefill: {stats['prefill_s']*1e3:.1f} ms   "
-          f"decode: {stats['decode_tok_per_s']:.1f} tok/s")
-    print("first row:", toks[0][:16].tolist())
+    reqs = []
+    for uid in range(args.requests):
+        plen = int(rng.randint(args.min_prompt, args.max_prompt + 1))
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.randint(1, cfg.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.randint(1, args.new_tokens + 1)),
+            temperature=args.temperature,
+            eos_id=args.eos_id))
+
+    t0 = time.perf_counter()
+    resps = eng.serve(
+        reqs, rng=jax.random.PRNGKey(args.seed)
+        if args.temperature > 0 else None)
+    wall = time.perf_counter() - t0
+
+    stats = eng.stats()
+    n_tok = sum(len(r.tokens) for r in resps)
+    by_reason = {}
+    for r in resps:
+        by_reason[r.finish_reason] = by_reason.get(r.finish_reason, 0) + 1
+    print(f"served {len(resps)} requests / {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok / wall:.1f} tok/s incl. compile)  finish={by_reason}")
+    print(f"dispatches: {stats['prefill_dispatches']} prefill + "
+          f"{stats['decode_dispatches']} decode "
+          f"(k={args.decode_block} tokens each)")
+    if "per_token_p50_s" in stats:
+        print(f"per-token latency p50={stats['per_token_p50_s']*1e3:.2f}ms "
+              f"p95={stats['per_token_p95_s']*1e3:.2f}ms (steady-state)")
+    r0 = resps[0]
+    print(f"first request: prompt_len={r0.prompt_len} "
+          f"reason={r0.finish_reason} tokens={r0.tokens[:12].tolist()}")
 
 
 if __name__ == "__main__":

@@ -235,6 +235,7 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
               causal: bool = True,
               kv_from: Optional[jax.Array] = None,
               cross_cache: Optional[KVCache] = None,
+              mode: str = "train",
               ) -> Tuple[jax.Array, Optional[KVCache]]:
     """GQA forward.
 
@@ -244,6 +245,14 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     kv_from      => cross-attention source (encoder states); with
                     cross_cache, K/V are precomputed and the projections
                     are skipped.
+    mode         => 'train' | 'infer', threaded to every linear site
+                    (prefill/decode pass 'infer': no CoLA residuals, and
+                    the decode-shaped kernel below the T threshold).
+
+    Left-padded ragged prefill (serve engine): pad queries carry negative
+    ``positions``; their K/V writes are redirected to the sacrificial last
+    cache slot and the ``slot <= q_position`` visibility mask hides both
+    the pad slots and any stale tenant of a recycled cache row.
     """
     d = cfg.d_model
     hd = cfg.resolved_head_dim
@@ -252,7 +261,7 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     dt = x.dtype
 
     q = linear.linear_apply(cfg, params["q"], x, "attn", d, h * hd,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
     q = q.reshape(b, s, h, hd)
     if cross_cache is not None:
         k, v = cross_cache.k.astype(dt), cross_cache.v.astype(dt)
@@ -261,9 +270,9 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         src = x if kv_from is None else kv_from
         sk = src.shape[1]
         k = linear.linear_apply(cfg, params["k"], src, "attn", d, kv * hd,
-                                in_ax="embed", out_ax="kv_heads")
+                                in_ax="embed", out_ax="kv_heads", mode=mode)
         v = linear.linear_apply(cfg, params["v"], src, "attn", d, kv * hd,
-                                in_ax="embed", out_ax="kv_heads")
+                                in_ax="embed", out_ax="kv_heads", mode=mode)
         k = k.reshape(b, sk, kv, hd)
         v = v.reshape(b, sk, kv, hd)
         new_cache = None
@@ -281,7 +290,10 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         k = k.astype(cache.k.dtype)
         v = v.astype(cache.v.dtype)
         bidx = jnp.arange(b)[:, None]
-        sidx = positions  # (b, s)
+        # left-padded prefill: pad tokens carry negative positions — park
+        # their K/V in the sacrificial last slot (the serve engine reserves
+        # it) instead of letting negative indices wrap into live slots
+        sidx = jnp.where(positions < 0, cache.k.shape[1] - 1, positions)
         ck = cache.k.at[bidx, sidx].set(k)
         cv = cache.v.at[bidx, sidx].set(v)
         ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
@@ -292,7 +304,7 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     out = _sdpa(q, k, v, causal=causal, q_positions=q_positions)
     out = out.reshape(b, s, h * hd)
     out = linear.linear_apply(cfg, params["o"], out, "attn", h * hd, d,
-                              in_ax="heads", out_ax="embed")
+                              in_ax="heads", out_ax="embed", mode=mode)
     return out, new_cache
 
 
@@ -333,23 +345,24 @@ def mla_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
     )
 
 
-def _mla_project_q(cfg, params, x):
+def _mla_project_q(cfg, params, x, mode="train"):
     m, h = cfg.mla, cfg.num_heads
     b, s, _ = x.shape
     qd = m.qk_nope_head_dim + m.qk_rope_head_dim
     cq = linear.linear_apply(cfg, params["dq"], x, "small", cfg.d_model,
-                             m.q_lora_rank)
+                             m.q_lora_rank, mode=mode)
     cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
     q = linear.linear_apply(cfg, params["uq"], cq, "attn", m.q_lora_rank,
                             h * qd, in_ax="rank",
-                            out_ax="heads").reshape(b, s, h, qd)
+                            out_ax="heads", mode=mode).reshape(b, s, h, qd)
     return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
 
 
-def _mla_latent(cfg, params, x):
+def _mla_latent(cfg, params, x, mode="train"):
     m = cfg.mla
     ckv = linear.linear_apply(cfg, params["dkv"], x, "small", cfg.d_model,
-                              m.kv_lora_rank + m.qk_rope_head_dim)
+                              m.kv_lora_rank + m.qk_rope_head_dim,
+                              mode=mode)
     latent = rmsnorm(params["kv_norm"], ckv[..., :m.kv_lora_rank],
                      cfg.norm_eps)
     k_rope = ckv[..., m.kv_lora_rank:]  # (b, s, rope_dim), shared by heads
@@ -359,15 +372,16 @@ def _mla_latent(cfg, params, x):
 def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
               cos_sin, cache: Optional[KVCache] = None,
               positions: Optional[jax.Array] = None,
+              mode: str = "train",
               ) -> Tuple[jax.Array, Optional[KVCache]]:
     """MLA forward; decode uses the absorbed form over the latent cache."""
     m, h = cfg.mla, cfg.num_heads
     b, s, _ = x.shape
     dt = x.dtype
     cos, sin = cos_sin
-    q_nope, q_rope = _mla_project_q(cfg, params, x)
+    q_nope, q_rope = _mla_project_q(cfg, params, x, mode)
     q_rope = apply_rope(q_rope, cos, sin)
-    latent, k_rope = _mla_latent(cfg, params, x)
+    latent, k_rope = _mla_latent(cfg, params, x, mode)
     k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (b,s,1,rope)
 
     ukv = params["ukv"]
@@ -375,8 +389,8 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         # train/prefill: expand latent to per-head k_nope, v
         kvd = m.qk_nope_head_dim + m.v_head_dim
         kv = linear.linear_apply(cfg, ukv, latent, "attn", m.kv_lora_rank,
-                                 h * kvd, in_ax="rank",
-                                 out_ax="heads").reshape(b, s, h, kvd)
+                                 h * kvd, in_ax="rank", out_ax="heads",
+                                 mode=mode).reshape(b, s, h, kvd)
         k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))],
@@ -386,13 +400,15 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         out = out.reshape(b, s, h * m.v_head_dim)
         out = linear.linear_apply(cfg, params["o"], out, "attn",
                                   h * m.v_head_dim, cfg.d_model,
-                                  in_ax="heads", out_ax="embed")
+                                  in_ax="heads", out_ax="embed", mode=mode)
         return out, None
 
     # ---- cached paths -----------------------------------------------------
     bidx = jnp.arange(b)[:, None]
-    ck = cache.k.at[bidx, positions].set(latent.astype(cache.k.dtype))
-    cv = cache.v.at[bidx, positions].set(
+    # pad queries (negative positions) park in the sacrificial last slot
+    sidx = jnp.where(positions < 0, cache.k.shape[1] - 1, positions)
+    ck = cache.k.at[bidx, sidx].set(latent.astype(cache.k.dtype))
+    cv = cache.v.at[bidx, sidx].set(
         k_rope[:, :, 0, :].astype(cache.v.dtype))
     ck = shard(ck, "batch", "kv_seq", "rank")
     cv = shard(cv, "batch", "kv_seq", "head_dim")
@@ -408,7 +424,7 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         S = latent_c.shape[1]
         kvd = m.qk_nope_head_dim + m.v_head_dim
         kv_all = linear.linear_apply(cfg, ukv, latent_c, "attn",
-                                     m.kv_lora_rank, h * kvd)
+                                     m.kv_lora_rank, h * kvd, mode=mode)
         kv_all = kv_all.reshape(b, S, h, kvd)
         k_nope_c = kv_all[..., :m.qk_nope_head_dim]
         v_c = kv_all[..., m.qk_nope_head_dim:]
@@ -422,7 +438,7 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         out = out.reshape(b, s, h * m.v_head_dim)
         out = linear.linear_apply(cfg, params["o"], out, "attn",
                                   h * m.v_head_dim, cfg.d_model,
-                                  in_ax="heads", out_ax="embed")
+                                  in_ax="heads", out_ax="embed", mode=mode)
         return out, new_cache
 
     # ---- decode: absorbed MLA over the latent cache -----------------------
@@ -447,7 +463,7 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     out = out.reshape(b, s, h * m.v_head_dim)
     out = linear.linear_apply(cfg, params["o"], out, "attn",
                               h * m.v_head_dim, cfg.d_model,
-                              in_ax="heads", out_ax="embed")
+                              in_ax="heads", out_ax="embed", mode=mode)
     return out, new_cache
 
 

@@ -69,7 +69,7 @@ def encdec_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
 
 
 def encode(cfg: ModelConfig, params: Dict, frames: jax.Array,
-           training: bool = False) -> jax.Array:
+           training: bool = False, mode: str = "train") -> jax.Array:
     """frames: (b, enc_seq, d) — precomputed frame embeddings (stub)."""
     pos = jnp.asarray(sinusoidal_positions(frames.shape[1], cfg.d_model),
                       frames.dtype)
@@ -79,10 +79,10 @@ def encode(cfg: ModelConfig, params: Dict, frames: jax.Array,
         xc = carry
         h = rmsnorm(lp["ln1"], xc, cfg.norm_eps)
         a, _ = attention.gqa_apply(cfg, lp["attn"], h, cos_sin=None,
-                                   causal=False)
+                                   causal=False, mode=mode)
         xc = xc + a
         h = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
-        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h)
+        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h, mode=mode)
         return xc, None
 
     if training:
@@ -92,7 +92,8 @@ def encode(cfg: ModelConfig, params: Dict, frames: jax.Array,
 
 
 def build_cross_caches(cfg: ModelConfig, params: Dict,
-                       enc_out: jax.Array) -> CrossCache:
+                       enc_out: jax.Array,
+                       mode: str = "train") -> CrossCache:
     """Precompute per-layer cross K/V from encoder output (stacked (L,…))."""
     b, se, _ = enc_out.shape
     hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
@@ -100,10 +101,12 @@ def build_cross_caches(cfg: ModelConfig, params: Dict,
     def per_layer(lp):
         k = linear.linear_apply(cfg, lp["cross_attn"]["k"], enc_out, "attn",
                                 cfg.d_model, kv * hd, in_ax="embed",
-                                out_ax="kv_heads").reshape(b, se, kv, hd)
+                                out_ax="kv_heads",
+                                mode=mode).reshape(b, se, kv, hd)
         v = linear.linear_apply(cfg, lp["cross_attn"]["v"], enc_out, "attn",
                                 cfg.d_model, kv * hd, in_ax="embed",
-                                out_ax="kv_heads").reshape(b, se, kv, hd)
+                                out_ax="kv_heads",
+                                mode=mode).reshape(b, se, kv, hd)
         return CrossCache(k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
 
     return jax.lax.map(per_layer, params["decoder"])
@@ -113,7 +116,8 @@ def decode_stack(cfg: ModelConfig, params: Dict, x: jax.Array, *,
                  enc_out: Optional[jax.Array] = None,
                  positions: Optional[jax.Array] = None,
                  caches: Optional[Dict] = None,
-                 training: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+                 training: bool = False,
+                 mode: str = "train") -> Tuple[jax.Array, Optional[Dict]]:
     """Decoder stack.  Either enc_out (train/prefill, cross-attn computed on
     the fly) or caches['cross'] (decode) must be provided."""
     pos = jnp.asarray(sinusoidal_positions(cfg.max_seq_len, cfg.d_model),
@@ -130,20 +134,21 @@ def decode_stack(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         h = rmsnorm(lp["ln1"], xc, cfg.norm_eps)
         a, new_self = attention.gqa_apply(
             cfg, lp["self_attn"], h, cos_sin=None,
-            cache=(pc["self"] if has_cache else None), positions=positions)
+            cache=(pc["self"] if has_cache else None), positions=positions,
+            mode=mode)
         xc = xc + a
         h = rmsnorm(lp["ln_x"], xc, cfg.norm_eps)
         if has_cache:
             a, _ = attention.gqa_apply(cfg, lp["cross_attn"], h,
                                        cos_sin=None, causal=False,
-                                       cross_cache=pc["cross"])
+                                       cross_cache=pc["cross"], mode=mode)
         else:
             a, _ = attention.gqa_apply(cfg, lp["cross_attn"], h,
                                        cos_sin=None, causal=False,
-                                       kv_from=enc_out)
+                                       kv_from=enc_out, mode=mode)
         xc = xc + a
         h = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
-        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h)
+        xc = xc + mlp.gelu_mlp_apply(cfg, lp["ffn"], h, mode=mode)
         new_pc = ({"self": new_self, "cross": pc["cross"]}
                   if has_cache else None)
         return xc, new_pc

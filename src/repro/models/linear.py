@@ -95,17 +95,23 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
                  d_in: int, d_out: int,
                  originally_nonlinear: bool = False,
                  in_ax: Optional[str] = None,
-                 out_ax: Optional[str] = None) -> jax.Array:
+                 out_ax: Optional[str] = None,
+                 mode: str = "train") -> jax.Array:
     """Apply a linear site; dispatches on which params exist.
 
     in_ax/out_ax mirror the logical weight axes the site declared in
     ``linear_defs``; CoLA sites forward them so the fused path can resolve
     its tensor-parallel partitioning (core/cola.py → ops.cola_ae_sharded).
     Bias-carrying CoLA sites (cola_defs bias=True: bias_a pre-σ, bias_b on
-    the output) ride the fused two-stage pipeline — the biases travel in
-    ``params`` and fold into the stage kernels.  Call sites that don't
-    thread their axes keep the unfused path under a 'model' mesh (counted
-    as ``apply_fused_fallback`` — every bundled config threads them).
+    the output) stay fused on every plan.  Call sites that don't thread
+    their axes keep the unfused path under a 'model' mesh (counted as
+    ``apply_fused_fallback`` — every bundled config threads them).
+
+    mode: 'train' (default) or 'infer' — threaded from the model facade's
+    prefill/decode paths down to the CoLA ops planner, where 'infer'
+    bypasses the custom VJP (no residuals) and dispatches the GEMV-shaped
+    decode kernel below the T threshold (kernels/cola_ae/ops.py).  Dense /
+    LoRA / SLTrain sites ignore it.
     """
     dt = x.dtype
     if "w" in params:  # dense
@@ -120,7 +126,7 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jax.Array, site: str,
         return cola_mod.cola_apply(
             params, x, sigma=sigma,
             use_fused=cfg.cola.use_fused_kernel,
-            weight_axes=weight_axes)
+            weight_axes=weight_axes, mode=mode)
     if "w0" in params:  # lora — W0 frozen (stop_gradient), per paper Fig. 3a
         w0 = jax.lax.stop_gradient(params["w0"]).astype(dt)
         h = jnp.einsum("...d,do->...o", x, w0)

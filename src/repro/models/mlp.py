@@ -33,20 +33,21 @@ def swiglu_defs(cfg: ModelConfig, d_ff: int = 0, site: str = "mlp") -> Dict:
 
 
 def swiglu_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
-                 d_ff: int = 0, site: str = "mlp") -> jax.Array:
+                 d_ff: int = 0, site: str = "mlp",
+                 mode: str = "train") -> jax.Array:
     d, f = cfg.d_model, (d_ff or cfg.d_ff)
     g = linear.linear_apply(cfg, params["gate"], x, site, d, f,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     u = linear.linear_apply(cfg, params["up"], x, site, d, f,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     g = shard(g, "batch", "seq", "act_ffw")
     u = shard(u, "batch", "seq", "act_ffw")
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         g = silu(g)
     h = g * u  # element-wise product kept unchanged (paper §3.2)
     return linear.linear_apply(cfg, params["down"], h, site, f, d,
-                               in_ax="ffw", out_ax="embed")
+                               in_ax="ffw", out_ax="embed", mode=mode)
 
 
 def gelu_mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
@@ -60,13 +61,13 @@ def gelu_mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
 
 
 def gelu_mlp_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
-                   d_ff: int = 0) -> jax.Array:
+                   d_ff: int = 0, mode: str = "train") -> jax.Array:
     d, f = cfg.d_model, (d_ff or cfg.d_ff)
     h = linear.linear_apply(cfg, params["fc1"], x, "mlp", d, f,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     h = shard(h, "batch", "seq", "act_ffw")
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         h = jax.nn.gelu(h)
     return linear.linear_apply(cfg, params["fc2"], h, "mlp", f, d,
-                               in_ax="ffw", out_ax="embed")
+                               in_ax="ffw", out_ax="embed", mode=mode)

@@ -173,20 +173,30 @@ class Model:
     def prefill(self, params: Dict, batch: Dict, caches: Dict,
                 positions: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
-        """Write the prompt into caches; returns (last-token logits, caches)."""
+        """Write the prompt into caches; returns (last-token logits, caches).
+
+        Runs with mode='infer': CoLA sites take the fused no-residual
+        forward (no z_pre saved — there is no backward to feed).  The
+        serve engine passes left-padded ragged prompts with per-row
+        ``positions``; pad columns carry negative positions, which mask
+        their attention rows and park their K/V writes in the sacrificial
+        last cache slot (see attention.gqa_apply).
+        """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         if cfg.is_encoder_decoder:
             enc = encdec.encode(cfg, params["blocks"],
-                                batch["frames"].astype(dtype))
-            cross = encdec.build_cross_caches(cfg, params["blocks"], enc)
+                                batch["frames"].astype(dtype), mode="infer")
+            cross = encdec.build_cross_caches(cfg, params["blocks"], enc,
+                                              mode="infer")
             caches = {"self": caches["self"], "cross": cross}
             x = embed(params["embed"], batch["tokens"], dtype)
             b, s = x.shape[:2]
             if positions is None:
                 positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
             x, new_caches = encdec.decode_stack(
-                cfg, params["blocks"], x, positions=positions, caches=caches)
+                cfg, params["blocks"], x, positions=positions, caches=caches,
+                mode="infer")
             return self._logits(params, x[:, -1:]), new_caches
         x = self._embed_inputs(params, batch, dtype)
         b, s = x.shape[:2]
@@ -195,23 +205,29 @@ class Model:
         cos_sin = self._cos_sin(positions, batch)
         x, new_caches, _ = transformer.stack_forward(
             cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
-            caches=caches)
+            caches=caches, mode="infer")
         return self._logits(params, x[:, -1:]), new_caches
 
     def decode_step(self, params: Dict, tokens: jax.Array, caches: Dict,
                     positions: jax.Array) -> Tuple[jax.Array, Dict]:
-        """One decode step.  tokens/positions: (B, 1)."""
+        """One decode step.  tokens/positions: (B, 1).
+
+        mode='infer' end to end: at T = B×1 every CoLA site lands below
+        ops.DECODE_T_MAX and dispatches the GEMV-shaped ``cola_ae_decode``
+        kernel — never the training-shaped token-tile grids.
+        """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         x = embed(params["embed"], tokens, dtype)
         if cfg.is_encoder_decoder:
             x, new_caches = encdec.decode_stack(
-                cfg, params["blocks"], x, positions=positions, caches=caches)
+                cfg, params["blocks"], x, positions=positions, caches=caches,
+                mode="infer")
             return self._logits(params, x), new_caches
         cos_sin = self._cos_sin(positions, {})
         x, new_caches, _ = transformer.stack_forward(
             cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
-            caches=caches)
+            caches=caches, mode="infer")
         return self._logits(params, x), new_caches
 
     # ---- dry-run input specs ---------------------------------------------------

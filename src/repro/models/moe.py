@@ -56,17 +56,17 @@ def moe_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
 
 
 def _expert_ffn(cfg: ModelConfig, eparams: Dict, x: jax.Array,
-                d: int, f: int) -> jax.Array:
+                d: int, f: int, mode: str = "train") -> jax.Array:
     """SwiGLU for a single expert; x: (C, d). No shard() calls inside."""
     g = linear.linear_apply(cfg, eparams["gate"], x, "expert", d, f,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     u = linear.linear_apply(cfg, eparams["up"], x, "expert", d, f,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     if cfg.parameterization != "cola" or keep_original_sigma(cfg):
         g = silu(g)
     return linear.linear_apply(cfg, eparams["down"], g * u, "expert", f, d,
-                               in_ax="ffw", out_ax="embed")
+                               in_ax="ffw", out_ax="embed", mode=mode)
 
 
 def _capacity(cfg: ModelConfig, tokens: int) -> int:
@@ -75,7 +75,8 @@ def _capacity(cfg: ModelConfig, tokens: int) -> int:
 
 
 def _moe_core(cfg: ModelConfig, params: Dict, x: jax.Array, d_ff: int, *,
-              ep_axis: Optional[str], ep_rank, ep_size: int
+              ep_axis: Optional[str], ep_rank, ep_size: int,
+              mode: str = "train"
               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Route + dispatch + expert compute for local tokens x: (b, s, d).
 
@@ -122,7 +123,7 @@ def _moe_core(cfg: ModelConfig, params: Dict, x: jax.Array, d_ff: int, *,
 
     # ---- expert compute (vmap over local experts) -------------------------
     eparams = jax.tree.map(lambda w: w.astype(x.dtype), params["experts"])
-    out_buf = jax.vmap(lambda ep, xb: _expert_ffn(cfg, ep, xb, d, f))(
+    out_buf = jax.vmap(lambda ep, xb: _expert_ffn(cfg, ep, xb, d, f, mode))(
         eparams, buf)                                           # (E_l, C, d)
 
     # ---- combine ----------------------------------------------------------
@@ -147,12 +148,13 @@ def _moe_core(cfg: ModelConfig, params: Dict, x: jax.Array, d_ff: int, *,
 
 
 def moe_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
-              d_ff: int = 0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+              d_ff: int = 0, mode: str = "train"
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """MoE FFN; shard_map EP when a mesh is active, plain local core else."""
     env = current_env()
     if env is None or int(np.prod(list(env.mesh.shape.values()))) == 1:
         y, aux = _moe_core(cfg, params, x, d_ff, ep_axis=None, ep_rank=0,
-                           ep_size=1)
+                           ep_size=1, mode=mode)
     else:
         mesh = env.mesh
         batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
@@ -180,12 +182,13 @@ def moe_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
             if ep_size > 1:
                 rank = jax.lax.axis_index(model)
                 yy, aux = _moe_core(cfg, pp, xl, d_ff, ep_axis=model,
-                                    ep_rank=rank, ep_size=ep_size)
+                                    ep_rank=rank, ep_size=ep_size,
+                                    mode=mode)
             else:
                 # no EP: tokens & weights replicated over 'model'; every
                 # model rank computes the identical full-expert output.
                 yy, aux = _moe_core(cfg, pp, xl, d_ff, ep_axis=None,
-                                    ep_rank=0, ep_size=1)
+                                    ep_rank=0, ep_size=1, mode=mode)
             if batch_axes:
                 aux = {kk: jax.lax.pmean(vv, batch_axes)
                        for kk, vv in aux.items()}
@@ -200,5 +203,6 @@ def moe_apply(cfg: ModelConfig, params: Dict, x: jax.Array,
     if "shared" in params:
         from repro.models.mlp import swiglu_apply
         y = y + swiglu_apply(cfg, params["shared"], x,
-                             cfg.moe.shared_expert_d_ff, site="mlp")
+                             cfg.moe.shared_expert_d_ff, site="mlp",
+                             mode=mode)
     return y, aux

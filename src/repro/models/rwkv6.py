@@ -89,7 +89,7 @@ def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
 
 
 def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
-             state: Optional[RWKVState] = None
+             state: Optional[RWKVState] = None, mode: str = "train"
              ) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
     d, h, dh = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
     b, s, _ = x.shape
@@ -113,14 +113,14 @@ def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     w = jnp.exp(-jnp.exp(w))                                 # (b, s, d)
 
     r = linear.linear_apply(cfg, p["r"], xr, "attn", d, d,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
     k = linear.linear_apply(cfg, p["k"], xk, "attn", d, d,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
     v = linear.linear_apply(cfg, p["v"], xv, "attn", d, d,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
     g = linear.linear_apply(cfg, p["g"], xg, "attn", d, d,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
 
     rh = r.reshape(b, s, h, dh)
     kh = k.reshape(b, s, h, dh)
@@ -134,13 +134,13 @@ def time_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
                         .reshape(h, dh))
     y = y.reshape(b, s, d) * silu(g)
     out = linear.linear_apply(cfg, p["o"], y, "attn", d, d,
-                              in_ax="heads", out_ax="embed")
+                              in_ax="heads", out_ax="embed", mode=mode)
     new_tm_x = x[:, -1, :] if state is not None else None
     return out, new_tm_x, (wkv_state if state is not None else None)
 
 
 def channel_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
-                state: Optional[RWKVState] = None
+                state: Optional[RWKVState] = None, mode: str = "train"
                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     d, ff = cfg.d_model, cfg.d_ff
     dt = x.dtype
@@ -151,13 +151,13 @@ def channel_mix(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     xr = x + xx * p["cm_maa_r"].astype(dt)
     k = linear.linear_apply(cfg, p["cm_k"], xk, "mlp", d, ff,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="ffw")
+                            in_ax="embed", out_ax="ffw", mode=mode)
     k = jnp.square(jax.nn.relu(k))
     kv = linear.linear_apply(cfg, p["cm_v"], k, "mlp", ff, d,
-                             in_ax="ffw", out_ax="embed")
+                             in_ax="ffw", out_ax="embed", mode=mode)
     r = linear.linear_apply(cfg, p["cm_r"], xr, "attn", d, d,
                             originally_nonlinear=True,
-                            in_ax="embed", out_ax="heads")
+                            in_ax="embed", out_ax="heads", mode=mode)
     out = jax.nn.sigmoid(r) * kv
     new_cm_x = x[:, -1, :] if state is not None else None
     return out, new_cm_x

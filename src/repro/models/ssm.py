@@ -88,13 +88,14 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 
 def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
-                state: Optional[MambaState] = None
+                state: Optional[MambaState] = None,
+                mode: str = "train"
                 ) -> Tuple[jax.Array, Optional[MambaState]]:
     d = cfg.d_model
     di, N, dc, dtr = _dims(cfg)
     b, s, _ = x.shape
     xz = linear.linear_apply(cfg, params["in_proj"], x, "mlp", d, 2 * di,
-                             in_ax="embed", out_ax="ffw")
+                             in_ax="embed", out_ax="ffw", mode=mode)
     xin, z = jnp.split(xz, 2, axis=-1)
 
     prev_conv = state.conv if state is not None else None
@@ -103,9 +104,10 @@ def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     xc = silu(xc)
 
     dbc = linear.linear_apply(cfg, params["x_proj"], xc, "small", di,
-                              dtr + 2 * N)
+                              dtr + 2 * N, mode=mode)
     dt, B, C = jnp.split(dbc, [dtr, dtr + N], axis=-1)
-    dt = linear.linear_apply(cfg, params["dt_proj"], dt, "small", dtr, di)
+    dt = linear.linear_apply(cfg, params["dt_proj"], dt, "small", dtr, di,
+                             mode=mode)
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          params["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
@@ -115,7 +117,7 @@ def mamba_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
                                      params["D"], init)
     y = y * silu(z)
     out = linear.linear_apply(cfg, params["out_proj"], y, "mlp", di, d,
-                              in_ax="ffw", out_ax="embed")
+                              in_ax="ffw", out_ax="embed", mode=mode)
     new_state = (MambaState(conv=new_conv.astype(jnp.bfloat16), ssm=ssm)
                  if state is not None else None)
     return out, new_state

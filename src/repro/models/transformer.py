@@ -113,7 +113,8 @@ def _zero_aux(cfg: ModelConfig) -> Dict[str, jax.Array]:
 
 
 def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
-                 x: jax.Array, *, cos_sin, positions, cache, aux_acc):
+                 x: jax.Array, *, cos_sin, positions, cache, aux_acc,
+                 mode: str = "train"):
     """One layer: pre-norm mixer + pre-norm ffn, residual adds."""
     new_cache = cache
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
@@ -121,21 +122,23 @@ def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
         if cfg.attention == "mla":
             a, new_cache = attention.mla_apply(
                 cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
-                positions=positions)
+                positions=positions, mode=mode)
         else:
             a, new_cache = attention.gqa_apply(
                 cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
-                positions=positions)
+                positions=positions, mode=mode)
         x = x + a
     elif kind == "mamba":
-        a, new_cache = ssm.mamba_apply(cfg, lp["mixer"], h, state=cache)
+        a, new_cache = ssm.mamba_apply(cfg, lp["mixer"], h, state=cache,
+                                       mode=mode)
         x = x + a
     elif kind == "rwkv6":
         tm_out, new_tm, new_wkv = rwkv6.time_mix(cfg, lp["mixer"], h,
-                                                 state=cache)
+                                                 state=cache, mode=mode)
         x = x + tm_out
         h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
-        cm_out, new_cm = rwkv6.channel_mix(cfg, lp["mixer"], h2, state=cache)
+        cm_out, new_cm = rwkv6.channel_mix(cfg, lp["mixer"], h2,
+                                           state=cache, mode=mode)
         x = x + cm_out
         if cache is not None:
             new_cache = rwkv6.RWKVState(tm_x=new_tm.astype(jnp.bfloat16),
@@ -145,24 +148,28 @@ def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
     # ffn (attn / mamba layers)
     h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
     if is_moe:
-        f, aux = moe.moe_apply(cfg, lp["ffn"], h)
+        f, aux = moe.moe_apply(cfg, lp["ffn"], h, mode=mode)
         aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
     else:
         d_ff = (cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe.enabled \
             else cfg.d_ff
         if cfg.family == "audio":
-            f = mlp.gelu_mlp_apply(cfg, lp["ffn"], h, d_ff)
+            f = mlp.gelu_mlp_apply(cfg, lp["ffn"], h, d_ff, mode=mode)
         else:
-            f = mlp.swiglu_apply(cfg, lp["ffn"], h, d_ff)
+            f = mlp.swiglu_apply(cfg, lp["ffn"], h, d_ff, mode=mode)
     x = x + f
     return x, new_cache, aux_acc
 
 
 def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
                   cos_sin=None, positions=None, caches: Optional[Dict] = None,
-                  training: bool = False
+                  training: bool = False, mode: str = "train"
                   ) -> Tuple[jax.Array, Optional[Dict], Dict]:
-    """Run the full decoder stack.  block_params/caches are period-stacked."""
+    """Run the full decoder stack.  block_params/caches are period-stacked.
+
+    mode: 'train' | 'infer', threaded to every linear site.  The serve
+    paths (Model.prefill / Model.decode_step) pass 'infer' so CoLA sites
+    skip residual saving and decode batches dispatch the GEMV kernel."""
     period = period_length(cfg)
     kinds = cfg.layer_kinds()
     has_cache = caches is not None
@@ -180,7 +187,7 @@ def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
             xc, nc, aux_acc = _apply_layer(
                 cfg, kinds[i], cfg.layer_is_moe(i), lp, xc,
                 cos_sin=cos_sin, positions=positions, cache=cache_i,
-                aux_acc=aux_acc)
+                aux_acc=aux_acc, mode=mode)
             if has_cache and f"layer{i}" in pcache:
                 new_pcache[f"layer{i}"] = nc
         # seq-sharded carry (Megatron-SP): the saved per-block residual

@@ -1,0 +1,191 @@
+"""Slot-based continuous-batching scheduler for the serve engine.
+
+The engine (serve/engine.py) owns the device state — persistent slot
+caches, the jitted admission prefill and the jitted k-token decode chunk.
+This module owns the *policy*: request/response dataclasses, slot
+admission, EOS/length detection and slot recycling.
+
+Execution model
+---------------
+``max_batch`` slots share one (B, max_seq) cache set.  Each scheduler
+round:
+
+1. **Admit** — free slots pull requests off the queue.  The newly admitted
+   prompts are **left-padded** to a shared bucket length and prefilled in
+   one batched dispatch; rows that are not being admitted carry an all-pad
+   dummy whose cache writes land in the sacrificial last slot and whose
+   cache rows are masked back to their previous contents on merge
+   (engine._admit).  Left padding puts every prompt's last real token in
+   the final column, so one ``logits[:, -1]`` read samples every first
+   token.  Pad columns carry **negative positions**: rope/visibility use
+   the true per-sequence position (cache slot == sequence index, identical
+   to an unpadded run), the attention mask hides everything the row has
+   not written, and pad K/V parks in the reserved ``max_seq - 1`` slot —
+   which is why a request must fit ``prompt + max_new ≤ max_seq - 1``.
+
+2. **Decode** — one jitted ``lax.scan`` dispatch advances every slot by
+   ``decode_block`` tokens (finished/free slots decode masked-out garbage
+   for at most one chunk — the price of a fixed shape).  The host then
+   scans the (B, k) chunk for per-request EOS / length exhaustion,
+   finalizes responses and recycles slots for the next admit round.
+
+Ragged prompts require per-position attention masking, which only the
+attention caches implement; recurrent archs (mamba/rwkv6) would absorb the
+pad tokens into their state, so the scheduler rejects ragged admission for
+them (equal-length prompts still work — pad is zero).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt`` is a 1-D int32 token array."""
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.uid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.uid}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class Response:
+    """Completed generation.  ``tokens`` includes the EOS token when the
+    request finished on one."""
+    uid: int
+    prompt_len: int
+    tokens: np.ndarray
+    finish_reason: str          # 'eos' | 'length'
+    latency_s: float            # submit-batch start -> finish
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    tokens: List[int]
+    t_admit: float
+
+
+def _bucket(n: int, quantum: int) -> int:
+    """Round a prompt length up to the bucket quantum (bounds the number
+    of prefill recompiles to O(max_seq / quantum))."""
+    return ((n + quantum - 1) // quantum) * quantum
+
+
+class SlotScheduler:
+    """Continuous batching over a ServeEngine's slots."""
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    # -----------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            rng: Optional[np.ndarray] = None) -> List[Response]:
+        """Drive all requests to completion; returns responses in uid
+        order.  ``rng`` is a jax PRNGKey enabling temperature sampling
+        (greedy rows are unaffected — see engine._sample_batch)."""
+        eng = self.engine
+        B, max_seq = eng.max_batch, eng.max_seq
+        for r in requests:
+            if len(r.prompt) + r.max_new_tokens > max_seq - 1:
+                raise ValueError(
+                    f"request {r.uid}: prompt({len(r.prompt)}) + "
+                    f"max_new({r.max_new_tokens}) must fit max_seq-1 = "
+                    f"{max_seq - 1} (last slot is the pad-parking slot)")
+        if not eng.supports_ragged:
+            lens = {len(r.prompt) for r in requests}
+            if len(lens) > 1:
+                raise ValueError(
+                    "ragged prompts need per-position attention masking; "
+                    f"recurrent arch '{eng.model.cfg.name}' requires "
+                    "equal-length prompts")
+
+        queue = collections.deque(requests)
+        slots: Dict[int, Optional[_Slot]] = {i: None for i in range(B)}
+        free = list(range(B))
+        # host mirrors of the device carry
+        cur_tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        done: Dict[int, Response] = {}
+        t0 = time.perf_counter()
+
+        def finish(i: int, reason: str) -> None:
+            s = slots[i]
+            done[s.req.uid] = Response(
+                uid=s.req.uid, prompt_len=len(s.req.prompt),
+                tokens=np.asarray(s.tokens, np.int32), finish_reason=reason,
+                latency_s=time.perf_counter() - s.t_admit)
+            slots[i] = None
+            temps[i] = 0.0
+            free.append(i)
+
+        def consume(i: int, toks: np.ndarray) -> None:
+            """Fold freshly decoded tokens into slot i, finishing on EOS
+            or budget exhaustion (extra chunk tokens are dropped)."""
+            s = slots[i]
+            for t in toks:
+                s.tokens.append(int(t))
+                if s.req.eos_id is not None and int(t) == s.req.eos_id:
+                    finish(i, "eos")
+                    return
+                if len(s.tokens) >= s.req.max_new_tokens:
+                    finish(i, "length")
+                    return
+
+        while queue or len(free) < B:
+            # ---- admit ------------------------------------------------
+            newly: List[int] = []
+            while queue and free:
+                i = free.pop()
+                slots[i] = _Slot(req=queue.popleft(), tokens=[],
+                                 t_admit=time.perf_counter())
+                newly.append(i)
+            if newly:
+                if not eng.supports_ragged:
+                    P = max(len(slots[i].req.prompt) for i in newly)
+                else:
+                    P = _bucket(max(len(slots[i].req.prompt)
+                                    for i in newly), eng.prompt_bucket)
+                tokens = np.zeros((B, P), np.int32)
+                pads = np.full((B,), P, np.int32)  # non-admitted: all-pad
+                admit = np.zeros((B,), bool)
+                for i in newly:
+                    p = slots[i].req.prompt
+                    tokens[i, P - len(p):] = p
+                    pads[i] = P - len(p)
+                    admit[i] = True
+                    temps[i] = slots[i].req.temperature
+                positions = (np.arange(P)[None, :] -
+                             pads[:, None]).astype(np.int32)
+                tok0 = eng.admit(tokens, positions, admit, temps, rng)
+                for i in newly:
+                    cur_tok[i, 0] = tok0[i]
+                    pos[i] = len(slots[i].req.prompt)
+                    consume(i, tok0[i:i + 1])
+            # ---- decode one chunk --------------------------------------
+            if len(free) == B:
+                continue  # everything finished at its first token
+            toks, new_tok, new_pos = eng.decode_chunk(cur_tok, pos, temps,
+                                                      rng)
+            cur_tok, pos = new_tok, new_pos
+            for i in range(B):
+                if slots[i] is not None:
+                    consume(i, toks[i])
+
+        out = [done[r.uid] for r in requests]
+        self.last_wall_s = time.perf_counter() - t0
+        return out

@@ -157,9 +157,11 @@ def test_dw_vmem_fallback_guard():
 
 def test_planner_routes_by_shape_and_structure():
     """Over-VMEM sites (internlm2 down-proj) now plan 'staged' — never
-    'ref'; small no-bias sites keep the monolith; bias and mid-pipeline
-    collectives structurally force the staged pipeline."""
-    from repro.kernels.cola_ae.ops import _plan_bwd, _plan_fwd
+    'ref'; small sites keep the monolith *including bias* (the fold);
+    mid-pipeline collectives and bias grads force the staged pipeline.
+    Infer mode adds the decode plan below the T threshold."""
+    from repro.kernels.cola_ae.ops import (DECODE_T_MAX, _plan_bwd,
+                                           _plan_fwd, _plan_infer)
     big_a = jax.ShapeDtypeStruct((16384, 1536), jnp.bfloat16)
     big_b = jax.ShapeDtypeStruct((1536, 6144), jnp.bfloat16)
     assert not cak.weights_fit_vmem(16384, 1536, 6144)
@@ -168,11 +170,25 @@ def test_planner_routes_by_shape_and_structure():
     small_a = jax.ShapeDtypeStruct((256, 64), jnp.bfloat16)
     small_b = jax.ShapeDtypeStruct((64, 384), jnp.bfloat16)
     assert _plan_fwd("pallas", small_a, small_b) == "monolith"
-    assert _plan_fwd("pallas", small_a, small_b, has_bias=True) == "staged"
+    # monolith bias fold: bias no longer forces the split in forward —
+    # only the *backward* needs the dzl seam for the bias grads
+    assert _plan_fwd("pallas", small_a, small_b, has_bias=True) == "monolith"
     assert _plan_fwd("pallas", small_a, small_b, mid_psum=True) == "staged"
     assert _plan_bwd("pallas", small_a, small_b, want_dbias=True) == "staged"
     assert _plan_bwd("pallas", small_a, small_b, mid_psum=True) == "staged"
     assert _plan_fwd("ref", small_a, small_b) == "ref"
+    # infer: T at/below the threshold takes the GEMV decode launch (even
+    # for over-VMEM sites — it streams weights); above it, the same
+    # monolith/staged routing as the training forward
+    assert _plan_infer("pallas", small_a, small_b, 1) == "decode"
+    assert _plan_infer("pallas", small_a, small_b, DECODE_T_MAX) == "decode"
+    assert _plan_infer("pallas", big_a, big_b, 8) == "decode"
+    assert _plan_infer("pallas", small_a, small_b,
+                       DECODE_T_MAX + 1) == "monolith"
+    assert _plan_infer("pallas", big_a, big_b, 4096) == "staged"
+    assert _plan_infer("pallas", small_a, small_b, 1,
+                       mid_psum=True) == "staged"
+    assert _plan_infer("ref", small_a, small_b, 1) == "ref"
 
 
 # --------------------------------------------------------------------------
@@ -268,14 +284,15 @@ def test_staged_bias_grad_parity(rng):
             assert _rel(u, v) <= 1e-5, (sigma, u.shape, _rel(u, v))
 
 
-def test_staged_path_is_six_kernels_zero_gemms(rng):
-    """grad(staged) = stage_a + stage_b fwd, dzl + dx + dA + dB bwd —
-    six Pallas launches, zero XLA GEMMs (the bias-less case)."""
+def test_staged_path_is_seven_kernels_zero_gemms(rng):
+    """grad(staged) = stage_a + stage_b fwd, dzl + dz + dx + dA + dB bwd —
+    seven Pallas launches (dz materialized once for the dA weight passes),
+    zero XLA GEMMs (the bias-less case)."""
     with cao.force_impl(plan="staged"):
         loss = lambda x, a, b: (cao.cola_ae(x, a, b, impl="pallas",
                                             interpret=True) ** 2).sum()
         jx = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(*_args(rng))
-    assert _count_prims(jx.jaxpr, "pallas_call") == 6
+    assert _count_prims(jx.jaxpr, "pallas_call") == 7
     assert _count_prims(jx.jaxpr, "dot_general") == 0
 
 
@@ -297,9 +314,10 @@ def test_staged_vjp_saves_only_lowrank_residuals(rng):
 
 def test_local_model_bias_sites_stay_fused():
     """No mesh: a bias-carrying config (qwen2 qkv_bias) with use_fused
-    routes every AE site through the fused planner — bias sites included
-    (previously they fell back to unfused einsums inside cola_ae) — and
-    loss/grads match the unfused reference."""
+    routes every AE site through the fused planner — bias sites now take
+    the monolith *forward* (bias folded into the kernel body) with the
+    staged backward supplying the bias grads — and loss/grads match the
+    unfused reference."""
     import dataclasses
 
     from repro.config import get_config
@@ -329,7 +347,10 @@ def test_local_model_bias_sites_stay_fused():
     with cao.force_impl("pallas", True):
         l1, g1 = grads(fused=True)
     assert cao.DISPATCH["apply_fused_local"] > 0
-    assert cao.DISPATCH["fwd_staged"] > 0, dict(cao.DISPATCH)  # bias sites
+    # bias sites fold into the monolith fwd; their bwd rides the staged
+    # kernels (the dzl seam yields dbias)
+    assert cao.DISPATCH["fwd_monolith"] > 0, dict(cao.DISPATCH)
+    assert cao.DISPATCH["bwd_staged"] > 0, dict(cao.DISPATCH)
     assert cao.DISPATCH["fwd_ref"] == 0 and cao.DISPATCH["bwd_ref"] == 0
     assert l0 == pytest.approx(l1, rel=1e-5)
     for u, v in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
