@@ -1,16 +1,34 @@
 """Fault-tolerant checkpointing.
 
 * **Atomic**: write to ``step_<N>.tmp/`` then ``os.rename`` — a crash mid-
-  write can never corrupt the latest checkpoint.
+  write can never corrupt the latest checkpoint.  Every file is flushed and
+  fsync'd before the rename, and the parent directory is fsync'd after it,
+  so a host power-cut cannot leave a renamed-but-empty checkpoint either.
+* **Verified**: each checkpoint carries a ``manifest.json`` with a per-leaf
+  CRC32 (over the raw array bytes) plus a whole-file CRC/size for
+  ``state.npz``.  ``restore`` verifies integrity by default and raises
+  :class:`CheckpointCorruptError` on any mismatch; ``latest_good_step``
+  walks checkpoints newest-first and returns the newest one that passes
+  verification — a corrupt or partially-written checkpoint is skipped, not
+  served.
 * **Async**: the device→host copy happens on the caller thread (cheap),
   serialization runs on a background thread so the train loop is not
-  blocked (paper-scale runs checkpoint ~GBs).
-* **Retention**: keep the newest K checkpoints.
+  blocked (paper-scale runs checkpoint ~GBs).  A failure on the writer
+  thread is captured and re-raised from the next ``wait()``/``save()`` —
+  never silently dropped on a daemon thread.
+* **Retention**: keep the newest K checkpoints; stray ``*.tmp`` dirs from
+  crashed writers are garbage-collected on the next save.
 * **Elastic**: checkpoints are host numpy keyed by pytree path — restore
   accepts any target shardings, so a 512-chip run resumes on 256 chips
   (distributed/elastic.py + tests/test_checkpoint.py exercise this).
-* **Resume**: ``latest_step()`` scans the directory; the data pipeline state
-  (one integer) rides along in ``extra.json``.
+* **Resume**: ``latest_step()``/``latest_good_step()`` scan the directory;
+  the data pipeline state (step + skip offset) rides along in
+  ``extra.json``.
+* **Chaos hooks**: ``fault_hook(stage, step)`` is called at the write
+  stages ``"post_state"`` (state.npz written, manifest not yet) and
+  ``"pre_rename"`` (everything written, rename pending) so the
+  fault-injection harness (repro/testing/faults.py) can simulate a death
+  mid-write deterministically; production leaves it ``None``.
 """
 from __future__ import annotations
 
@@ -19,10 +37,24 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
+
+MANIFEST = "manifest.json"
+STATE = "state.npz"
+EXTRA = "extra.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (missing files, bad CRC,
+    truncated archive)."""
+
+
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint write failed; re-raised from wait()."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -45,25 +77,72 @@ def _unflatten(template, blobs: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _file_crc(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            crc = zlib.crc32(b, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # chaos-testing hook: called at write stages; may raise to simulate
+        # a crash mid-write (repro/testing/faults.py)
+        self.fault_hook: Optional[Callable[[str, int], None]] = None
         os.makedirs(directory, exist_ok=True)
 
     # ---- write -------------------------------------------------------------
     def save(self, step: int, state, extra: Optional[Dict] = None) -> None:
         host = _flatten(jax.device_get(state))  # sync copy off device
         if self.async_save:
-            self.wait()  # one in-flight save at a time
+            self.wait()  # one in-flight save at a time; re-raises failures
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, extra or {}),
+                target=self._write_guarded, args=(step, host, extra or {}),
                 daemon=True)
             self._thread.start()
         else:
             self._write(step, host, extra or {})
+
+    def _write_guarded(self, step: int, host: Dict[str, np.ndarray],
+                       extra: Dict) -> None:
+        try:
+            self._write(step, host, extra)
+        except BaseException as e:  # captured; re-raised from wait()
+            self._error = e
 
     def _write(self, step: int, host: Dict[str, np.ndarray],
                extra: Dict) -> None:
@@ -72,24 +151,57 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "state.npz"),
-                 **{k: v for k, v in host.items()})
-        with open(os.path.join(tmp, "extra.json"), "w") as f:
+        state_path = os.path.join(tmp, STATE)
+        np.savez(state_path, **{k: v for k, v in host.items()})
+        if self.fault_hook is not None:
+            self.fault_hook("post_state", step)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"crc32": _leaf_crc(v),
+                           "shape": list(v.shape),
+                           "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "files": {STATE: {"crc32": _file_crc(state_path),
+                              "size": os.path.getsize(state_path)}},
+        }
+        with open(os.path.join(tmp, EXTRA), "w") as f:
             json.dump({"step": step, **extra}, f)
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        for name in (STATE, EXTRA, MANIFEST):
+            _fsync_file(os.path.join(tmp, name))
+        _fsync_dir(tmp)
+        if self.fault_hook is not None:
+            self.fault_hook("pre_rename", step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(self.dir)
         self._gc()
 
     def wait(self) -> None:
+        """Join any in-flight background save and re-raise its failure —
+        a lost checkpoint must surface on the train loop, not die with a
+        daemon thread."""
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointWriteError(
+                f"background checkpoint write failed: {err!r}") from err
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
+        # stray tmp dirs are crashed writers' leftovers (save() serializes
+        # writes, and _gc runs after the active write's rename)
+        for name in os.listdir(self.dir):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # ---- read ---------------------------------------------------------------
     def all_steps(self):
@@ -104,11 +216,70 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, template, shardings=None):
-        """Load into `template`'s structure; optionally device_put with
-        `shardings` (any mesh — elastic restart)."""
+    def latest_good_step(self) -> Optional[int]:
+        """Newest checkpoint that passes integrity verification — corrupt
+        or partially-written checkpoints are skipped, so a bad write (or a
+        bit-flipped disk) falls back to the previous good step instead of
+        wedging resume."""
+        for s in reversed(self.all_steps()):
+            if self.verify(s):
+                return s
+        return None
+
+    def verify(self, step: int) -> bool:
+        try:
+            self.verify_or_raise(step)
+            return True
+        except CheckpointCorruptError:
+            return False
+
+    def verify_or_raise(self, step: int) -> None:
+        """Full integrity check: manifest present, state.npz file CRC/size
+        match, every manifest leaf present with matching per-leaf CRC."""
         path = os.path.join(self.dir, f"step_{step}")
-        blobs = dict(np.load(os.path.join(path, "state.npz")))
+        state_path = os.path.join(path, STATE)
+        man_path = os.path.join(path, MANIFEST)
+        for p in (state_path, man_path, os.path.join(path, EXTRA)):
+            if not os.path.exists(p):
+                raise CheckpointCorruptError(f"step {step}: missing {p}")
+        try:
+            with open(man_path) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable manifest: {e}") from e
+        finfo = manifest.get("files", {}).get(STATE, {})
+        if os.path.getsize(state_path) != finfo.get("size"):
+            raise CheckpointCorruptError(
+                f"step {step}: {STATE} size {os.path.getsize(state_path)} "
+                f"!= manifest {finfo.get('size')} (truncated write?)")
+        if _file_crc(state_path) != finfo.get("crc32"):
+            raise CheckpointCorruptError(
+                f"step {step}: {STATE} file CRC mismatch (corrupt bytes)")
+        try:
+            blobs = dict(np.load(state_path))
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable {STATE}: {e}") from e
+        leaves = manifest.get("leaves", {})
+        if set(blobs) != set(leaves):
+            raise CheckpointCorruptError(
+                f"step {step}: leaf set mismatch vs manifest")
+        for k, info in leaves.items():
+            if _leaf_crc(blobs[k]) != info["crc32"]:
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {k} CRC mismatch")
+
+    def restore(self, step: int, template, shardings=None, *,
+                verify: bool = True):
+        """Load into `template`'s structure; optionally device_put with
+        `shardings` (any mesh — elastic restart).  Verifies manifest
+        integrity first unless ``verify=False`` (raises
+        :class:`CheckpointCorruptError` on mismatch)."""
+        if verify:
+            self.verify_or_raise(step)
+        path = os.path.join(self.dir, f"step_{step}")
+        blobs = dict(np.load(os.path.join(path, STATE)))
         state = _unflatten(template, blobs)
         if shardings is not None:
             state = jax.tree.map(
@@ -116,6 +287,6 @@ class CheckpointManager:
         return state
 
     def restore_extra(self, step: int) -> Dict:
-        path = os.path.join(self.dir, f"step_{step}", "extra.json")
+        path = os.path.join(self.dir, f"step_{step}", EXTRA)
         with open(path) as f:
             return json.load(f)

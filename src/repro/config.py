@@ -283,6 +283,15 @@ class TrainConfig:
     checkpoint_dir: str = ""
     keep_checkpoints: int = 3
     async_checkpoint: bool = True
+    # robustness / recovery policy (train/guard.py)
+    nonfinite_guard: bool = True      # in-jit: skip update on NaN/inf
+    loss_spike_threshold: float = 0.0  # flag loss > t×EWMA (0 disables)
+    spike_warmup_steps: int = 5       # EWMA warmup before spikes flag
+    spike_ewma: float = 0.9           # EWMA coefficient for the loss avg
+    max_recoveries: int = 3           # rollbacks before hard failure
+    recovery_backoff_s: float = 0.0   # sleep attempt×this between retries
+    skip_window: int = 0              # extra data offset per recovery
+                                      # (0 => just past the bad batch)
     log_every: int = 10
     eval_every: int = 0
     eval_batches: int = 4

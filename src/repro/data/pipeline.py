@@ -24,20 +24,37 @@ class DataPipeline:
     seq_len: int
     shard: int = 0
     num_shards: int = 1
+    # recovery skip: batches are drawn at ``step + offset``, so advancing
+    # the offset skips a data window without touching the LR-schedule step
+    # (train/guard.py bumps it when rolling back past a poisoned batch).
+    # Rides along in checkpoint extra.json so resume replays identically.
+    offset: int = 0
 
     def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+        step = step + self.offset
         if isinstance(self.source, PackedCorpus):
             return self.source.batch(step, self.batch, self.seq_len,
                                      self.shard, self.num_shards)
         return self.source.batch(step, self.batch, self.seq_len, self.shard)
 
+    def skip_window(self, n: int) -> int:
+        """Advance the data offset by ``n`` batches; returns the new
+        offset."""
+        self.offset += int(n)
+        return self.offset
+
     # checkpointable state -------------------------------------------------
     def state(self, step: int) -> Dict:
         return {"step": step, "shard": self.shard,
-                "num_shards": self.num_shards}
+                "num_shards": self.num_shards, "offset": self.offset}
 
     @staticmethod
     def resume_step(state: Dict) -> int:
+        return int(state["step"])
+
+    def resume(self, state: Dict) -> int:
+        """Restore checkpointed pipeline state; returns the resume step."""
+        self.offset = int(state.get("offset", 0))
         return int(state["step"])
 
 

@@ -5,6 +5,11 @@ elasticity is just "device_put with the new mesh's shardings".  This module
 adds the bookkeeping a real fleet needs: recompute shardings for the new
 mesh, validate divisibility (the sharding rules degrade to replication when
 an axis no longer divides), and rescale the data-pipeline sharding.
+
+Restart targets the newest checkpoint that passes manifest verification
+(``latest_good_step``) — an elastic restart after a crash is exactly when
+a half-written or corrupt checkpoint is most likely, so the corrupt one is
+skipped, not served (tests/test_checkpoint.py exercises both).
 """
 from __future__ import annotations
 
@@ -26,9 +31,10 @@ def resume_on_mesh(ckpt_dir: str, mc: ModelConfig, tc: TrainConfig,
     may differ arbitrarily from the one that wrote the checkpoint."""
     model = build_model(mc)
     mgr = CheckpointManager(ckpt_dir)
-    step = step if step is not None else mgr.latest_step()
+    step = step if step is not None else mgr.latest_good_step()
     if step is None:
-        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        raise FileNotFoundError(
+            f"no verifiable checkpoints in {ckpt_dir}")
     template = step_mod.abstract_train_state(model, tc)
     axes = step_mod.train_state_axes(model, tc)
     shardings = param_sharding_tree(axes, template, env)

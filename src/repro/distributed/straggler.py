@@ -31,7 +31,10 @@ class StepWatchdog:
         self._t = time.monotonic()
 
     def stop(self, step: int) -> float:
+        if self._t is None:  # stop() without start(): no-op, not TypeError
+            return 0.0
         dt = time.monotonic() - self._t
+        self._t = None
         self.observe(step, dt)
         return dt
 

@@ -35,6 +35,16 @@ def main() -> None:
                     help="treat this token id as EOS (early slot recycle)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline (expired "
+                         "requests finish with finish_reason='timeout')")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-queue bound; overflow requests finish "
+                         "with finish_reason='rejected'")
+    ap.add_argument("--assert-timeout", action="store_true",
+                    help="append one request with a 0-second deadline and "
+                         "exit nonzero unless it reports "
+                         "finish_reason='timeout' (CI guardrail smoke)")
     args = ap.parse_args()
 
     import jax
@@ -51,6 +61,7 @@ def main() -> None:
     max_seq = args.max_prompt + args.new_tokens + 1  # +1: pad-parking slot
     eng = make_engine(cfg, max_batch=args.slots, max_seq=max_seq,
                       seed=args.seed, decode_block=args.decode_block)
+    eng.max_queue = args.max_queue
 
     rng = np.random.RandomState(args.seed)
     reqs = []
@@ -61,7 +72,16 @@ def main() -> None:
             prompt=rng.randint(1, cfg.vocab_size, (plen,)).astype(np.int32),
             max_new_tokens=int(rng.randint(1, args.new_tokens + 1)),
             temperature=args.temperature,
-            eos_id=args.eos_id))
+            eos_id=args.eos_id,
+            deadline_s=args.deadline_s))
+    if args.assert_timeout:
+        # a request that is already past its deadline at submit must come
+        # back as a typed timeout response, never an exception
+        reqs.append(Request(
+            uid=len(reqs),
+            prompt=rng.randint(1, cfg.vocab_size,
+                               (args.min_prompt,)).astype(np.int32),
+            max_new_tokens=args.new_tokens, deadline_s=0.0))
 
     t0 = time.perf_counter()
     resps = eng.serve(
@@ -82,9 +102,19 @@ def main() -> None:
     if "per_token_p50_s" in stats:
         print(f"per-token latency p50={stats['per_token_p50_s']*1e3:.2f}ms "
               f"p95={stats['per_token_p95_s']*1e3:.2f}ms (steady-state)")
+    print(f"guardrails: timeouts={stats['timeouts']} "
+          f"rejected={stats['rejected']} quarantines={stats['quarantines']} "
+          f"stalls={stats['stalls']}")
     r0 = resps[0]
     print(f"first request: prompt_len={r0.prompt_len} "
           f"reason={r0.finish_reason} tokens={r0.tokens[:12].tolist()}")
+    if args.assert_timeout:
+        last = resps[-1]
+        assert last.finish_reason == "timeout", (
+            f"deadline-exceeded request reported "
+            f"finish_reason={last.finish_reason!r}, want 'timeout'")
+        print(f"assert-timeout OK: uid={last.uid} finished "
+              f"'{last.finish_reason}' with {len(last.tokens)} tokens")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ init recipe).  From one declaration we derive:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -68,6 +69,14 @@ def _materialize(d: ParamDef, key, param_dtype) -> jax.Array:
     raise ValueError(f"unknown init '{d.init}'")
 
 
+def path_fold(path_str: str) -> int:
+    """Stable per-path fold value: CRC32 of the path bytes.  Python's
+    ``hash()`` is salted by PYTHONHASHSEED, so two processes would build
+    *different* params from the same seed — CRC32 is process-independent,
+    which multi-host init and checkpoint parity both require."""
+    return zlib.crc32(path_str.encode("utf-8")) & 0x7FFFFFFF
+
+
 def init_params(defs_tree, rng: jax.Array, param_dtype: str = "float32"):
     """Materialize a ParamDef tree with per-path independent keys."""
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(
@@ -75,7 +84,8 @@ def init_params(defs_tree, rng: jax.Array, param_dtype: str = "float32"):
     treedef = jax.tree.structure(defs_tree, is_leaf=is_def)
     arrays = []
     for path, d in leaves_with_paths:
-        key = jax.random.fold_in(rng, hash(jax.tree_util.keystr(path)) % (2**31))
+        key = jax.random.fold_in(
+            rng, path_fold(jax.tree_util.keystr(path)))
         arrays.append(_materialize(d, key, param_dtype))
     return jax.tree.unflatten(treedef, arrays)
 

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.models.common import path_fold
 from repro.optim.adamw import AdamState
 
 
@@ -39,7 +40,9 @@ def merge_restart(cfg: ModelConfig, params, opt: AdamState,
                 new_vals[key] = merged.astype(val.dtype)
                 continue
         if keys and keys[-1] == "lora_a":
-            k = jax.random.fold_in(rng, hash(key) % (2**31))
+            # path_fold, not hash(): restart draws must match across
+            # processes (hash() is PYTHONHASHSEED-salted)
+            k = jax.random.fold_in(rng, path_fold(key))
             std = 1.0 / jnp.sqrt(val.shape[0])
             new_vals[key] = (std * jax.random.normal(k, val.shape)
                              ).astype(val.dtype)

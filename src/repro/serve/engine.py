@@ -19,6 +19,18 @@ scans ``decode_block`` decode steps on device; the per-token Python loop
 survives only as ``generate_python_loop``, the parity/benchmark
 reference.  ``stats()['decode_dispatches']`` counts the jitted calls so
 tests can assert dispatches == ceil(tokens / k).
+
+Guardrails (chaos-tested in tests/test_chaos.py): every jitted admit /
+decode chunk also returns a per-slot **finite-ness flag** computed in-jit
+(``isfinite`` over the slot's logits — one cheap reduction riding the
+scan), so one NaN-poisoned slot can be quarantined by the scheduler
+without touching the other slots' bit streams; a host-side **stall
+watchdog** flags chunks slower than ``stall_timeout_s``; and
+``fault_hook`` lets the fault-injection harness
+(repro/testing/faults.py) poison a chosen slot's logits or delay a chosen
+dispatch deterministically.  All guardrail events land in ``stats()``
+(quarantines / requeues / timeouts / rejected / stalls /
+nonfinite_chunks) so serving incidents are auditable after the fact.
 """
 from __future__ import annotations
 
@@ -58,6 +70,16 @@ class ServeEngine:
     max_seq: int
     decode_block: int = 8     # tokens decoded per device dispatch
     prompt_bucket: int = 16   # prefill length quantum (bounds recompiles)
+    # ---- guardrails ------------------------------------------------------
+    max_queue: Optional[int] = None   # admission-queue bound (None = ∞);
+                                      # overflow -> finish_reason='rejected'
+    max_slot_retries: int = 2         # re-queues per request after a
+                                      # quarantine before 'error'
+    stall_timeout_s: Optional[float] = None  # per-chunk stall watchdog
+    # chaos hook: fault_hook(kind, dispatch_idx) -> None | dict with
+    # optional 'poison' ((B,) bool slot mask -> NaN logits in-jit) and
+    # 'delay_s' (host sleep inside the timed region).  Production: None.
+    fault_hook: Optional[object] = None
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -74,16 +96,30 @@ class ServeEngine:
         self._loop_prefill = jax.jit(self.model.prefill)
         self._loop_decode = jax.jit(self.model.decode_step, donate_argnums=2)
         self._rng_step = 0
-        self._stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
-                       "decode_tokens": 0, "chunk_s": [], "prefill_s": []}
+        self._no_poison = jnp.zeros((self.max_batch,), bool)
+        self._stats = self._fresh_stats()
+        self.events: List[dict] = []
+
+    def _fresh_stats(self) -> Dict:
+        return {"prefill_dispatches": 0, "decode_dispatches": 0,
+                "decode_tokens": 0, "chunk_s": [], "prefill_s": [],
+                "quarantines": 0, "requeues": 0, "timeouts": 0,
+                "rejected": 0, "stalls": 0, "nonfinite_chunks": 0,
+                "errors": 0}
+
+    def count(self, name: str, n: int = 1) -> None:
+        """Guardrail event counter (scheduler + watchdog feed this)."""
+        self._stats[name] = self._stats.get(name, 0) + n
 
     # ---- device functions -------------------------------------------------
     def _admit_impl(self, params, tokens, positions, admit_mask, caches,
-                    temps, rng, idx):
+                    temps, rng, idx, poison):
         """Batched left-padded prefill over the full slot dim.  Rows not
         being admitted run an all-pad dummy prompt (their writes park in
         the sacrificial slot) and their cache rows are masked back to the
-        previous tenant's contents — in-flight requests are untouched."""
+        previous tenant's contents — in-flight requests are untouched.
+        Also returns a per-slot finite-ness flag over the sampled-from
+        logits (``poison`` is the chaos-injection mask)."""
         logits, new_caches = self.model.prefill(
             params, {"tokens": tokens}, caches, positions=positions)
 
@@ -95,58 +131,105 @@ class ServeEngine:
             return jnp.where(m, n, o)
 
         caches = jax.tree.map(merge, new_caches, caches)
-        tok = _sample_batch(logits[:, -1], temps, rng, idx)
-        return tok, caches
+        last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        tok = _sample_batch(last, temps, rng, idx)
+        return tok, caches, ok
 
-    def _chunk_impl(self, params, tok, pos, temps, caches, rng, base):
+    def _chunk_impl(self, params, tok, pos, temps, caches, rng, base,
+                    poison):
         """k = decode_block decode steps in one dispatch: the scan body is
         one model.decode_step (mode='infer') + batched sampling; the KV
-        caches ride the carry and never leave the device."""
+        caches ride the carry and never leave the device.  A per-slot
+        finite-ness flag (AND over the chunk's logits) rides out with the
+        tokens; ``poison`` NaNs a chosen slot's logits for chaos tests."""
         def body(carry, i):
-            tok, pos, caches = carry
+            tok, pos, caches, ok = carry
             logits, caches = self.model.decode_step(params, tok, caches,
                                                     pos[:, None])
-            nxt = _sample_batch(logits[:, -1], temps, rng, base + i)
+            last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
+            ok = ok & jnp.all(jnp.isfinite(last), axis=-1)
+            nxt = _sample_batch(last, temps, rng, base + i)
             pos = jnp.minimum(pos + 1, self.max_seq - 1)
-            return (nxt, pos, caches), nxt[:, 0]
+            return (nxt, pos, caches, ok), nxt[:, 0]
 
-        (tok, pos, caches), toks = jax.lax.scan(
-            body, (tok, pos, caches), jnp.arange(self.decode_block))
-        return toks.T, tok, pos, caches
+        ok0 = jnp.ones((self.max_batch,), bool)
+        (tok, pos, caches, ok), toks = jax.lax.scan(
+            body, (tok, pos, caches, ok0), jnp.arange(self.decode_block))
+        return toks.T, tok, pos, caches, ok
 
     # ---- scheduler-facing API --------------------------------------------
     def _rng(self, rng) -> jax.Array:
         return jax.random.PRNGKey(0) if rng is None else rng
 
+    def _fault(self, kind: str, idx: int) -> Tuple[jax.Array, float]:
+        """Consult the chaos hook for this dispatch; returns the logits
+        poison mask and a host delay (0 in production)."""
+        if self.fault_hook is None:
+            return self._no_poison, 0.0
+        act = self.fault_hook(kind, idx) or {}
+        poison = act.get("poison")
+        poison = (self._no_poison if poison is None
+                  else jnp.asarray(poison, bool))
+        return poison, float(act.get("delay_s", 0.0))
+
+    def _watch_stall(self, kind: str, idx: int, elapsed: float) -> None:
+        if self.stall_timeout_s is not None and \
+                elapsed > self.stall_timeout_s:
+            self.count("stalls")
+            self.events.append({"kind": "stall", "dispatch": kind,
+                                "idx": idx, "elapsed_s": elapsed,
+                                "timeout_s": self.stall_timeout_s})
+
     def admit(self, tokens: np.ndarray, positions: np.ndarray,
               admit_mask: np.ndarray, temps: np.ndarray,
-              rng) -> np.ndarray:
+              rng) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (first token per slot, per-slot finite-ness flag)."""
+        idx = self._stats["prefill_dispatches"]
+        poison, delay_s = self._fault("prefill", idx)
         t0 = time.perf_counter()
-        tok, self._caches = self._admit_fn(
+        tok, self._caches, ok = self._admit_fn(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(admit_mask), self._caches, jnp.asarray(temps),
-            self._rng(rng), self._rng_step)
-        tok = np.asarray(tok)
+            self._rng(rng), self._rng_step, poison)
+        tok, ok = np.asarray(tok), np.asarray(ok)
+        if delay_s:
+            time.sleep(delay_s)  # simulated device stall (chaos)
+        elapsed = time.perf_counter() - t0
         self._rng_step += 1
         self._stats["prefill_dispatches"] += 1
-        self._stats["prefill_s"].append(time.perf_counter() - t0)
-        return tok[:, 0]
+        self._stats["prefill_s"].append(elapsed)
+        self._watch_stall("prefill", idx, elapsed)
+        return tok[:, 0], ok
 
     def decode_chunk(self, cur_tok: np.ndarray, pos: np.ndarray,
                      temps: np.ndarray, rng
-                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+        """Returns (chunk tokens (B, k), next token, next pos, per-slot
+        finite-ness flag — False means the slot's logits went NaN/inf
+        somewhere in the chunk and its tokens are garbage)."""
+        idx = self._stats["decode_dispatches"]
+        poison, delay_s = self._fault("decode", idx)
         t0 = time.perf_counter()
-        toks, tok, pos, self._caches = self._chunk_fn(
+        toks, tok, pos, self._caches, ok = self._chunk_fn(
             self.params, jnp.asarray(cur_tok), jnp.asarray(pos),
             jnp.asarray(temps), self._caches, self._rng(rng),
-            self._rng_step)
+            self._rng_step, poison)
         toks = np.asarray(toks)  # (B, k) — the one host sync per chunk
+        ok = np.asarray(ok)
+        if delay_s:
+            time.sleep(delay_s)  # simulated device stall (chaos)
+        elapsed = time.perf_counter() - t0
         self._rng_step += self.decode_block
         self._stats["decode_dispatches"] += 1
         self._stats["decode_tokens"] += toks.shape[0] * toks.shape[1]
-        self._stats["chunk_s"].append(time.perf_counter() - t0)
+        self._stats["chunk_s"].append(elapsed)
+        self._watch_stall("decode", idx, elapsed)
+        if not ok.all():
+            self.count("nonfinite_chunks")
         # writable copies: the scheduler mutates these host mirrors in place
-        return toks, np.array(tok), np.array(pos)
+        return toks, np.array(tok), np.array(pos), ok
 
     def stats(self) -> Dict:
         s = dict(self._stats)
@@ -165,8 +248,8 @@ class ServeEngine:
 
     def reset_stats(self) -> None:
         self._rng_step = 0
-        self._stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
-                       "decode_tokens": 0, "chunk_s": [], "prefill_s": []}
+        self._stats = self._fresh_stats()
+        self.events = []
 
     # ---- request-level entry points --------------------------------------
     def serve(self, requests: List[Request], *,

@@ -3,7 +3,8 @@
 The engine (serve/engine.py) owns the device state — persistent slot
 caches, the jitted admission prefill and the jitted k-token decode chunk.
 This module owns the *policy*: request/response dataclasses, slot
-admission, EOS/length detection and slot recycling.
+admission, EOS/length detection, slot recycling, and the serving
+guardrails (deadlines, admission-queue bounds, NaN-slot quarantine).
 
 Execution model
 ---------------
@@ -29,6 +30,29 @@ round:
    scans the (B, k) chunk for per-request EOS / length exhaustion,
    finalizes responses and recycles slots for the next admit round.
 
+Guardrails (chaos-tested in tests/test_chaos.py)
+------------------------------------------------
+* **Bounded admission queue** — with ``engine.max_queue`` set, requests
+  beyond ``free slots + max_queue`` at submit are finished immediately
+  with ``finish_reason='rejected'`` (a typed response, never an
+  exception) so a traffic spike degrades instead of OOMing the host.
+* **Per-request deadlines** — ``Request.deadline_s`` is a wall-clock
+  budget from submission; a request that expires while queued or
+  mid-generation is finalized with whatever tokens it has and
+  ``finish_reason='timeout'``.
+* **NaN quarantine** — the engine flags any slot whose logits went
+  non-finite during a chunk.  That slot's chunk tokens are discarded, the
+  slot is quarantined (freed; its cache row is rewritten by the next
+  admission prefill) and the request is re-queued from scratch at the
+  front of the queue, bounded by ``engine.max_slot_retries`` before
+  ``finish_reason='error'``.  The surviving slots consume their chunk
+  normally — slots are independent batch rows, so their greedy streams
+  stay bit-identical to an undisturbed run.
+
+``finish_reason`` is the guardrail contract: ``'eos' | 'length' |
+'timeout' | 'rejected' | 'error'`` — failures surface as typed responses,
+and every event is counted in ``engine.stats()``.
+
 Ragged prompts require per-position attention masking, which only the
 attention caches implement; recurrent archs (mamba/rwkv6) would absorb the
 pad tokens into their state, so the scheduler rejects ragged admission for
@@ -43,15 +67,20 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+FINISH_REASONS = ("eos", "length", "timeout", "rejected", "error")
+
 
 @dataclasses.dataclass
 class Request:
-    """One generation request.  ``prompt`` is a 1-D int32 token array."""
+    """One generation request.  ``prompt`` is a 1-D int32 token array.
+    ``deadline_s`` is an optional wall-clock budget measured from
+    submission (None = no deadline)."""
     uid: int
     prompt: np.ndarray
     max_new_tokens: int
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -64,12 +93,14 @@ class Request:
 @dataclasses.dataclass
 class Response:
     """Completed generation.  ``tokens`` includes the EOS token when the
-    request finished on one."""
+    request finished on one; ``finish_reason`` is one of
+    :data:`FINISH_REASONS` (rejected/timed-out requests return partial or
+    empty token arrays, never raise)."""
     uid: int
     prompt_len: int
     tokens: np.ndarray
-    finish_reason: str          # 'eos' | 'length'
-    latency_s: float            # submit-batch start -> finish
+    finish_reason: str          # FINISH_REASONS
+    latency_s: float            # submit -> finish
 
 
 @dataclasses.dataclass
@@ -113,22 +144,65 @@ class SlotScheduler:
                     f"recurrent arch '{eng.model.cfg.name}' requires "
                     "equal-length prompts")
 
-        queue = collections.deque(requests)
+        t0 = time.perf_counter()
+        t_submit = {r.uid: t0 for r in requests}
+        retries: Dict[int, int] = collections.Counter()
+        done: Dict[int, Response] = {}
+
+        # ---- bounded admission: reject overflow with a typed response --
+        queue = collections.deque()
+        capacity = (B + eng.max_queue if eng.max_queue is not None
+                    else None)
+        for r in requests:
+            if capacity is not None and len(queue) >= capacity:
+                done[r.uid] = Response(
+                    uid=r.uid, prompt_len=len(r.prompt),
+                    tokens=np.zeros((0,), np.int32),
+                    finish_reason="rejected", latency_s=0.0)
+                eng.count("rejected")
+            else:
+                queue.append(r)
+
         slots: Dict[int, Optional[_Slot]] = {i: None for i in range(B)}
         free = list(range(B))
         # host mirrors of the device carry
         cur_tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
-        done: Dict[int, Response] = {}
-        t0 = time.perf_counter()
+
+        def expired(req: Request) -> bool:
+            return (req.deadline_s is not None and
+                    time.perf_counter() - t_submit[req.uid] >
+                    req.deadline_s)
 
         def finish(i: int, reason: str) -> None:
             s = slots[i]
             done[s.req.uid] = Response(
                 uid=s.req.uid, prompt_len=len(s.req.prompt),
                 tokens=np.asarray(s.tokens, np.int32), finish_reason=reason,
-                latency_s=time.perf_counter() - s.t_admit)
+                latency_s=time.perf_counter() - t_submit[s.req.uid])
+            if reason in ("timeout", "error"):
+                eng.count("timeouts" if reason == "timeout" else "errors")
+            slots[i] = None
+            temps[i] = 0.0
+            free.append(i)
+
+        def quarantine(i: int) -> None:
+            """The engine flagged slot i's logits non-finite: its chunk
+            tokens are garbage.  Free the slot (the next admission prefill
+            rewrites its cache row) and re-queue the request from scratch,
+            bounded by engine.max_slot_retries."""
+            s = slots[i]
+            eng.count("quarantines")
+            eng.events.append({"kind": "quarantine", "uid": s.req.uid,
+                               "slot": i,
+                               "retry": retries[s.req.uid] + 1})
+            retries[s.req.uid] += 1
+            if retries[s.req.uid] > eng.max_slot_retries:
+                finish(i, "error")
+                return
+            eng.count("requeues")
+            queue.appendleft(s.req)  # front: it already held a slot
             slots[i] = None
             temps[i] = 0.0
             free.append(i)
@@ -145,13 +219,24 @@ class SlotScheduler:
                 if len(s.tokens) >= s.req.max_new_tokens:
                     finish(i, "length")
                     return
+            if expired(s.req):  # deadline hit mid-generation
+                finish(i, "timeout")
 
         while queue or len(free) < B:
             # ---- admit ------------------------------------------------
             newly: List[int] = []
             while queue and free:
+                req = queue.popleft()
+                if expired(req):  # died waiting in the queue
+                    done[req.uid] = Response(
+                        uid=req.uid, prompt_len=len(req.prompt),
+                        tokens=np.zeros((0,), np.int32),
+                        finish_reason="timeout",
+                        latency_s=time.perf_counter() - t_submit[req.uid])
+                    eng.count("timeouts")
+                    continue
                 i = free.pop()
-                slots[i] = _Slot(req=queue.popleft(), tokens=[],
+                slots[i] = _Slot(req=req, tokens=[],
                                  t_admit=time.perf_counter())
                 newly.append(i)
             if newly:
@@ -171,20 +256,27 @@ class SlotScheduler:
                     temps[i] = slots[i].req.temperature
                 positions = (np.arange(P)[None, :] -
                              pads[:, None]).astype(np.int32)
-                tok0 = eng.admit(tokens, positions, admit, temps, rng)
+                tok0, ok = eng.admit(tokens, positions, admit, temps, rng)
                 for i in newly:
+                    if not ok[i]:  # poisoned prefill: quarantine
+                        quarantine(i)
+                        continue
                     cur_tok[i, 0] = tok0[i]
                     pos[i] = len(slots[i].req.prompt)
                     consume(i, tok0[i:i + 1])
             # ---- decode one chunk --------------------------------------
             if len(free) == B:
                 continue  # everything finished at its first token
-            toks, new_tok, new_pos = eng.decode_chunk(cur_tok, pos, temps,
-                                                      rng)
+            toks, new_tok, new_pos, ok = eng.decode_chunk(cur_tok, pos,
+                                                          temps, rng)
             cur_tok, pos = new_tok, new_pos
             for i in range(B):
-                if slots[i] is not None:
-                    consume(i, toks[i])
+                if slots[i] is None:
+                    continue
+                if not ok[i]:  # poisoned chunk: drop its tokens
+                    quarantine(i)
+                    continue
+                consume(i, toks[i])
 
         out = [done[r.uid] for r in requests]
         self.last_wall_s = time.perf_counter() - t0

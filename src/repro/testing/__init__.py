@@ -1,0 +1,1 @@
+"""Deterministic chaos-engineering utilities (repro.testing.faults)."""

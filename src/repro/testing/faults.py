@@ -1,0 +1,237 @@
+"""Deterministic fault-injection harness for chaos testing.
+
+Every fault-tolerance claim in this tree is backed by a test that *injects
+the fault* and watches the system recover — not by prose.  This module is
+the injection side: small, deterministic fault objects that plug into the
+hook points the production code exposes, so the chaos suite
+(tests/test_chaos.py) can replay the same failure on every run, on CPU.
+
+Injection points
+----------------
+* **Train loop** (``train(hooks=...)``): :func:`train_hooks` builds a
+  ``before_step`` hook from a list of step faults —
+  :class:`CrashAt` (raise ``SimulatedCrash`` — a hard process death),
+  :class:`SigtermAt` (``os.kill(getpid(), SIGTERM)`` — a preemption
+  notice, delivered mid-step), :class:`DelayAt` (straggling step),
+  :class:`PoisonStateAt` (NaN into one param leaf — how *any* upstream
+  NaN, a poisoned batch or a bad kernel, manifests to the jitted step:
+  the loss/grad-norm go non-finite inside the very next dispatch),
+  :class:`ScaleStateAt` (finite loss spike: params blown up by a factor).
+* **Checkpoint writer** (``CheckpointManager.fault_hook``):
+  :func:`kill_mid_write` dies after ``state.npz`` hits disk but before the
+  manifest/rename ("power cut mid-write"); byte-level corruption of
+  checkpoints already on disk via :func:`corrupt_checkpoint` /
+  :func:`truncate_checkpoint`.
+* **Serve engine** (``ServeEngine.fault_hook``): :class:`ServeFaults`
+  poisons a chosen slot's logits with NaN on a chosen dispatch (the mask
+  is applied *inside* the jitted chunk) and/or delays a chosen dispatch
+  on the host (a stalled device, for the stall watchdog).
+
+A note on "NaN-poisoned batch": the LM batches here are integer token
+ids, which can never carry a NaN through the embedding lookup — so the
+batch-poisoning fault is realized at the state boundary
+(:class:`PoisonStateAt`), which produces the identical observable — a
+non-finite loss/grad inside the jitted step — and therefore drives the
+identical guard → rollback → skip-window recovery path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SimulatedCrash(RuntimeError):
+    """Stands in for a hard process death in chaos tests (raised from a
+    hook so the 'process' dies at a deterministic point)."""
+
+
+# --------------------------------------------------------------------------
+# Train-loop step faults (before_step hook)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CrashAt:
+    """Raise SimulatedCrash when step ``step`` is about to run."""
+    step: int
+    fired: bool = False
+
+    def __call__(self, s: int, state):
+        if s == self.step and not self.fired:
+            self.fired = True
+            raise SimulatedCrash(f"injected crash before step {s}")
+
+
+@dataclasses.dataclass
+class SigtermAt:
+    """Deliver SIGTERM to this process before step ``step`` (preemption:
+    the loop's handler checkpoints and exits cleanly after the step)."""
+    step: int
+    fired: bool = False
+
+    def __call__(self, s: int, state):
+        if s == self.step and not self.fired:
+            self.fired = True
+            os.kill(os.getpid(), signal.SIGTERM)
+
+
+@dataclasses.dataclass
+class DelayAt:
+    """Sleep ``seconds`` before step ``step`` (artificial straggler)."""
+    step: int
+    seconds: float
+
+    def __call__(self, s: int, state):
+        if s == self.step:
+            time.sleep(self.seconds)
+
+
+def _poison_first_leaf(state, value):
+    """Replace the first (largest-ndim preference not needed) float param
+    leaf with ``value`` — deterministic: tree order is canonical."""
+    leaves, treedef = jax.tree_util.tree_flatten(state.params)
+    for n, leaf in enumerate(leaves):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            leaves[n] = jnp.full_like(leaf, value)
+            break
+    return state._replace(
+        params=jax.tree_util.tree_unflatten(treedef, leaves))
+
+
+@dataclasses.dataclass
+class PoisonStateAt:
+    """NaN one param leaf before step ``step`` — the canonical way any
+    upstream NaN (bad batch, bad kernel, optimizer blow-up) reaches the
+    jitted step: its loss and grad-norm go non-finite in one dispatch."""
+    step: int
+    fired: bool = False
+
+    def __call__(self, s: int, state):
+        if s == self.step and not self.fired:
+            self.fired = True
+            return _poison_first_leaf(state, jnp.nan)
+
+
+@dataclasses.dataclass
+class ScaleStateAt:
+    """Multiply all params by ``factor`` before step ``step`` — a *finite*
+    divergence (loss spike) for the EWMA detector; the in-jit NaN guard
+    alone cannot catch this."""
+    step: int
+    factor: float = 50.0
+    fired: bool = False
+
+    def __call__(self, s: int, state):
+        if s == self.step and not self.fired:
+            self.fired = True
+            scaled = jax.tree.map(
+                lambda p: (p * self.factor).astype(p.dtype)
+                if jnp.issubdtype(jnp.asarray(p).dtype, jnp.floating)
+                else p,
+                state.params)
+            return state._replace(params=scaled)
+
+
+def train_hooks(*faults) -> Dict:
+    """Compose step faults into a ``hooks`` dict for ``train()``.  Each
+    fault is called as ``fault(step, state)`` and may return a replacement
+    state (or None)."""
+    def before_step(s: int, state):
+        for f in faults:
+            maybe = f(s, state)
+            if maybe is not None:
+                state = maybe
+        return state
+    return {"before_step": before_step}
+
+
+# --------------------------------------------------------------------------
+# Checkpoint faults
+# --------------------------------------------------------------------------
+def kill_mid_write(mgr, at_step: int, stage: str = "post_state") -> None:
+    """Arm ``mgr`` to die mid-write of checkpoint ``at_step``: the fault
+    fires after ``state.npz`` is on disk but before the manifest/rename
+    (``stage='post_state'``), or with everything written but the rename
+    pending (``stage='pre_rename'``).  Either way the atomic-rename
+    contract means the previous checkpoint stays restorable and
+    ``latest_good_step()`` never sees the partial one."""
+    def hook(st: str, step: int):
+        if st == stage and step == at_step:
+            mgr.fault_hook = None  # one-shot
+            raise SimulatedCrash(
+                f"injected writer death at {st} of step {step}")
+    mgr.fault_hook = hook
+
+
+def _checkpoint_file(ckpt_dir: str, step: int, name: str = "state.npz"
+                     ) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}", name)
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, *, offset: int = 1024,
+                       nbytes: int = 64, name: str = "state.npz") -> str:
+    """XOR-flip ``nbytes`` bytes of a checkpoint file in place (bit rot /
+    torn write).  Returns the corrupted path."""
+    path = _checkpoint_file(ckpt_dir, step, name)
+    size = os.path.getsize(path)
+    offset = min(offset, max(size - nbytes, 0))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        chunk = bytearray(f.read(nbytes))
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in chunk))
+    return path
+
+
+def truncate_checkpoint(ckpt_dir: str, step: int, *, keep_frac: float = 0.5,
+                        name: str = "state.npz") -> str:
+    """Truncate a checkpoint file to ``keep_frac`` of its size (crash
+    while flushing).  Returns the truncated path."""
+    path = _checkpoint_file(ckpt_dir, step, name)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(int(size * keep_frac), 1))
+    return path
+
+
+# --------------------------------------------------------------------------
+# Serve-engine faults (ServeEngine.fault_hook protocol)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServeFaults:
+    """Chaos hook for ``ServeEngine``: called as ``hook(kind, idx)`` with
+    ``kind in ('prefill', 'decode')`` and the dispatch index; returns
+    ``{'poison': (B,) bool mask, 'delay_s': float}`` (both optional).
+
+    ``poison_decode`` maps decode-dispatch index -> slot ids whose logits
+    are NaN'd *inside* the jitted chunk (one-shot per entry);
+    ``poison_prefill`` does the same for admission prefills;
+    ``delay_decode`` maps decode-dispatch index -> host seconds (a stalled
+    device, for the stall watchdog)."""
+    max_batch: int
+    poison_decode: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    poison_prefill: Dict[int, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    delay_decode: Dict[int, float] = dataclasses.field(default_factory=dict)
+    log: List[dict] = dataclasses.field(default_factory=list)
+
+    def __call__(self, kind: str, idx: int) -> Optional[Dict]:
+        act: Dict = {}
+        table = (self.poison_decode if kind == "decode"
+                 else self.poison_prefill)
+        slots = table.pop(idx, None)  # one-shot
+        if slots is not None:
+            mask = np.zeros((self.max_batch,), bool)
+            mask[list(slots)] = True
+            act["poison"] = mask
+        if kind == "decode" and idx in self.delay_decode:
+            act["delay_s"] = self.delay_decode.pop(idx)
+        if act:
+            self.log.append({"kind": kind, "idx": idx, **act})
+        return act or None

@@ -1,0 +1,140 @@
+"""Training guardrails: loss-spike detection and the automatic recovery
+policy.
+
+Low-rank/compressed-activation training (CoLA, CompAct) is numerically
+touchier than full-rank baselines, and paper-scale runs are long enough
+that divergence *will* happen.  Two detectors feed one recovery policy:
+
+* the **in-jit finite-ness guard** (train/step.py) flags NaN/inf loss or
+  grad-norm and refuses the poisoned update — the host reads it as
+  ``metrics['nonfinite']``;
+* the host-side :class:`LossSpikeDetector` keeps an EWMA of the loss and
+  flags steps whose loss exceeds ``threshold ×`` the moving average after
+  warmup (the same ledger shape as
+  ``distributed.straggler.StepWatchdog`` — flagged steps do not poison
+  the EWMA).
+
+On either signal :class:`RecoveryPolicy` rolls the run back to the last
+*good* checkpoint (``latest_good_step`` — corrupt ones are skipped),
+advances the data pipeline's skip offset past the offending window so the
+replay draws fresh batches, sleeps a bounded backoff, and retries.  After
+``tc.max_recoveries`` recoveries it raises :class:`TrainingDiverged` —
+a hard failure is better than silently looping on a poisoned region.
+Every recovery is recorded in the MetricsLogger event ledger/counters so
+the run can be audited after the fact.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, List, Optional
+
+from repro.train.metrics import MetricsLogger
+
+
+class TrainingDiverged(RuntimeError):
+    """Recovery budget exhausted: the run kept producing non-finite or
+    spiking losses after ``max_recoveries`` rollbacks."""
+
+
+class LossSpikeDetector:
+    """EWMA loss-spike detector (StepWatchdog's event-ledger shape).
+
+    ``observe`` returns True when the loss is flagged; flagged steps are
+    excluded from the EWMA so one spike does not inflate the baseline and
+    mask the next one.  ``threshold <= 0`` disables detection (observe
+    still tracks the EWMA for logging)."""
+
+    def __init__(self, threshold: float = 0.0, ewma: float = 0.9,
+                 warmup_steps: int = 5):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.warmup = warmup_steps
+        self.avg: Optional[float] = None
+        self.seen = 0
+        self.events: List[dict] = []
+
+    def observe(self, step: int, loss: float) -> bool:
+        if not math.isfinite(loss):
+            return False  # non-finite is the guard's signal, not a spike
+        self.seen += 1
+        if self.avg is None:
+            self.avg = loss
+            return False
+        flagged = (self.threshold > 0 and self.seen > self.warmup and
+                   loss > self.threshold * self.avg)
+        if flagged:
+            self.events.append({"step": step, "loss": loss,
+                                "avg": self.avg})
+            return True
+        self.avg = self.ewma_coef * self.avg + \
+            (1 - self.ewma_coef) * loss
+        return False
+
+    def reset(self) -> None:
+        """Forget the EWMA (called after a rollback: the restored state's
+        loss scale may differ from the diverged trajectory's)."""
+        self.avg = None
+        self.seen = 0
+
+
+class RecoveryPolicy:
+    """Rollback-and-retry driver shared by the train loop.
+
+    ``recover(step, state, kind, loss)`` returns ``(state, resume_step)``:
+    either the restored checkpoint state and its step, or (when no
+    checkpoint exists) the current state and the same step with the data
+    window advanced — the in-jit guard already kept the params clean for
+    the non-finite case, so skipping the bad batch is sufficient."""
+
+    def __init__(self, tc, mgr, pipe, logger: MetricsLogger,
+                 restore_fn: Optional[Callable] = None):
+        self.tc = tc
+        self.mgr = mgr
+        self.pipe = pipe
+        self.logger = logger
+        self.restore_fn = restore_fn  # (step) -> TrainState
+        self.recoveries = 0
+
+    def recover(self, step: int, state, kind: str, loss: float):
+        self.recoveries += 1
+        counter = ("nonfinite_steps" if kind == "nonfinite"
+                   else "loss_spikes")
+        self.logger.count(counter)
+        self.logger.count("recoveries")
+        if self.recoveries > self.tc.max_recoveries:
+            self.logger.event("hard_failure", step, cause=kind, loss=loss,
+                              recoveries=self.recoveries)
+            raise TrainingDiverged(
+                f"step {step}: {kind} (loss={loss!r}) after "
+                f"{self.recoveries - 1} recoveries — budget "
+                f"max_recoveries={self.tc.max_recoveries} exhausted")
+        if self.tc.recovery_backoff_s:
+            time.sleep(self.tc.recovery_backoff_s * self.recoveries)
+
+        good = self.mgr.latest_good_step() if self.mgr is not None else None
+        if good is not None and self.restore_fn is not None:
+            # roll back to the last good checkpoint, then skip the data
+            # window [good, step] so the replay draws fresh batches
+            # (restore first: it resets the pipeline offset to the
+            # checkpointed value, which the skip must build on)
+            state = self.restore_fn(good)
+            window = (step - good + 1) + self.tc.skip_window
+            offset = self.pipe.skip_window(window)
+            self.logger.event("rollback", step, cause=kind, loss=loss,
+                              restored_step=good, data_offset=offset)
+            print(f"[recover] {kind} at step {step} "
+                  f"(loss={loss:.4g}) — rolled back to step {good}, "
+                  f"data offset -> {offset} "
+                  f"(attempt {self.recoveries}/{self.tc.max_recoveries})")
+            return state, good
+        # no restorable checkpoint: the guard kept params clean; skip just
+        # the offending batch and continue in place
+        offset = self.pipe.skip_window(1 + self.tc.skip_window)
+        self.logger.event("skip_batch", step, cause=kind, loss=loss,
+                          data_offset=offset)
+        print(f"[recover] {kind} at step {step} (loss={loss:.4g}) — no "
+              f"checkpoint to roll back to; skipping batch "
+              f"(data offset -> {offset}, attempt "
+              f"{self.recoveries}/{self.tc.max_recoveries})")
+        return state, step

@@ -1,9 +1,33 @@
 """Fault-tolerant training loop.
 
 Features wired together here: sharded jit step (params/opt FSDP+TP via
-param_sharding_tree), deterministic resumable data, atomic+async
+param_sharding_tree), deterministic resumable data, atomic+async+verified
 checkpointing with auto-resume, SIGTERM → checkpoint-and-exit (preemption),
 straggler watchdog, ReLoRA merge/restart scheduling, periodic eval.
+
+Guardrails (this layer's contract — chaos-tested in tests/test_chaos.py):
+
+* resume targets ``latest_good_step()`` — a corrupt or partially-written
+  checkpoint is skipped, never served;
+* the jitted step carries a finite-ness guard (train/step.py): a NaN/inf
+  loss or grad-norm never updates params, and the host reads the flag from
+  the already-synced metrics at zero extra dispatch cost;
+* an EWMA loss-spike detector (train/guard.py) catches finite divergence;
+* both signals drive :class:`~repro.train.guard.RecoveryPolicy` — roll
+  back to the last good checkpoint, advance the data pipeline's skip
+  offset past the offending window, bounded retries with backoff, then a
+  hard :class:`~repro.train.guard.TrainingDiverged`;
+* every recovery/straggler/checkpoint-failure event lands in the
+  MetricsLogger counters + event ledger (audited in the returned metrics);
+* checkpoint writes are saved-once per step (a preemption landing on a
+  ``checkpoint_every`` boundary no longer double-saves), and background
+  writer failures re-raise from ``wait()`` instead of dying on a daemon
+  thread.
+
+Chaos hooks: ``hooks['before_step'](step, state) -> state|None`` and
+``hooks['after_step'](step, state, metrics)`` let the fault-injection
+harness (repro/testing/faults.py) crash/delay/poison deterministically;
+production code leaves them unset.
 """
 from __future__ import annotations
 
@@ -16,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointWriteError
 from repro.config import ModelConfig, TrainConfig
 from repro.data.pipeline import make_pipeline
 from repro.distributed.sharding import (current_env, named_sharding_tree,
@@ -25,6 +49,7 @@ from repro.distributed.straggler import StepWatchdog
 from repro.models.model import build_model
 from repro.optim import relora
 from repro.train import step as step_mod
+from repro.train.guard import LossSpikeDetector, RecoveryPolicy
 from repro.train.metrics import MetricsLogger
 
 
@@ -44,18 +69,31 @@ def train(mc: ModelConfig, tc: TrainConfig, *,
                              tc.async_checkpoint)
            if tc.checkpoint_dir else None)
     rng = jax.random.PRNGKey(tc.seed)
+    pipe = make_pipeline(mc, tc)
+
+    def _restore_tools():
+        template = jax.eval_shape(
+            lambda: step_mod.make_train_state(model, tc, rng))
+        shardings = None
+        if env is not None:
+            axes = step_mod.train_state_axes(model, tc)
+            shardings = param_sharding_tree(axes, template, env)
+        return template, shardings
+
+    def restore_fn(step: int):
+        """Restore a verified checkpoint + its pipeline state (shared by
+        initial resume and mid-run rollback)."""
+        template, shardings = _restore_tools()
+        state = mgr.restore(step, template, shardings)
+        pipe.resume(mgr.restore_extra(step))
+        return state
+
     start_step = 0
     state = None
     if mgr is not None:
-        latest = mgr.latest_step()
+        latest = mgr.latest_good_step()
         if latest is not None:
-            template = jax.eval_shape(
-                lambda: step_mod.make_train_state(model, tc, rng))
-            shardings = None
-            if env is not None:
-                axes = step_mod.train_state_axes(model, tc)
-                shardings = param_sharding_tree(axes, template, env)
-            state = mgr.restore(latest, template, shardings)
+            state = restore_fn(latest)
             start_step = int(mgr.restore_extra(latest)["step"])
             print(f"[resume] restored checkpoint step={start_step}")
     if state is None:
@@ -75,10 +113,15 @@ def train(mc: ModelConfig, tc: TrainConfig, *,
         step_fn = jax.jit(train_step, donate_argnums=0)
     eval_fn = jax.jit(eval_step)
 
-    # ---- data -------------------------------------------------------------------
-    pipe = make_pipeline(mc, tc)
+    # ---- guardrails -----------------------------------------------------------
     logger = MetricsLogger(log_path)
-    watchdog = StepWatchdog(on_straggler=hooks.get("on_straggler"))
+    watchdog = StepWatchdog(
+        on_straggler=hooks.get("on_straggler"))
+    detector = LossSpikeDetector(threshold=tc.loss_spike_threshold,
+                                 ewma=tc.spike_ewma,
+                                 warmup_steps=tc.spike_warmup_steps)
+    recovery = RecoveryPolicy(tc, mgr, pipe, logger,
+                              restore_fn=restore_fn if mgr else None)
 
     # ---- preemption: checkpoint on SIGTERM ----------------------------------------
     preempted = {"flag": False}
@@ -87,15 +130,51 @@ def train(mc: ModelConfig, tc: TrainConfig, *,
         preempted["flag"] = True
     old_handler = signal.signal(signal.SIGTERM, _sigterm)
 
+    last_saved = start_step if start_step else None
+
+    def save_ckpt(step: int) -> None:
+        """Save exactly once per step (checkpoint_every firing on the same
+        step as a preemption/stop_after exit must not double-save)."""
+        nonlocal last_saved
+        if mgr is None or last_saved == step:
+            return
+        try:
+            mgr.save(step, state, extra=pipe.state(step))
+            last_saved = step
+        except CheckpointWriteError:
+            logger.count("checkpoint_failures")
+            logger.event("checkpoint_failure", step)
+            raise
+
     metrics = {}
     tokens_per_step = tc.global_batch * tc.seq_len
     try:
-        for s in range(start_step, tc.steps):
+        s = start_step
+        while s < tc.steps:
+            if "before_step" in hooks:  # chaos: poison/crash/delay
+                maybe = hooks["before_step"](s, state)
+                if maybe is not None:
+                    state = maybe
             batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(s).items()}
             watchdog.start()
             state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            loss = float(metrics["loss"])  # syncs (block_until_ready)
+            n_straggles = len(watchdog.events)
             watchdog.stop(s)
+            if len(watchdog.events) > n_straggles:
+                logger.count("straggler_events")
+            if "after_step" in hooks:
+                hooks["after_step"](s, state, metrics)
+
+            # ---- guardrails: nonfinite / loss spike -> recovery --------
+            nonfinite = bool(metrics.get("nonfinite", 0.0)) or \
+                not np.isfinite(loss)
+            spiked = detector.observe(s, loss)
+            if nonfinite or spiked:
+                kind = "nonfinite" if nonfinite else "loss_spike"
+                state, s = recovery.recover(s, state, kind, loss)
+                detector.reset()
+                continue  # retry from the restored step
 
             if (mc.parameterization == "lora" and mc.lora.relora_every and
                     (s + 1) % mc.lora.relora_every == 0):
@@ -116,25 +195,36 @@ def train(mc: ModelConfig, tc: TrainConfig, *,
                                            for e in evals]))
                 print(f"[eval step {s}] loss={eval_loss:.4f} "
                       f"ppl={np.exp(min(eval_loss, 50)):.2f}")
-            if mgr is not None and tc.checkpoint_every and \
-                    (s + 1) % tc.checkpoint_every == 0:
-                mgr.save(s + 1, state, extra=pipe.state(s + 1))
+            if tc.checkpoint_every and (s + 1) % tc.checkpoint_every == 0:
+                save_ckpt(s + 1)
             if preempted["flag"] or (tc.stop_after and s + 1 >= tc.stop_after):
                 if preempted["flag"]:
                     print("[preempt] SIGTERM received — checkpointing and "
                           "exiting cleanly")
                 if mgr is not None:
-                    mgr.save(s + 1, state, extra=pipe.state(s + 1))
+                    save_ckpt(s + 1)
                     mgr.wait()
                 break
+            s += 1
     finally:
         signal.signal(signal.SIGTERM, old_handler)
         if mgr is not None:
-            mgr.wait()
+            try:
+                mgr.wait()
+            except CheckpointWriteError as e:
+                # teardown: record, don't shadow an in-flight exception
+                logger.count("checkpoint_failures")
+                print(f"[checkpoint] background write failed: {e}",
+                      file=sys.stderr)
         logger.close()
     out = {k: float(v) for k, v in metrics.items()
            if jnp.ndim(v) == 0}
     out["straggler_events"] = len(watchdog.events)
+    out["recovery_events"] = len(logger.events)
+    out["recoveries"] = recovery.recoveries
+    out["counters"] = dict(logger.counters)
+    out["events"] = list(logger.events) + \
+        [{"kind": "straggler", **e} for e in watchdog.events]
     out["final_step"] = int(state.step)
     out["state"] = state
     return out

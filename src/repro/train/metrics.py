@@ -1,11 +1,20 @@
-"""Lightweight metrics logging (CSV + stdout)."""
+"""Lightweight metrics logging (CSV + stdout) + the robustness event
+ledger: recovery/guardrail events are counted (``count``) and recorded
+(``event``) here so a run can be audited after the fact — every CSV row
+carries the cumulative counters, and the structured ledger survives in
+``events``."""
 from __future__ import annotations
 
 import csv
 import math
 import os
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
+
+# counters seeded at init so the CSV header includes them from row one
+# (DictWriter fixes fieldnames at the first write)
+COUNTER_KEYS = ("recoveries", "nonfinite_steps", "loss_spikes",
+                "straggler_events", "checkpoint_failures")
 
 
 class MetricsLogger:
@@ -14,9 +23,20 @@ class MetricsLogger:
         self._writer = None
         self._file = None
         self._t0 = time.time()
+        self.counters: Dict[str, int] = {k: 0 for k in COUNTER_KEYS}
+        self.events: List[dict] = []
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def event(self, kind: str, step: int, **detail) -> None:
+        """Append to the structured event ledger (same shape as
+        StepWatchdog.events) and bump the matching counter."""
+        self.events.append({"kind": kind, "step": step, **detail})
 
     def log(self, step: int, metrics: Dict[str, float], tokens: int = 0):
         row = {"step": step, "time": time.time() - self._t0}
+        row.update(self.counters)
         for k, v in metrics.items():
             try:
                 row[k] = float(v)

@@ -5,6 +5,14 @@ bf16 forward/backward over f32 master params, CoLA-M (or other) remat via
 the model config, global-norm clip, cosine LR, AdamW/LAMB/GaLore update,
 optional int8 gradient compression with error feedback, optional
 microbatched gradient accumulation.
+
+Finite-ness guard (``tc.nonfinite_guard``): the step checks loss and
+global grad-norm for NaN/inf *inside* the jit and, when either is
+non-finite, keeps the previous params/opt/err instead of applying the
+poisoned update — so by the time the host reads ``metrics['nonfinite']``
+(one scalar, already synced by the loop's block_until_ready) the state is
+still clean and the recovery policy (train/guard.py) can roll back and
+skip the offending data window without losing the run.
 """
 from __future__ import annotations
 
@@ -191,6 +199,13 @@ def build_train_step(model: Model, tc: TrainConfig):
                 tc, state.params, grads, state.opt, lr, m)
         metrics = dict(metrics)
         metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        if tc.nonfinite_guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            keep = lambda n, o: jnp.where(ok, n, o)
+            new_params = jax.tree.map(keep, new_params, state.params)
+            new_opt = jax.tree.map(keep, new_opt, state.opt)
+            err = jax.tree.map(keep, err, state.err)
+            metrics["nonfinite"] = (~ok).astype(jnp.float32)
         return TrainState(new_params, new_opt, state.step + 1, err), metrics
 
     return train_step

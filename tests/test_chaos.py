@@ -1,0 +1,241 @@
+"""Chaos suite: every injected fault runs end-to-end on CPU and the
+system must recover, deterministically.
+
+Training faults (repro/testing/faults.py -> train(hooks=...)): hard crash
+mid-run + auto-resume, SIGTERM preemption -> checkpoint-and-exit, corrupt
+checkpoint on disk -> resume falls back to the previous good step, NaN
+state poisoning -> in-jit guard + rollback + data-window skip, finite loss
+spike -> EWMA detector + rollback, recovery-budget exhaustion ->
+TrainingDiverged.
+
+Serving faults (ServeEngine.fault_hook): NaN-poisoned decode chunk /
+admission prefill -> slot quarantine + re-queue with the surviving slots'
+streams bit-identical to an undisturbed run, retry-budget exhaustion ->
+finish_reason='error', deadlines + bounded queue -> typed
+'timeout'/'rejected' responses (never exceptions), stalled dispatch ->
+stall-watchdog events.
+
+Gated behind the ``chaos`` marker (conftest): run with ``REPRO_CHAOS=1``
+or ``-m chaos`` — the tier-1 pass skips these.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import TrainConfig, get_config
+from repro.serve.engine import make_engine
+from repro.serve.scheduler import Request
+from repro.testing import faults
+from repro.train.guard import TrainingDiverged
+from repro.train.loop import train
+
+pytestmark = pytest.mark.chaos
+
+
+# ==========================================================================
+# Training chaos
+# ==========================================================================
+def _cfg():
+    return get_config("llama-60m").smoke()
+
+
+def _tc(tmp_path, **over):
+    kw = dict(steps=8, global_batch=2, seq_len=32, log_every=0,
+              checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=2,
+              async_checkpoint=False)
+    kw.update(over)
+    return TrainConfig(**kw)
+
+
+def test_crash_at_step_and_auto_resume(tmp_path):
+    """Hard crash at step 5 (with a straggler delay riding along): the
+    next invocation auto-resumes from the last checkpoint and completes."""
+    tc = _tc(tmp_path)
+    hooks = faults.train_hooks(faults.DelayAt(2, 0.02), faults.CrashAt(5))
+    with pytest.raises(faults.SimulatedCrash):
+        train(_cfg(), tc, hooks=hooks)
+    mgr = CheckpointManager(tc.checkpoint_dir)
+    assert mgr.latest_good_step() == 4       # checkpoints at 2, 4 survived
+    out = train(_cfg(), tc)                  # auto-resume
+    assert out["final_step"] == 8
+    assert np.isfinite(out["ce_loss"])
+
+
+def test_corrupt_checkpoint_resume_falls_back(tmp_path):
+    """Bit-rot in the newest checkpoint: resume must restore the previous
+    good one, not wedge or serve garbage."""
+    tc = _tc(tmp_path, steps=4)
+    train(_cfg(), tc)
+    mgr = CheckpointManager(tc.checkpoint_dir)
+    assert mgr.latest_step() == 4
+    faults.corrupt_checkpoint(tc.checkpoint_dir, 4)
+    assert mgr.latest_good_step() == 2       # corrupt newest is skipped
+    out = train(_cfg(), _tc(tmp_path, steps=6))  # resumes from step 2
+    assert out["final_step"] == 6
+    assert np.isfinite(out["ce_loss"])
+
+
+def test_nan_poisoned_state_rolls_back_and_completes(tmp_path):
+    """NaN poisoning before step 5: the in-jit guard refuses the update,
+    the recovery policy rolls back to step 4 and advances the data offset
+    past the poisoned window, and the run completes with the whole
+    incident on the ledger."""
+    tc = _tc(tmp_path, steps=10)
+    out = train(_cfg(), tc,
+                hooks=faults.train_hooks(faults.PoisonStateAt(5)))
+    assert out["final_step"] == 10
+    assert np.isfinite(out["ce_loss"])
+    assert out["recoveries"] >= 1
+    assert out["counters"]["nonfinite_steps"] >= 1
+    rollbacks = [e for e in out["events"] if e["kind"] == "rollback"]
+    assert rollbacks and rollbacks[0]["restored_step"] == 4
+    assert rollbacks[0]["data_offset"] >= 2  # skipped the bad window
+
+
+def test_loss_spike_rolls_back_and_completes(tmp_path):
+    """A finite divergence (params scaled 30x) slips past the NaN guard;
+    the EWMA spike detector catches it and drives the same rollback."""
+    tc = _tc(tmp_path, steps=10, loss_spike_threshold=2.0,
+             spike_warmup_steps=2)
+    out = train(_cfg(), tc,
+                hooks=faults.train_hooks(faults.ScaleStateAt(5, factor=30.0)))
+    assert out["final_step"] == 10
+    assert np.isfinite(out["ce_loss"])
+    assert out["recoveries"] >= 1
+    # the spike either stays finite (EWMA catches it) or overflows to
+    # inf (the guard catches it) — both must land on the ledger
+    assert (out["counters"]["loss_spikes"] +
+            out["counters"]["nonfinite_steps"]) >= 1
+    assert any(e["kind"] == "rollback" for e in out["events"])
+
+
+def test_recovery_budget_exhaustion_raises(tmp_path):
+    """Persistent NaN with no checkpoint to roll back to: bounded retries,
+    then a hard TrainingDiverged — never a silent infinite loop."""
+    tc = TrainConfig(steps=8, global_batch=2, seq_len=32, log_every=0,
+                     max_recoveries=2, recovery_backoff_s=0.01)
+    with pytest.raises(TrainingDiverged, match="max_recoveries"):
+        train(_cfg(), tc, hooks=faults.train_hooks(faults.PoisonStateAt(3)))
+
+
+def test_sigterm_checkpoints_and_resumes(tmp_path):
+    """SIGTERM mid-step = preemption notice: the loop finishes the step,
+    checkpoints, and exits cleanly; the next invocation resumes."""
+    tc = _tc(tmp_path, steps=10)
+    out = train(_cfg(), tc, hooks=faults.train_hooks(faults.SigtermAt(3)))
+    assert out["final_step"] == 4            # stopped right after step 3
+    mgr = CheckpointManager(tc.checkpoint_dir)
+    assert mgr.latest_good_step() == 4       # preemption checkpoint landed
+    out = train(_cfg(), tc)
+    assert out["final_step"] == 10
+    assert np.isfinite(out["ce_loss"])
+
+
+# ==========================================================================
+# Serving chaos
+# ==========================================================================
+def _serve_cfg():
+    # f32 keeps greedy argmax robust to path-dependent rounding, so the
+    # bit-identical-streams assertions are meaningful
+    return get_config("qwen2-1.5b").smoke().with_overrides(dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_engine(_serve_cfg(), max_batch=2, max_seq=64,
+                       decode_block=4)
+
+
+@pytest.fixture(autouse=True)
+def _clean_engine(request):
+    yield
+    if "engine" in request.fixturenames:
+        eng = request.getfixturevalue("engine")
+        eng.fault_hook = None
+        eng.stall_timeout_s = None
+        eng.max_queue = None
+        eng.reset_stats()
+
+
+def _reqs(rng, n, max_new=10):
+    return [Request(uid=i, prompt=rng.randint(1, 512, (5 + i,))
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_poisoned_decode_chunk_quarantined_others_bit_identical(engine,
+                                                                rng):
+    """NaN logits in one slot mid-chunk: that slot is quarantined and its
+    request re-queued from scratch; every request — including the
+    poisoned one after its retry — still emits the exact undisturbed
+    greedy stream, and the incident is fully counted."""
+    reqs = _reqs(rng, 3)
+    baseline = {r.uid: r.tokens.copy() for r in engine.serve(reqs)}
+    engine.reset_stats()
+    engine.fault_hook = faults.ServeFaults(
+        max_batch=2, poison_decode={1: [0]})  # slot 0, second decode chunk
+    resps = engine.serve(reqs)
+    stats = engine.stats()
+    assert stats["quarantines"] >= 1 and stats["requeues"] >= 1
+    assert stats["nonfinite_chunks"] >= 1
+    assert any(e["kind"] == "quarantine" for e in engine.events)
+    for r in resps:
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(r.tokens, baseline[r.uid])
+
+
+def test_poisoned_prefill_quarantined_and_retried(engine, rng):
+    reqs = _reqs(rng, 2, max_new=6)
+    baseline = {r.uid: r.tokens.copy() for r in engine.serve(reqs)}
+    engine.reset_stats()
+    engine.fault_hook = faults.ServeFaults(
+        max_batch=2, poison_prefill={0: [1]})  # first admission, slot 1
+    resps = engine.serve(reqs)
+    assert engine.stats()["quarantines"] >= 1
+    for r in resps:
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(r.tokens, baseline[r.uid])
+
+
+def test_persistent_poison_exhausts_retries_to_error(rng):
+    """A slot that NaNs on every attempt burns its retry budget and
+    finishes 'error' — a typed response, not a hang or an exception."""
+    eng = make_engine(_serve_cfg(), max_batch=1, max_seq=64,
+                      decode_block=4)
+    eng.fault_hook = faults.ServeFaults(
+        max_batch=1, poison_decode={i: [0] for i in range(16)})
+    resps = eng.serve([Request(uid=0, prompt=rng.randint(1, 512, (6,))
+                               .astype(np.int32), max_new_tokens=10)])
+    assert resps[0].finish_reason == "error"
+    stats = eng.stats()
+    assert stats["errors"] == 1
+    assert stats["quarantines"] == eng.max_slot_retries + 1
+
+
+def test_deadline_and_queue_bound_give_typed_responses(engine, rng):
+    """Overflow beyond slots+max_queue is rejected at submit; an expired
+    deadline finishes 'timeout' with whatever tokens it has. Both are
+    typed responses with counters — never exceptions."""
+    engine.max_queue = 0                     # capacity = 2 slots + 0
+    reqs = _reqs(rng, 4, max_new=6)
+    reqs[1].deadline_s = 0.0                 # expired before it can admit
+    resps = engine.serve(reqs)
+    by_uid = {r.uid: r for r in resps}
+    assert by_uid[0].finish_reason == "length"
+    assert by_uid[1].finish_reason == "timeout"
+    assert len(by_uid[1].tokens) == 0
+    for uid in (2, 3):                       # beyond capacity at submit
+        assert by_uid[uid].finish_reason == "rejected"
+        assert len(by_uid[uid].tokens) == 0
+    stats = engine.stats()
+    assert stats["rejected"] == 2 and stats["timeouts"] == 1
+
+
+def test_stall_watchdog_flags_delayed_dispatch(engine, rng):
+    engine.stall_timeout_s = 0.05
+    engine.fault_hook = faults.ServeFaults(
+        max_batch=2, delay_decode={1: 0.2})  # stall the second chunk
+    engine.serve(_reqs(rng, 2))
+    assert engine.stats()["stalls"] >= 1
+    assert any(e["kind"] == "stall" and e["dispatch"] == "decode"
+               for e in engine.events)

@@ -1,0 +1,170 @@
+"""Checkpoint-manager unit tests: round-trip, retention GC, atomic-rename
+crash safety (fault hooks), manifest integrity verification + corrupt-
+checkpoint fallback, async-writer error propagation, extra.json ride-along,
+and elastic resume onto a different mesh (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      CheckpointManager,
+                                      CheckpointWriteError)
+from repro.testing.faults import (SimulatedCrash, corrupt_checkpoint,
+                                  kill_mid_write, truncate_checkpoint)
+
+
+def _tree(seed: int):
+    r = np.random.RandomState(seed)
+    return {"w": r.randn(4, 8).astype(np.float32),
+            "inner": {"b": r.randn(8).astype(np.float32),
+                      "step": np.asarray(seed, np.int32)}}
+
+
+def _mgr(tmp_path, **kw):
+    kw.setdefault("async_save", False)
+    return CheckpointManager(str(tmp_path / "ckpt"), **kw)
+
+
+def _leaves(t):
+    import jax
+    return jax.tree_util.tree_leaves(t)
+
+
+def test_round_trip_and_extra(tmp_path):
+    mgr = _mgr(tmp_path)
+    tree = _tree(3)
+    mgr.save(5, tree, extra={"offset": 7, "shard": 0})
+    got = mgr.restore(5, _tree(0))
+    for a, b in zip(_leaves(got), _leaves(tree)):
+        np.testing.assert_array_equal(a, b)
+    extra = mgr.restore_extra(5)
+    assert extra["step"] == 5 and extra["offset"] == 7
+    assert mgr.latest_step() == 5 and mgr.latest_good_step() == 5
+
+
+def test_manifest_contents(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _tree(1))
+    with open(os.path.join(mgr.dir, "step_1", "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 1
+    # one manifest entry per leaf, each with crc/shape/dtype
+    assert set(man["leaves"]) == {"['w']", "['inner']['b']",
+                                  "['inner']['step']"}
+    for info in man["leaves"].values():
+        assert set(info) == {"crc32", "shape", "dtype"}
+    st = man["files"]["state.npz"]
+    assert st["size"] == os.path.getsize(
+        os.path.join(mgr.dir, "step_1", "state.npz"))
+
+
+def test_retention_gc_keeps_newest(tmp_path):
+    mgr = _mgr(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [2, 3]
+
+
+@pytest.mark.parametrize("stage", ["post_state", "pre_rename"])
+def test_crash_mid_write_is_atomic(tmp_path, stage):
+    """A writer death mid-write (at either fault stage) never shadows the
+    previous checkpoint: the partial write stays in a .tmp dir,
+    latest_good_step falls back, and the next save GCs the leftovers."""
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _tree(1))
+    kill_mid_write(mgr, at_step=2, stage=stage)
+    with pytest.raises(SimulatedCrash):
+        mgr.save(2, _tree(2))
+    assert mgr.all_steps() == [1]          # no renamed partial checkpoint
+    assert os.path.exists(os.path.join(mgr.dir, "step_2.tmp"))
+    assert mgr.latest_good_step() == 1
+    got = mgr.restore(1, _tree(0))
+    np.testing.assert_array_equal(got["w"], _tree(1)["w"])
+    mgr.save(3, _tree(3))                  # next save GCs the stray tmp
+    assert not os.path.exists(os.path.join(mgr.dir, "step_2.tmp"))
+
+
+def test_async_writer_failure_reraises_from_wait(tmp_path):
+    """A failure on the background writer thread must surface on the train
+    loop (as CheckpointWriteError), never die silently with the daemon."""
+    mgr = _mgr(tmp_path, async_save=True)
+    kill_mid_write(mgr, at_step=1)
+    mgr.save(1, _tree(1))                  # returns; writer dies async
+    with pytest.raises(CheckpointWriteError, match="injected writer death"):
+        mgr.wait()
+    mgr.save(2, _tree(2))                  # manager recovers after re-raise
+    mgr.wait()
+    assert mgr.latest_good_step() == 2
+
+
+@pytest.mark.parametrize("damage", [corrupt_checkpoint, truncate_checkpoint])
+def test_corrupt_checkpoint_detected_and_skipped(tmp_path, damage):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    damage(mgr.dir, 2)
+    assert not mgr.verify(2) and mgr.verify(1)
+    assert mgr.latest_good_step() == 1     # corrupt newest is skipped
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(2, _tree(0))
+    got = mgr.restore(1, _tree(0))
+    np.testing.assert_array_equal(got["w"], _tree(1)["w"])
+
+
+def test_corrupt_manifest_detected(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _tree(1))
+    with open(os.path.join(mgr.dir, "step_1", "manifest.json"), "w") as f:
+        f.write("{not json")
+    assert not mgr.verify(1)
+    assert mgr.latest_good_step() is None
+
+
+def test_missing_file_detected(tmp_path):
+    mgr = _mgr(tmp_path)
+    mgr.save(1, _tree(1))
+    os.remove(os.path.join(mgr.dir, "step_1", "extra.json"))
+    assert not mgr.verify(1)
+
+
+def test_elastic_resume_on_different_mesh(tmp_path):
+    """Checkpoint written on one virtual mesh restores through
+    resume_on_mesh onto a differently-shaped mesh (subprocess so the
+    forced device count doesn't leak into this process)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = \
+            '--xla_force_host_platform_device_count=8'
+        import sys; sys.path.insert(0, 'src')
+        import jax, numpy as np
+        from repro.config import TrainConfig, get_config
+        from repro.distributed.sharding import mesh_env, MeshEnv
+        from repro.distributed.elastic import resume_on_mesh
+        from repro.train.loop import train
+        d = %r
+        cfg = get_config("llama-60m").smoke()
+        tc = TrainConfig(steps=2, global_batch=4, seq_len=32, log_every=0,
+                         checkpoint_dir=d, checkpoint_every=2,
+                         async_checkpoint=False)
+        mesh8 = jax.make_mesh((2, 4), ("data", "model"))
+        with mesh_env(mesh8, "megatron"):
+            out = train(cfg, tc)
+        mesh2 = jax.make_mesh((2,), ("data",))
+        env2 = MeshEnv(mesh2, "fsdp")
+        state, step = resume_on_mesh(d, cfg, tc, env2)
+        assert step == 2, step
+        a = jax.tree.leaves(out["state"].params)
+        b = jax.tree.leaves(state.params)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        print("OK")
+    """) % str(tmp_path / "ckpt")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=".", timeout=560)
+    assert r.returncode == 0 and "OK" in r.stdout, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"

@@ -1,0 +1,153 @@
+"""Robustness units: straggler watchdog EWMA, loss-spike detector,
+recovery-policy bookkeeping, metrics counters/ledger, and process-stable
+parameter init (PYTHONHASHSEED independence, subprocess-proven)."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.distributed.straggler import StepWatchdog
+from repro.train.guard import (LossSpikeDetector, RecoveryPolicy,
+                               TrainingDiverged)
+from repro.train.metrics import COUNTER_KEYS, MetricsLogger
+
+
+# ---- StepWatchdog ---------------------------------------------------------
+def test_watchdog_stop_without_start_is_noop():
+    w = StepWatchdog()
+    assert w.stop(0) == 0.0          # regression: used to TypeError
+    assert w.events == [] and w.seen == 0
+
+
+def test_watchdog_flags_after_warmup_and_excludes_outlier():
+    seen = []
+    w = StepWatchdog(threshold=2.0, warmup_steps=3,
+                     on_straggler=lambda s, dt, avg: seen.append(s))
+    for s in range(5):
+        assert not w.observe(s, 1.0)
+    avg_before = w.avg
+    assert w.observe(5, 3.0)         # > 2× the EWMA after warmup
+    assert w.avg == avg_before       # outlier excluded from the EWMA
+    assert seen == [5]
+    assert w.events[0]["step"] == 5
+    assert not w.observe(6, 1.0)
+
+
+def test_watchdog_warmup_suppresses_flags():
+    w = StepWatchdog(threshold=2.0, warmup_steps=10)
+    w.observe(0, 1.0)
+    assert not w.observe(1, 100.0)   # within warmup: never flagged
+
+
+# ---- LossSpikeDetector ----------------------------------------------------
+def test_spike_detector_flags_and_excludes_outlier():
+    d = LossSpikeDetector(threshold=2.0, ewma=0.9, warmup_steps=3)
+    for s in range(5):
+        assert not d.observe(s, 4.0)
+    avg_before = d.avg
+    assert d.observe(5, 20.0)
+    assert d.avg == avg_before       # spike excluded from the EWMA
+    assert d.events[0] == {"step": 5, "loss": 20.0, "avg": avg_before}
+
+
+def test_spike_detector_nonfinite_is_not_a_spike():
+    d = LossSpikeDetector(threshold=2.0, warmup_steps=0)
+    d.observe(0, 4.0)
+    # NaN/inf belong to the in-jit guard, not the spike detector
+    assert not d.observe(1, float("nan"))
+    assert not d.observe(2, float("inf"))
+    assert d.seen == 1 and d.avg == 4.0
+
+
+def test_spike_detector_disabled_and_reset():
+    d = LossSpikeDetector(threshold=0.0, warmup_steps=0)
+    d.observe(0, 1.0)
+    assert not d.observe(1, 1000.0)  # threshold<=0 disables flagging
+    assert d.avg is not None         # ...but the EWMA still tracks
+    d.reset()
+    assert d.avg is None and d.seen == 0
+
+
+# ---- RecoveryPolicy (no-checkpoint path) ----------------------------------
+class _FakePipe:
+    def __init__(self):
+        self.offset = 0
+
+    def skip_window(self, n):
+        self.offset += n
+        return self.offset
+
+
+def test_recovery_policy_skips_batch_then_hard_fails():
+    tc = TrainConfig(max_recoveries=2, skip_window=1)
+    pipe, logger = _FakePipe(), MetricsLogger()
+    pol = RecoveryPolicy(tc, mgr=None, pipe=pipe, logger=logger)
+    state = object()
+    got, step = pol.recover(7, state, "nonfinite", float("nan"))
+    assert got is state and step == 7
+    assert pipe.offset == 2          # 1 (bad batch) + skip_window
+    got, step = pol.recover(7, state, "loss_spike", 99.0)
+    assert pipe.offset == 4
+    assert logger.counters["recoveries"] == 2
+    assert logger.counters["nonfinite_steps"] == 1
+    assert logger.counters["loss_spikes"] == 1
+    assert [e["kind"] for e in logger.events] == ["skip_batch",
+                                                  "skip_batch"]
+    with pytest.raises(TrainingDiverged, match="max_recoveries"):
+        pol.recover(7, state, "nonfinite", float("nan"))
+    assert logger.events[-1]["kind"] == "hard_failure"
+
+
+# ---- MetricsLogger --------------------------------------------------------
+def test_metrics_counters_seeded_in_csv_header(tmp_path):
+    path = str(tmp_path / "m.csv")
+    log = MetricsLogger(path)
+    assert set(COUNTER_KEYS) <= set(log.counters)
+    log.count("recoveries")
+    log.event("rollback", 3, restored_step=2)
+    log.log(3, {"loss": 1.5})
+    log.close()
+    header, row = open(path).read().strip().split("\n")
+    cols = header.split(",")
+    for k in COUNTER_KEYS:           # counters present from row one
+        assert k in cols, (k, cols)
+    vals = dict(zip(cols, row.split(",")))
+    assert vals["recoveries"] == "1"
+    assert log.events == [{"kind": "rollback", "step": 3,
+                           "restored_step": 2}]
+
+
+# ---- PYTHONHASHSEED-stable init ------------------------------------------
+_DIGEST_CODE = textwrap.dedent("""
+    import sys; sys.path.insert(0, 'src')
+    import hashlib, jax, numpy as np
+    from repro.config import get_config
+    from repro.models.model import build_model
+    model = build_model(get_config("llama-60m").smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    h = hashlib.sha256()
+    for p, v in sorted(flat, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
+    print("DIGEST", h.hexdigest())
+""")
+
+
+def _digest(hashseed: str) -> str:
+    import os
+    env = dict(os.environ, PYTHONHASHSEED=hashseed)
+    r = subprocess.run([sys.executable, "-c", _DIGEST_CODE], env=env,
+                       capture_output=True, text=True, cwd=".", timeout=560)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    return r.stdout.strip().split()[-1]
+
+
+def test_param_init_independent_of_pythonhashseed():
+    """init_params folds a CRC32 of each param path into the rng, not
+    Python's salted hash() — two processes with different PYTHONHASHSEED
+    must build bit-identical params from the same seed (multi-host init
+    and checkpoint parity both depend on this)."""
+    assert _digest("1") == _digest("2")
