@@ -253,12 +253,83 @@ def _serve_engine_bench(emit):
          "paper Table 11: 1.64x on A100 (CPU-relative here)")
 
 
+def _serve_sharded_bench(emit):
+    """serve_sharded/* rows — the distributed-serving story in numbers:
+
+    * modeled per-dispatch collective wire bytes for one decode step per
+      TP profile (``cola_ae_collective_bytes(mode='infer')`` over a
+      column- plus a row-class site: baseline pays a (T, d_out) out-psum
+      everywhere, megatron one f32 (T, r) z_pre psum at the decode-split
+      seam of o/down only),
+    * modeled per-shard decode HBM bytes (``decode_hbm_traffic`` with the
+      profile's shard counts — weight traffic drops by the TP degree),
+    * measured paged-vs-dense KV-cache HBM from a served ragged batch
+      (pages released at finish ⇒ peak < dense worst case).
+
+    Like _cola_ae_sharded_bench this uses whatever host devices exist;
+    the shard terms use the actual 'model' axis size."""
+    from repro.distributed import sharding as sh
+    from repro.kernels.cola_ae import kernel as cak
+    from repro.serve.engine import make_engine
+    from repro.serve.scheduler import Request
+
+    n = jax.device_count()
+    model = max(m for m in (1, 2, 4, 8) if m <= n and n % m == 0)
+    mesh = jax.make_mesh((n // model, model), ("data", "model"))
+    B = 4                           # decode slot batch: T = B × 1
+    din, r, dout = 2048, 512, 2048  # llama-1b o-proj-class site
+    for profile in ("baseline", "megatron"):
+        with sh.mesh_env(mesh, profile) as env:
+            col = sh.cola_ae_partition(env, (B, 1, din), (din, r),
+                                       (r, dout), "embed", "ffw")
+            row = sh.cola_ae_partition(env, (B, 1, dout), (dout, r),
+                                       (r, din), "ffw", "embed")
+            cb = (sh.cola_ae_collective_bytes(env, col, B, din, r, dout,
+                                              mode="infer")
+                  + sh.cola_ae_collective_bytes(env, row, B, dout, r, din,
+                                                mode="infer"))
+        emit(f"serve_sharded/{profile}_decode_collective_KB", cb / 2**10,
+             f"model={model} col+row site pair, one decode step, B={B}")
+        if profile == "baseline":
+            hbm = 2 * cak.decode_hbm_traffic(B, din, r, dout,
+                                             shards_rank=model)
+        else:
+            hbm = (cak.decode_hbm_traffic(B, din, r, dout,
+                                          shards_out=model)
+                   + cak.decode_hbm_traffic(B, dout, r, din,
+                                            shards_in=model, split=True))
+        full = 2 * cak.decode_hbm_traffic(B, din, r, dout)
+        emit(f"serve_sharded/{profile}_decode_shard_hbm_MB", hbm / 2**20,
+             f"unsharded={full / 2**20:.2f}MB "
+             f"({full / hbm:.2f}x less weight traffic per device)")
+
+    # measured cache footprint: serve a ragged batch through the paged
+    # engine and compare its peak page-backed bytes to the dense layout
+    rng = np.random.RandomState(0)
+    cfg = get_config("qwen2-1.5b").smoke()
+    eng = make_engine(cfg, max_batch=4, max_seq=128, decode_block=8,
+                      page_size=16)
+    reqs = [Request(uid=i, prompt=rng.randint(
+                1, cfg.vocab_size, (L,)).astype(np.int32),
+                    max_new_tokens=16)
+            for i, L in enumerate([8, 24, 48, 12, 30, 6])]
+    eng.serve(reqs)
+    hbm = eng.cache_hbm_bytes()
+    emit("serve_sharded/kv_cache_paged_peak_MB", hbm["paged_bytes"] / 2**20,
+         f"page_size=16 peak_pages={eng.alloc.peak_pages} "
+         f"(pages released at finish)")
+    emit("serve_sharded/kv_cache_dense_MB", hbm["dense_bytes"] / 2**20,
+         f"B=4 max_seq=128 dense layout, "
+         f"paged_saving={hbm['dense_bytes'] / hbm['paged_bytes']:.2f}x")
+
+
 def run(emit):
     _cola_ae_bwd_bench(emit)
     _cola_ae_split_bench(emit)
     _cola_ae_sharded_bench(emit)
     _cola_ae_decode_bench(emit)
     _serve_engine_bench(emit)
+    _serve_sharded_bench(emit)
     variants = {
         "full_rank": dict(parameterization="dense", remat="none"),
         "vanilla_gcp": dict(parameterization="dense", remat="full"),

@@ -147,6 +147,21 @@ def mesh_env(mesh: Mesh, profile: str = "baseline",
         _tls.env = prev
 
 
+@contextlib.contextmanager
+def use_env(env: MeshEnv):
+    """Re-enter an existing MeshEnv.  The serve engine holds one env for
+    its whole lifetime and re-enters it around every jitted dispatch so
+    the trace (and any retrace) sees the same mesh/profile — force_impl
+    and friends act at trace time, and so does this."""
+    prev = current_env()
+    _tls.env = env
+    try:
+        with env.mesh:
+            yield env
+    finally:
+        _tls.env = prev
+
+
 # --------------------------------------------------------------------------
 # Resolution
 # --------------------------------------------------------------------------
@@ -396,10 +411,17 @@ def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
 
 def cola_ae_collective_bytes(env: MeshEnv, part: ColaAePartition, T: int,
                              d_in: int, r: int, d_out: int, *,
-                             bytes_el: int = 2) -> int:
+                             bytes_el: int = 2, mode: str = "train") -> int:
     """Modeled collective wire bytes for one fwd+bwd of a sharded fused AE
     site (ring collectives: ``2(n-1)/n ×`` payload per all-reduce,
     ``(n-1)/n ×`` per all-gather / reduce-scatter).
+
+    ``mode='infer'`` models one forward of the fwd-only serve body
+    (``ops._sh_infer``: prefill or a decode chunk step) — the sequence-
+    entry x all-gather once (no bwd recompute gather), the f32 z_pre
+    ring-psum at row-parallel sites (the decode_split seam), and the out
+    ring-psum at rank-sharded sites; no bwd terms.  These are the
+    ``serve_sharded/*`` rows' modeled wire bytes per dispatch.
 
     Per profile and site this reproduces the design counts: ``baseline``
     pays a (T, d_out) psum in fwd and a (T, d_in) psum in bwd at *every*
@@ -428,7 +450,13 @@ def cola_ae_collective_bytes(env: MeshEnv, part: ColaAePartition, T: int,
         n = _n(axes)
         return 0 if n <= 1 else int((n - 1) / n * payload)
 
+    if mode not in ("train", "infer"):
+        raise ValueError(f"mode must be 'train'|'infer', got {mode!r}")
     t_loc = T // _n(part.batch_axes)
+    if mode == "infer":
+        return (half_ring(part.seq_axes, bytes_el * t_loc * d_in)  # x gather
+                + ring(part.in_axes, 4 * t_loc * r)   # z_pre psum (split seam)
+                + ring(part.rank_axes, bytes_el * t_loc * d_out))  # out psum
     if part.rank_axes and part.seq_axes == part.rank_axes:
         # bwd dx: psum_scatter instead of psum-then-slice
         dx_bytes = half_ring(part.rank_axes, bytes_el * t_loc * d_in)

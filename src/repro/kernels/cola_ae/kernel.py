@@ -26,7 +26,15 @@ planner (ops.py) composes per site:
   weight-grid blocks against a whole resident token tile, fusing both
   GEMMs, σ and both biases with f32 accumulation and emitting no z_pre.
   Decode is weight-traffic-bound (see ``decode_hbm_traffic``); this kernel
-  reads each weight element exactly once.
+  reads each weight element exactly once.  Its split twin —
+  ``cola_ae_decode_stage_a`` / ``cola_ae_decode_stage_b`` — is the same
+  GEMV shape cut at the z seam for TP row-parallel serving (megatron
+  o/down): stage A emits the partial f32 z_pre (the psum payload), the
+  caller runs the collective (+ bias_a), stage B applies σ·B [+ bias_b].
+  One f32 (T, r) round-trip buys the mid-pipeline collective that the
+  single launch cannot admit — the serve-side mirror of the training
+  two-stage pipeline, at decode grain (``decode_hbm_traffic(split=True)``
+  models it; ``shards_in/rank/out`` give the per-shard byte terms).
 
 Monolithic forward
 ------------------
@@ -404,6 +412,109 @@ def cola_ae_decode(x: jax.Array, a: jax.Array, b: jax.Array,
                                lambda k: (0, jnp.maximum(k - n_i, 0))),
         out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((Tp, r), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out[:T] if pad else out
+
+
+# --------------------------------------------------------------------------
+# decode split: the decode kernel cut at the z seam, for row-parallel TP
+# sites (megatron o/down) where a z_pre psum must run mid-pipeline.  Same
+# GEMV-shaped grids as cola_ae_decode (whole token tile resident, weights
+# streamed, T padded to the f32 sublane minimum) — the training stage
+# kernels' 128-token tiles are degenerate at decode T.
+# --------------------------------------------------------------------------
+def _decode_stage_a_kernel(x_ref, a_ref, zp_ref):
+    """x_ref: (Tp, bi); a_ref: (bi, r); zp_ref: (Tp, r) f32 revisited
+    across the d_in grid dim, accumulating partial GEMV products."""
+    k = pl.program_id(0)
+    acc = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        zp_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        zp_ref[...] += acc
+
+
+def cola_ae_decode_stage_a(x: jax.Array, a: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """x: (T, d_in) decode batch; a: (d_in, r) → z_pre = x·A (T, r) f32.
+
+    The partial pre-activation leaves the chip here — at row-parallel
+    sites it is the psum payload (4·T·r bytes per shard); the caller runs
+    the collective (and any bias_a add) before ``cola_ae_decode_stage_b``.
+    """
+    T, d_in = x.shape
+    r = a.shape[1]
+    e = jnp.dtype(x.dtype).itemsize
+    pad = (-T) % 8
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = x.shape[0]
+    bi = _fit_block(d_in, per_unit_bytes=e * (Tp + r),
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    zp = pl.pallas_call(
+        _decode_stage_a_kernel,
+        grid=(d_in // bi,),
+        in_specs=[
+            pl.BlockSpec((Tp, bi), lambda k: (0, k)),
+            pl.BlockSpec((bi, r), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((Tp, r), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, r), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+    return zp[:T] if pad else zp
+
+
+def _decode_stage_b_kernel(zp_ref, b_ref, *rest, sigma: str, has_bias: bool):
+    """zp_ref: (Tp, r) f32 resident; b_ref: (r, bo) streamed; bias_ref:
+    (1, bo) f32 when has_bias; out_ref: (Tp, bo)."""
+    bias_ref, out_ref = rest if has_bias else (None, rest[0])
+    z = _act.apply_act(zp_ref[...], sigma).astype(b_ref.dtype)
+    acc = jnp.dot(z, b_ref[...], preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + bias_ref[...]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def cola_ae_decode_stage_b(z_pre: jax.Array, b: jax.Array,
+                           bias: "jax.Array | None" = None, *, sigma=True,
+                           out_dtype=None, interpret: bool = False
+                           ) -> jax.Array:
+    """z_pre: (T, r) f32 (post-psum, post-bias_a); b: (r, d_out);
+    bias: (d_out,) or None → out = σ(z_pre)·B [+ bias] (T, d_out)."""
+    sigma = _act.canon(sigma)
+    T, r = z_pre.shape
+    d_out = b.shape[1]
+    out_dtype = out_dtype or b.dtype
+    e = jnp.dtype(b.dtype).itemsize
+    pad = (-T) % 8
+    if pad:
+        z_pre = jnp.pad(z_pre, ((0, pad), (0, 0)))
+    Tp = z_pre.shape[0]
+    bo = _fit_block(d_out, per_unit_bytes=e * (r + Tp) + 4,
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    in_specs = [
+        pl.BlockSpec((Tp, r), lambda k: (0, 0)),
+        pl.BlockSpec((r, bo), lambda k: (0, k)),
+    ]
+    args = (z_pre, b)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bo), lambda k: (0, k)))
+        args += (bias.astype(jnp.float32).reshape(1, d_out),)
+    out = pl.pallas_call(
+        functools.partial(_decode_stage_b_kernel, sigma=sigma,
+                          has_bias=bias is not None),
+        grid=(d_out // bo,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Tp, bo), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
         interpret=interpret,
     )(*args)
     return out[:T] if pad else out
@@ -976,7 +1087,9 @@ def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
 
 
 def decode_hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
-                       bytes_el: int = 2, fused: bool = True) -> int:
+                       bytes_el: int = 2, fused: bool = True,
+                       shards_in: int = 1, shards_rank: int = 1,
+                       shards_out: int = 1, split: bool = False) -> int:
     """Modeled forward-only HBM bytes for one AE site at decode (T = decode
     batch, typically 1–64 — weight-traffic-bound, activations negligible).
 
@@ -985,11 +1098,29 @@ def decode_hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
     — the XLA GEMV pair: z and σ(z) round-trip HBM between ops.  The gap is
     the paper's Table-11 story at kernel grain: CoLA decode moves ~half the
     dense weight bytes, and fusing the bottleneck keeps the remainder pure
-    weight traffic."""
+    weight traffic.
+
+    TP-sharded serving (`serve_sharded/*` rows): ``shards_in`` /
+    ``shards_rank`` / ``shards_out`` divide the weight dims the active
+    profile actually shards, so the model returns *per-shard* bytes —
+    baseline shards the rank dim (A and B both shrink, x/out stay whole);
+    megatron column-parallel shards d_out, row-parallel shards d_in.
+    ``split=True`` models the row-parallel ``decode_split`` plan: two
+    launches with an f32 (T, r) z_pre round-trip at the psum seam (stage A
+    writes it, stage B reads it back post-collective) — the collective's
+    own wire bytes live in ``sharding.cola_ae_collective_bytes``.
+    """
     e = bytes_el
-    w = d_in * r + r * d_out
+    di = d_in // shards_in
+    rr = r // shards_rank
+    do = d_out // shards_out
+    w = di * rr + rr * do
+    if split:
+        stage_a = e * (T * di + di * rr) + 4 * T * rr    # x·A → z_pre seam
+        stage_b = 4 * T * rr + e * (rr * do + T * do)    # σ(z_pre)·B + bias
+        return stage_a + stage_b
     if fused:
-        return e * (T * d_in + w + T * d_out)
-    return (e * (T * d_in + d_in * r + T * r)       # x·A → z
-            + 2 * e * T * r                         # σ: read z, write σ(z)
-            + e * (T * r + r * d_out + T * d_out))  # σ(z)·B → out
+        return e * (T * di + w + T * do)
+    return (e * (T * di + di * rr + T * rr)         # x·A → z
+            + 2 * e * T * rr                        # σ: read z, write σ(z)
+            + e * (T * rr + rr * do + T * do))      # σ(z)·B → out

@@ -36,6 +36,32 @@ remat policies: ``cola_m`` wraps only the training stack (see
 core/colam.py).  The ``infer_*`` DISPATCH counters let the serve tests
 assert decode never silently takes a training-shaped kernel.
 
+Sharded inference (``cola_ae_sharded(mode='infer')`` → ``_sh_infer``) adds
+a fifth, infer-only plan — ``decode_split``, the decode kernel cut at the
+z seam (kernel.cola_ae_decode_stage_a/_b) — and resolves per site, inside
+the shard_map body, against the *local* shapes and the partition's
+collective needs.  The sharded-infer plan table (T = local flattened
+tokens after the optional sequence-entry all_gather):
+
+    site partitioning        mid collective   T ≤ DECODE_T_MAX   T above
+    ───────────────────────  ───────────────  ─────────────────  ────────
+    baseline (rank-sharded   out psum         decode             monolith
+      A/B)                   (after body)                        /staged
+    megatron column-parallel —                decode             monolith
+      (qkv/gate/up: B d_out)                                     /staged
+    megatron row-parallel    z_pre psum       decode_split       staged
+      (o/down: A d_in)       (mid-pipeline)
+    fsdp / replicated        —                decode             monolith
+                                                                 /staged
+
+Each taken plan lands a ``sharded_infer_{plan}`` DISPATCH counter; the
+serve parity harness (tests/test_serve_sharded.py) asserts a served
+stream shows only ``sharded_infer_decode``/``sharded_infer_decode_split``
+plus the entry all_gather — zero training-shaped kernels, zero ref
+fallbacks.  The exit psum sits exactly where the training forward puts
+it: rank-sharded sites psum the B-GEMM output (bias_b folded post-psum),
+row-parallel sites psum z_pre between the stage launches.
+
 Both fused plans save only ``(x, z_pre)`` where z_pre = A·x [+ bias_a] is
 r-dimensional — the CoLA-M residency recipe at kernel level; σ and the
 grad GEMMs are evaluated from those:
@@ -221,15 +247,23 @@ def _plan_bwd(impl: str, a, b, *, want_dbias: bool = False,
 
 
 def _plan_infer(impl: str, a, b, T: int, *, mid_psum: bool = False) -> str:
-    """Inference plan: like ``_plan_fwd`` but with the decode fast path —
-    T ≤ DECODE_T_MAX (and no mid-pipeline collective) takes the GEMV-shaped
-    single launch, which streams weights so *any* site fits and fuses both
-    biases.  ``force_impl(plan='decode')`` pins it for tests."""
+    """Inference plan: like ``_plan_fwd`` but with the decode fast paths —
+    T ≤ DECODE_T_MAX takes a GEMV-shaped launch, which streams weights so
+    *any* site fits and fuses both biases.  A mid-pipeline collective
+    (row-parallel z_pre psum) cannot ride the single launch; at decode T it
+    takes ``decode_split`` — the decode kernel cut at the z seam — and
+    above the threshold the training stage pipeline.
+    ``force_impl(plan='decode')`` pins the GEMV grain for tests (it
+    resolves to decode_split at collective sites)."""
     _, forced = _split_impl(impl)
     base = _canon_impl(impl)
     if base != "pallas":
         return "ref"
     if mid_psum:
+        if forced in ("monolith", "staged"):
+            return "staged"
+        if T <= DECODE_T_MAX or forced == "decode":
+            return "decode_split"
         return "staged"
     if forced == "decode":
         return "decode"
@@ -309,6 +343,19 @@ def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
         from repro.kernels.cola_ae import kernel as _k
         return _k.cola_ae_decode(x2, a, b, bias_a, bias_b, sigma=sigma,
                                  out_dtype=x2.dtype, interpret=interpret)
+    if plan == "decode_split":
+        # the decode kernel cut at the z seam: stage A emits the partial
+        # f32 z_pre, the row-parallel psum (+ bias_a) runs between, stage B
+        # applies σ·B [+ bias_b] — same GEMV-shaped grids as `decode`
+        from repro.kernels.cola_ae import kernel as _k
+        z_pre = _k.cola_ae_decode_stage_a(x2, a, interpret=interpret)
+        if psum_zpre is not None:
+            z_pre = psum_zpre(z_pre)
+        if bias_a is not None:
+            z_pre = z_pre + bias_a.astype(jnp.float32)
+        return _k.cola_ae_decode_stage_b(z_pre, b, bias_b, sigma=sigma,
+                                         out_dtype=x2.dtype,
+                                         interpret=interpret)
     if plan == "monolith":
         from repro.kernels.cola_ae import kernel as _k
         return _k.cola_ae_fwd(x2, a, b, bias_a, bias_b, sigma=sigma,

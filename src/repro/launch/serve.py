@@ -9,10 +9,19 @@ Each request draws a prompt length uniformly from [min-prompt, max-prompt]
 and a generation budget from [1, new-tokens]; the scheduler left-pads the
 ragged admissions, recycles slots on EOS/length, and decodes k tokens per
 device dispatch through the jitted ``lax.scan`` loop.
+
+Tensor-parallel serving: ``--profile baseline|megatron`` builds a
+(data, model) mesh over the visible devices (virtual CPU devices work —
+set XLA_FLAGS=--xla_force_host_platform_device_count=8) and enables the
+fused sharded CoLA kernels, so every decode dispatch runs the per-shard
+decode / decode_split Pallas bodies with the profile's collectives.
+Paged KV is on by default for attention-only architectures
+(``--dense-cache`` restores the dense (B, max_seq) slot layout).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 
@@ -45,7 +54,18 @@ def main() -> None:
                     help="append one request with a 0-second deadline and "
                          "exit nonzero unless it reports "
                          "finish_reason='timeout' (CI guardrail smoke)")
+    ap.add_argument("--profile", default="none",
+                    choices=("none", "baseline", "megatron"),
+                    help="tensor-parallel sharding profile; builds a "
+                         "(data, model) mesh over the visible devices and "
+                         "enables the fused sharded CoLA kernels")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV tokens per page")
+    ap.add_argument("--dense-cache", action="store_true",
+                    help="disable paged KV (dense (B, max_seq) slot caches)")
     args = ap.parse_args()
+
+    import dataclasses
 
     import jax
     import numpy as np
@@ -58,9 +78,24 @@ def main() -> None:
         cfg = cfg.smoke()
     if args.param:
         cfg = cfg.with_overrides(parameterization=args.param)
+    mesh = None
+    if args.profile != "none":
+        n = jax.device_count()
+        model = next(m for m in (8, 4, 2, 1) if n % m == 0)
+        mesh = jax.make_mesh((n // model, model), ("data", "model"))
+        # TP serving routes CoLA sites through the fused sharded kernels
+        cfg = cfg.with_overrides(cola=dataclasses.replace(
+            cfg.cola, use_fused_kernel=True))
+        print(f"profile={args.profile} mesh=(data={n // model}, "
+              f"model={model}) over {n} devices")
     max_seq = args.max_prompt + args.new_tokens + 1  # +1: pad-parking slot
     eng = make_engine(cfg, max_batch=args.slots, max_seq=max_seq,
-                      seed=args.seed, decode_block=args.decode_block)
+                      seed=args.seed, decode_block=args.decode_block,
+                      mesh=mesh,
+                      profile=args.profile if mesh is not None
+                      else "baseline",
+                      paged=False if args.dense_cache else None,
+                      page_size=args.page_size)
     eng.max_queue = args.max_queue
 
     rng = np.random.RandomState(args.seed)
@@ -83,10 +118,18 @@ def main() -> None:
                                (args.min_prompt,)).astype(np.int32),
             max_new_tokens=args.new_tokens, deadline_s=0.0))
 
+    force = contextlib.nullcontext()
+    if mesh is not None and jax.default_backend() != "tpu":
+        # the point of --profile is the sharded kernel path; off-TPU that
+        # means interpret-mode Pallas (same as the parity tests)
+        from repro.kernels.cola_ae import ops as _ops
+        force = _ops.force_impl("pallas", True)
+
     t0 = time.perf_counter()
-    resps = eng.serve(
-        reqs, rng=jax.random.PRNGKey(args.seed)
-        if args.temperature > 0 else None)
+    with force:
+        resps = eng.serve(
+            reqs, rng=jax.random.PRNGKey(args.seed)
+            if args.temperature > 0 else None)
     wall = time.perf_counter() - t0
 
     stats = eng.stats()
@@ -98,7 +141,14 @@ def main() -> None:
           f"({n_tok / wall:.1f} tok/s incl. compile)  finish={by_reason}")
     print(f"dispatches: {stats['prefill_dispatches']} prefill + "
           f"{stats['decode_dispatches']} decode "
-          f"(k={args.decode_block} tokens each)")
+          f"({stats['decode_steps']} steps scanned, "
+          f"k<={args.decode_block})")
+    if "peak_pages" in stats:
+        hbm = eng.cache_hbm_bytes()
+        print(f"paged KV: page_size={stats['page_size']} "
+              f"peak_pages={stats['peak_pages']} "
+              f"cache HBM {hbm['paged_bytes'] / 1e6:.2f}MB peak vs "
+              f"{hbm['dense_bytes'] / 1e6:.2f}MB dense")
     if "per_token_p50_s" in stats:
         print(f"per-token latency p50={stats['per_token_p50_s']*1e3:.2f}ms "
               f"p95={stats['per_token_p95_s']*1e3:.2f}ms (steady-state)")

@@ -236,6 +236,7 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
               kv_from: Optional[jax.Array] = None,
               cross_cache: Optional[KVCache] = None,
               mode: str = "train",
+              page_map: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[KVCache]]:
     """GQA forward.
 
@@ -248,11 +249,20 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
     mode         => 'train' | 'infer', threaded to every linear site
                     (prefill/decode pass 'infer': no CoLA residuals, and
                     the decode-shaped kernel below the T threshold).
+    page_map     => paged-KV serving: an (B, max_seq) int32 logical→
+                    physical row map.  The cache leaves are then a flat
+                    physical-row *pool* (R, kv, hd) shared across slots;
+                    K/V write through the map and the logical (B, max_seq)
+                    view is gathered back out for attention.  Positions a
+                    slot does not own map to the sacrificial row 0 —
+                    always hidden by the visibility mask, exactly like the
+                    dense layout's pad-parking slot.
 
     Left-padded ragged prefill (serve engine): pad queries carry negative
     ``positions``; their K/V writes are redirected to the sacrificial last
-    cache slot and the ``slot <= q_position`` visibility mask hides both
-    the pad slots and any stale tenant of a recycled cache row.
+    cache slot (dense) or row 0 (paged) and the ``slot <= q_position``
+    visibility mask hides both the pad slots and any stale tenant of a
+    recycled cache row.
     """
     d = cfg.d_model
     hd = cfg.resolved_head_dim
@@ -290,16 +300,34 @@ def gqa_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
         k = k.astype(cache.k.dtype)
         v = v.astype(cache.v.dtype)
         bidx = jnp.arange(b)[:, None]
-        # left-padded prefill: pad tokens carry negative positions — park
-        # their K/V in the sacrificial last slot (the serve engine reserves
-        # it) instead of letting negative indices wrap into live slots
-        sidx = jnp.where(positions < 0, cache.k.shape[1] - 1, positions)
-        ck = cache.k.at[bidx, sidx].set(k)
-        cv = cache.v.at[bidx, sidx].set(v)
-        ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
-        cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
-        new_cache = KVCache(ck, cv)
-        k, v = ck.astype(dt), cv.astype(dt)
+        if page_map is not None:
+            # paged pool: leaves are (R, kv, hd) physical rows shared
+            # across slots.  Write through the page table; pad queries and
+            # unowned positions land on the sacrificial row 0.
+            sidx = jnp.where(positions < 0, page_map.shape[1] - 1,
+                             positions)
+            phys = page_map[bidx, sidx]                    # (b, s) rows
+            ck = cache.k.at[phys].set(k)
+            cv = cache.v.at[phys].set(v)
+            ck = shard(ck, "null", "kv_heads", "head_dim")
+            cv = shard(cv, "null", "kv_heads", "head_dim")
+            new_cache = KVCache(ck, cv)
+            # gather the logical (b, max_seq) view; masked entries read
+            # the sacrificial row, hidden below by the visibility mask
+            k, v = ck[page_map].astype(dt), cv[page_map].astype(dt)
+        else:
+            # left-padded prefill: pad tokens carry negative positions —
+            # park their K/V in the sacrificial last slot (the serve
+            # engine reserves it) instead of letting negative indices wrap
+            # into live slots
+            sidx = jnp.where(positions < 0, cache.k.shape[1] - 1,
+                             positions)
+            ck = cache.k.at[bidx, sidx].set(k)
+            cv = cache.v.at[bidx, sidx].set(v)
+            ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+            cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+            new_cache = KVCache(ck, cv)
+            k, v = ck.astype(dt), cv.astype(dt)
         q_positions = positions  # per-query causal visibility over the cache
     out = _sdpa(q, k, v, causal=causal, q_positions=q_positions)
     out = out.reshape(b, s, h * hd)
@@ -373,8 +401,11 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
               cos_sin, cache: Optional[KVCache] = None,
               positions: Optional[jax.Array] = None,
               mode: str = "train",
+              page_map: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[KVCache]]:
-    """MLA forward; decode uses the absorbed form over the latent cache."""
+    """MLA forward; decode uses the absorbed form over the latent cache.
+    ``page_map``: paged-KV serving, same contract as ``gqa_apply`` — the
+    latent/k_rope caches become flat physical-row pools."""
     m, h = cfg.mla, cfg.num_heads
     b, s, _ = x.shape
     dt = x.dtype
@@ -405,16 +436,29 @@ def mla_apply(cfg: ModelConfig, params: Dict, x: jax.Array, *,
 
     # ---- cached paths -----------------------------------------------------
     bidx = jnp.arange(b)[:, None]
-    # pad queries (negative positions) park in the sacrificial last slot
-    sidx = jnp.where(positions < 0, cache.k.shape[1] - 1, positions)
-    ck = cache.k.at[bidx, sidx].set(latent.astype(cache.k.dtype))
-    cv = cache.v.at[bidx, sidx].set(
-        k_rope[:, :, 0, :].astype(cache.v.dtype))
-    ck = shard(ck, "batch", "kv_seq", "rank")
-    cv = shard(cv, "batch", "kv_seq", "head_dim")
-    new_cache = KVCache(ck, cv)
-    latent_c = ck.astype(dt)            # (b, S, r_kv)
-    krope_c = cv.astype(dt)             # (b, S, rope)
+    if page_map is not None:
+        # paged pool: leaves are (R, r_kv) / (R, rope) physical rows; pad
+        # queries and unowned positions land on the sacrificial row 0
+        sidx = jnp.where(positions < 0, page_map.shape[1] - 1, positions)
+        phys = page_map[bidx, sidx]
+        ck = cache.k.at[phys].set(latent.astype(cache.k.dtype))
+        cv = cache.v.at[phys].set(k_rope[:, :, 0, :].astype(cache.v.dtype))
+        ck = shard(ck, "null", "rank")
+        cv = shard(cv, "null", "head_dim")
+        new_cache = KVCache(ck, cv)
+        latent_c = ck[page_map].astype(dt)   # (b, S, r_kv)
+        krope_c = cv[page_map].astype(dt)    # (b, S, rope)
+    else:
+        # pad queries (negative positions) park in the sacrificial last slot
+        sidx = jnp.where(positions < 0, cache.k.shape[1] - 1, positions)
+        ck = cache.k.at[bidx, sidx].set(latent.astype(cache.k.dtype))
+        cv = cache.v.at[bidx, sidx].set(
+            k_rope[:, :, 0, :].astype(cache.v.dtype))
+        ck = shard(ck, "batch", "kv_seq", "rank")
+        cv = shard(cv, "batch", "kv_seq", "head_dim")
+        new_cache = KVCache(ck, cv)
+        latent_c = ck.astype(dt)            # (b, S, r_kv)
+        krope_c = cv.astype(dt)             # (b, S, rope)
 
     if s > 1 or "a" in ukv:
         # Expand path: (a) prefill — the absorbed form would materialize

@@ -171,7 +171,8 @@ class Model:
 
     # ---- serving -------------------------------------------------------------
     def prefill(self, params: Dict, batch: Dict, caches: Dict,
-                positions: Optional[jax.Array] = None
+                positions: Optional[jax.Array] = None,
+                page_map: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
         """Write the prompt into caches; returns (last-token logits, caches).
 
@@ -180,7 +181,9 @@ class Model:
         serve engine passes left-padded ragged prompts with per-row
         ``positions``; pad columns carry negative positions, which mask
         their attention rows and park their K/V writes in the sacrificial
-        last cache slot (see attention.gqa_apply).
+        last cache slot (see attention.gqa_apply).  ``page_map``: paged-KV
+        serving — attention caches are flat physical-row pools and K/V
+        route through the (B, max_seq) logical→physical map.
         """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -205,16 +208,20 @@ class Model:
         cos_sin = self._cos_sin(positions, batch)
         x, new_caches, _ = transformer.stack_forward(
             cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
-            caches=caches, mode="infer")
+            caches=caches, mode="infer", page_map=page_map)
         return self._logits(params, x[:, -1:]), new_caches
 
     def decode_step(self, params: Dict, tokens: jax.Array, caches: Dict,
-                    positions: jax.Array) -> Tuple[jax.Array, Dict]:
+                    positions: jax.Array,
+                    page_map: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Dict]:
         """One decode step.  tokens/positions: (B, 1).
 
         mode='infer' end to end: at T = B×1 every CoLA site lands below
         ops.DECODE_T_MAX and dispatches the GEMV-shaped ``cola_ae_decode``
-        kernel — never the training-shaped token-tile grids.
+        kernel — never the training-shaped token-tile grids (under a TP
+        mesh: the sharded decode / decode_split bodies).  ``page_map``:
+        paged-KV serving, same contract as ``prefill``.
         """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -227,7 +234,7 @@ class Model:
         cos_sin = self._cos_sin(positions, {})
         x, new_caches, _ = transformer.stack_forward(
             cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
-            caches=caches, mode="infer")
+            caches=caches, mode="infer", page_map=page_map)
         return self._logits(params, x), new_caches
 
     # ---- dry-run input specs ---------------------------------------------------

@@ -114,7 +114,7 @@ def _zero_aux(cfg: ModelConfig) -> Dict[str, jax.Array]:
 
 def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
                  x: jax.Array, *, cos_sin, positions, cache, aux_acc,
-                 mode: str = "train"):
+                 mode: str = "train", page_map=None):
     """One layer: pre-norm mixer + pre-norm ffn, residual adds."""
     new_cache = cache
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
@@ -122,11 +122,11 @@ def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
         if cfg.attention == "mla":
             a, new_cache = attention.mla_apply(
                 cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
-                positions=positions, mode=mode)
+                positions=positions, mode=mode, page_map=page_map)
         else:
             a, new_cache = attention.gqa_apply(
                 cfg, lp["mixer"], h, cos_sin=cos_sin, cache=cache,
-                positions=positions, mode=mode)
+                positions=positions, mode=mode, page_map=page_map)
         x = x + a
     elif kind == "mamba":
         a, new_cache = ssm.mamba_apply(cfg, lp["mixer"], h, state=cache,
@@ -163,13 +163,18 @@ def _apply_layer(cfg: ModelConfig, kind: str, is_moe: bool, lp: Dict,
 
 def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
                   cos_sin=None, positions=None, caches: Optional[Dict] = None,
-                  training: bool = False, mode: str = "train"
+                  training: bool = False, mode: str = "train",
+                  page_map=None
                   ) -> Tuple[jax.Array, Optional[Dict], Dict]:
     """Run the full decoder stack.  block_params/caches are period-stacked.
 
     mode: 'train' | 'infer', threaded to every linear site.  The serve
     paths (Model.prefill / Model.decode_step) pass 'infer' so CoLA sites
-    skip residual saving and decode batches dispatch the GEMV kernel."""
+    skip residual saving and decode batches dispatch the GEMV kernel.
+
+    page_map: paged-KV serving (loop-invariant across periods — it closes
+    over the scan body rather than riding the carry); attention cache
+    leaves are then flat physical-row pools, see attention.gqa_apply."""
     period = period_length(cfg)
     kinds = cfg.layer_kinds()
     has_cache = caches is not None
@@ -187,7 +192,7 @@ def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
             xc, nc, aux_acc = _apply_layer(
                 cfg, kinds[i], cfg.layer_is_moe(i), lp, xc,
                 cos_sin=cos_sin, positions=positions, cache=cache_i,
-                aux_acc=aux_acc, mode=mode)
+                aux_acc=aux_acc, mode=mode, page_map=page_map)
             if has_cache and f"layer{i}" in pcache:
                 new_pcache[f"layer{i}"] = nc
         # seq-sharded carry (Megatron-SP): the saved per-block residual

@@ -15,10 +15,36 @@ that are degenerate at T=1.
 
 Dispatch discipline: the old engine issued one device dispatch per token
 (84-line Python loop).  Here ``decode_chunk`` is one jitted call that
-scans ``decode_block`` decode steps on device; the per-token Python loop
-survives only as ``generate_python_loop``, the parity/benchmark
+scans up to ``decode_block`` decode steps on device; the per-token Python
+loop survives only as ``generate_python_loop``, the parity/benchmark
 reference.  ``stats()['decode_dispatches']`` counts the jitted calls so
-tests can assert dispatches == ceil(tokens / k).
+tests can assert dispatches == ceil(tokens / k).  Chunks are
+**variable-k**: the scheduler passes each live slot's remaining budget
+and the chunk scans only ``min(decode_block, max(remaining))`` steps —
+finished slots no longer burn up to k decode steps per chunk, and
+``stats()['decode_steps']`` counts the steps actually scanned (equal-
+budget batches decode exactly ``max_new - 1`` steps, zero waste).
+
+Paged KV (default for attn-only architectures): instead of dense
+``(B, max_seq)`` slot caches, each cache leaf is a flat physical-row
+pool ``(periods, R, ...)`` with ``R = n_pages × page_size``, shared
+across slots through a free-list page allocator (serve/paging.py).
+Pages are claimed at admission for the request's full token span and
+released the moment the slot finishes — a finished long request frees
+its rows immediately instead of holding ``max_seq`` of them until the
+slot is recycled.  The (B, max_seq) ``page_map`` ships with every
+dispatch; admission zeroes exactly the freshly claimed rows (recycled-
+slot purity) and needs **no cache merge** — page ownership already
+isolates tenants.  ``cache_hbm_bytes()`` reports paged-vs-dense
+footprints for the benchmark rows.
+
+Tensor-parallel serving: construct the engine with ``mesh=``/``profile=``
+(baseline | megatron) and every jitted dispatch traces under that
+``sharding.MeshEnv`` — each CoLA site then routes through
+``ops.cola_ae_sharded(mode='infer')``, whose shard_map body runs the
+per-shard decode kernels with the profile's collectives
+(``sharded_infer_*`` DISPATCH counters; bit-identical greedy streams are
+proven by tests/test_serve_sharded.py).
 
 Guardrails (chaos-tested in tests/test_chaos.py): every jitted admit /
 decode chunk also returns a per-slot **finite-ness flag** computed in-jit
@@ -34,6 +60,7 @@ nonfinite_chunks) so serving incidents are auditable after the fact.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -45,6 +72,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.model import Model, build_model
+from repro.serve.paging import PageAllocator
 from repro.serve.scheduler import Request, Response, SlotScheduler
 
 
@@ -80,6 +108,14 @@ class ServeEngine:
     # optional 'poison' ((B,) bool slot mask -> NaN logits in-jit) and
     # 'delay_s' (host sleep inside the timed region).  Production: None.
     fault_hook: Optional[object] = None
+    # ---- paged KV --------------------------------------------------------
+    paged: Optional[bool] = None      # None = auto (attn-only archs)
+    page_size: int = 16               # tokens per KV page
+    n_pages: Optional[int] = None     # pool size incl. the sacrificial
+                                      # page 0; None = dense-equivalent
+    # ---- tensor parallelism ----------------------------------------------
+    mesh: Optional[object] = None     # jax Mesh; dispatches trace under it
+    profile: str = "baseline"         # sharding profile when mesh is set
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -87,9 +123,32 @@ class ServeEngine:
             raise ValueError("serve engine targets decoder-only LMs "
                              "(whisper serving needs a frames frontend)")
         self.supports_ragged = set(cfg.layer_kinds()) == {"attn"}
-        self._caches = self.model.init_caches(self.max_batch, self.max_seq)
+        if self.paged is None:
+            self.paged = self.supports_ragged
+        elif self.paged and not self.supports_ragged:
+            raise ValueError("paged KV requires an attn-only architecture "
+                             "(recurrent states are O(1) per slot already)")
+        self._env = None
+        if self.mesh is not None:
+            from repro.distributed import sharding as _sh
+            self._env = _sh.MeshEnv(self.mesh, self.profile)
+        if self.paged:
+            if self.n_pages is None:
+                # dense-equivalent pool: every slot can hold max_seq rows
+                self.n_pages = 1 + self.max_batch * \
+                    (-(-self.max_seq // self.page_size))
+            self.alloc = PageAllocator(self.n_pages, self.page_size,
+                                       self.max_batch, self.max_seq)
+            self._caches = self._init_paged_caches()
+        else:
+            self.alloc = None
+            self._caches = self.model.init_caches(self.max_batch,
+                                                  self.max_seq)
         self._admit_fn = jax.jit(self._admit_impl, donate_argnums=4)
-        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=4)
+        # decode chunks jit per (static) step count k: variable-k chunks
+        # stop early when every live slot's budget is spent.  At most
+        # decode_block entries ever exist.
+        self._chunk_fns: Dict[int, object] = {}
         # the python-loop reference path keeps its own cached jits — fresh
         # wrappers per call would re-trace every invocation and poison the
         # scan-vs-loop benchmark's steady-state numbers
@@ -100,9 +159,31 @@ class ServeEngine:
         self._stats = self._fresh_stats()
         self.events: List[dict] = []
 
+    def _init_paged_caches(self) -> Dict:
+        """Flat physical-row pools: each dense leaf (periods, B, S, ...)
+        becomes (periods, R, ...) with R = n_pages × page_size shared
+        across slots (page 0 is the sacrificial row set)."""
+        rows = self.n_pages * self.page_size
+        ab = self.model.abstract_caches(1, 1)
+        return jax.tree.map(
+            lambda l: jnp.zeros((l.shape[0], rows) + l.shape[3:], l.dtype),
+            ab)
+
+    def _ctx(self):
+        """Trace/dispatch context: re-enters the engine's MeshEnv so every
+        jit trace (and retrace) sees the TP mesh + profile."""
+        if self._env is None:
+            return contextlib.nullcontext()
+        from repro.distributed import sharding as _sh
+        return _sh.use_env(self._env)
+
+    def _page_map(self):
+        return jnp.asarray(self.alloc.page_map) if self.paged else None
+
     def _fresh_stats(self) -> Dict:
         return {"prefill_dispatches": 0, "decode_dispatches": 0,
-                "decode_tokens": 0, "chunk_s": [], "prefill_s": [],
+                "decode_tokens": 0, "decode_steps": 0,
+                "chunk_s": [], "chunk_k": [], "prefill_s": [],
                 "quarantines": 0, "requeues": 0, "timeouts": 0,
                 "rejected": 0, "stalls": 0, "nonfinite_chunks": 0,
                 "errors": 0}
@@ -113,40 +194,54 @@ class ServeEngine:
 
     # ---- device functions -------------------------------------------------
     def _admit_impl(self, params, tokens, positions, admit_mask, caches,
-                    temps, rng, idx, poison):
+                    temps, rng, idx, poison, page_map=None,
+                    fresh_mask=None):
         """Batched left-padded prefill over the full slot dim.  Rows not
         being admitted run an all-pad dummy prompt (their writes park in
-        the sacrificial slot) and their cache rows are masked back to the
-        previous tenant's contents — in-flight requests are untouched.
-        Also returns a per-slot finite-ness flag over the sampled-from
-        logits (``poison`` is the chaos-injection mask)."""
+        the sacrificial slot/row) and — dense mode — their cache rows are
+        masked back to the previous tenant's contents.  Paged mode needs
+        no merge: page ownership isolates tenants, and the freshly claimed
+        physical rows (``fresh_mask`` over the pool's row axis) are zeroed
+        before the prefill so a recycled page never leaks the previous
+        tenant's K/V.  Also returns a per-slot finite-ness flag over the
+        sampled-from logits (``poison`` is the chaos-injection mask)."""
+        if fresh_mask is not None:
+            def wipe(c):
+                m = fresh_mask.reshape((1, -1) + (1,) * (c.ndim - 2))
+                return jnp.where(m, jnp.zeros_like(c), c)
+            caches = jax.tree.map(wipe, caches)
         logits, new_caches = self.model.prefill(
-            params, {"tokens": tokens}, caches, positions=positions)
-
-        def merge(n, o):
-            # cache leaves are period-stacked: (periods, B, ...) — the slot
-            # dim is axis 1, so the admit mask must broadcast over axis 1
-            # (masking axis 0 would mix periods across tenants)
-            m = admit_mask.reshape((1, -1) + (1,) * (n.ndim - 2))
-            return jnp.where(m, n, o)
-
-        caches = jax.tree.map(merge, new_caches, caches)
+            params, {"tokens": tokens}, caches, positions=positions,
+            page_map=page_map)
+        if page_map is None:
+            def merge(n, o):
+                # cache leaves are period-stacked: (periods, B, ...) — the
+                # slot dim is axis 1, so the admit mask must broadcast over
+                # axis 1 (masking axis 0 would mix periods across tenants)
+                m = admit_mask.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(m, n, o)
+            caches = jax.tree.map(merge, new_caches, caches)
+        else:
+            caches = new_caches
         last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
         ok = jnp.all(jnp.isfinite(last), axis=-1)
         tok = _sample_batch(last, temps, rng, idx)
         return tok, caches, ok
 
-    def _chunk_impl(self, params, tok, pos, temps, caches, rng, base,
-                    poison):
-        """k = decode_block decode steps in one dispatch: the scan body is
-        one model.decode_step (mode='infer') + batched sampling; the KV
-        caches ride the carry and never leave the device.  A per-slot
+    def _chunk_impl(self, k, params, tok, pos, temps, caches, rng, base,
+                    poison, page_map=None):
+        """k decode steps in one dispatch (k static, ≤ decode_block — the
+        variable-k policy jits one scan per distinct step count): the scan
+        body is one model.decode_step (mode='infer') + batched sampling;
+        the KV caches ride the carry and never leave the device
+        (``page_map`` is loop-invariant, closed over).  A per-slot
         finite-ness flag (AND over the chunk's logits) rides out with the
         tokens; ``poison`` NaNs a chosen slot's logits for chaos tests."""
         def body(carry, i):
             tok, pos, caches, ok = carry
             logits, caches = self.model.decode_step(params, tok, caches,
-                                                    pos[:, None])
+                                                    pos[:, None],
+                                                    page_map=page_map)
             last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
             ok = ok & jnp.all(jnp.isfinite(last), axis=-1)
             nxt = _sample_batch(last, temps, rng, base + i)
@@ -155,8 +250,16 @@ class ServeEngine:
 
         ok0 = jnp.ones((self.max_batch,), bool)
         (tok, pos, caches, ok), toks = jax.lax.scan(
-            body, (tok, pos, caches, ok0), jnp.arange(self.decode_block))
+            body, (tok, pos, caches, ok0), jnp.arange(k))
         return toks.T, tok, pos, caches, ok
+
+    def _get_chunk_fn(self, k: int):
+        fn = self._chunk_fns.get(k)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._chunk_impl, k),
+                         donate_argnums=4)
+            self._chunk_fns[k] = fn
+        return fn
 
     # ---- scheduler-facing API --------------------------------------------
     def _rng(self, rng) -> jax.Array:
@@ -183,15 +286,33 @@ class ServeEngine:
 
     def admit(self, tokens: np.ndarray, positions: np.ndarray,
               admit_mask: np.ndarray, temps: np.ndarray,
-              rng) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns (first token per slot, per-slot finite-ness flag)."""
+              rng, budgets: Optional[np.ndarray] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (first token per slot, per-slot finite-ness flag).
+
+        ``budgets``: per-slot token spans (prompt + generation budget) for
+        the newly admitted rows — paged mode claims exactly that many
+        pages per slot up front (the scheduler's ``prompt + max_new ≤
+        max_seq - 1`` invariant bounds it) and zeroes them in-dispatch."""
         idx = self._stats["prefill_dispatches"]
         poison, delay_s = self._fault("prefill", idx)
+        page_map = fresh = None
+        if self.paged:
+            if budgets is None:
+                raise ValueError("paged engine: admit() needs per-slot "
+                                 "token budgets")
+            fresh_np = np.zeros((self.n_pages * self.page_size,), bool)
+            for i in np.nonzero(np.asarray(admit_mask))[0]:
+                self.alloc.release(int(i))  # idempotent (normally a no-op:
+                # the scheduler releases on finish/quarantine)
+                fresh_np[self.alloc.allocate(int(i), int(budgets[i]))] = True
+            page_map, fresh = self._page_map(), jnp.asarray(fresh_np)
         t0 = time.perf_counter()
-        tok, self._caches, ok = self._admit_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(admit_mask), self._caches, jnp.asarray(temps),
-            self._rng(rng), self._rng_step, poison)
+        with self._ctx():
+            tok, self._caches, ok = self._admit_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(admit_mask), self._caches, jnp.asarray(temps),
+                self._rng(rng), self._rng_step, poison, page_map, fresh)
         tok, ok = np.asarray(tok), np.asarray(ok)
         if delay_s:
             time.sleep(delay_s)  # simulated device stall (chaos)
@@ -202,48 +323,96 @@ class ServeEngine:
         self._watch_stall("prefill", idx, elapsed)
         return tok[:, 0], ok
 
+    def release_slot(self, slot: int) -> None:
+        """Return a finished/quarantined slot's pages to the pool (no-op
+        for the dense layout — the admit-mask merge recycles its rows)."""
+        if self.paged:
+            self.alloc.release(slot)
+
     def decode_chunk(self, cur_tok: np.ndarray, pos: np.ndarray,
-                     temps: np.ndarray, rng
+                     temps: np.ndarray, rng,
+                     remaining: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                 np.ndarray]:
         """Returns (chunk tokens (B, k), next token, next pos, per-slot
         finite-ness flag — False means the slot's logits went NaN/inf
-        somewhere in the chunk and its tokens are garbage)."""
+        somewhere in the chunk and its tokens are garbage).
+
+        ``remaining``: per-slot tokens still owed (0 for free/finished
+        slots).  The chunk scans k = min(decode_block, max(remaining))
+        steps, so a chunk whose live slots all finish early stops with
+        them instead of burning the full block."""
+        k = self.decode_block
+        if remaining is not None:
+            owed = int(np.max(remaining))
+            if owed > 0:
+                k = min(k, owed)
         idx = self._stats["decode_dispatches"]
         poison, delay_s = self._fault("decode", idx)
         t0 = time.perf_counter()
-        toks, tok, pos, self._caches, ok = self._chunk_fn(
-            self.params, jnp.asarray(cur_tok), jnp.asarray(pos),
-            jnp.asarray(temps), self._caches, self._rng(rng),
-            self._rng_step, poison)
+        with self._ctx():
+            toks, tok, pos, self._caches, ok = self._get_chunk_fn(k)(
+                self.params, jnp.asarray(cur_tok), jnp.asarray(pos),
+                jnp.asarray(temps), self._caches, self._rng(rng),
+                self._rng_step, poison, self._page_map())
         toks = np.asarray(toks)  # (B, k) — the one host sync per chunk
         ok = np.asarray(ok)
         if delay_s:
             time.sleep(delay_s)  # simulated device stall (chaos)
         elapsed = time.perf_counter() - t0
-        self._rng_step += self.decode_block
+        self._rng_step += k
         self._stats["decode_dispatches"] += 1
+        self._stats["decode_steps"] += k
         self._stats["decode_tokens"] += toks.shape[0] * toks.shape[1]
         self._stats["chunk_s"].append(elapsed)
+        self._stats["chunk_k"].append(k)
         self._watch_stall("decode", idx, elapsed)
         if not ok.all():
             self.count("nonfinite_chunks")
         # writable copies: the scheduler mutates these host mirrors in place
         return toks, np.array(tok), np.array(pos), ok
 
+    def cache_hbm_bytes(self, *, peak: bool = True) -> Dict[str, int]:
+        """Measured KV-cache HBM footprint: bytes per logical row summed
+        over every (period-stacked) leaf, × rows held.  ``paged`` counts
+        the rows actually backed by claimed pages (+ the sacrificial
+        page); ``dense`` is the B × max_seq layout the paged pool
+        replaces.  Benchmarks emit both (serve_sharded/* rows)."""
+        ab = self.model.abstract_caches(1, 1)
+        row_bytes = sum(
+            l.shape[0] * int(np.prod(l.shape[3:], dtype=np.int64))
+            * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(ab))
+        dense_rows = self.max_batch * self.max_seq
+        out = {"row_bytes": int(row_bytes),
+               "dense_bytes": int(row_bytes * dense_rows)}
+        if self.paged:
+            pages = (self.alloc.peak_pages if peak
+                     else self.alloc.pages_in_use)
+            out["paged_bytes"] = int(
+                row_bytes * (pages + 1) * self.page_size)
+            out["pool_bytes"] = int(
+                row_bytes * self.n_pages * self.page_size)
+        return out
+
     def stats(self) -> Dict:
         s = dict(self._stats)
         chunks = s.pop("chunk_s")
+        ks = s.pop("chunk_k")
         pre = s.pop("prefill_s")
-        k = self.decode_block
         # steady-state: the first chunk carries compile time
-        steady = chunks[1:] or chunks
+        steady = [t / kk for t, kk in zip(chunks, ks)]
+        steady = steady[1:] or steady
         if chunks:
-            s["per_token_p50_s"] = float(np.percentile(steady, 50)) / k
-            s["per_token_p95_s"] = float(np.percentile(steady, 95)) / k
+            s["per_token_p50_s"] = float(np.percentile(steady, 50))
+            s["per_token_p95_s"] = float(np.percentile(steady, 95))
             s["decode_s"] = float(np.sum(chunks))
         if pre:
             s["prefill_s"] = float(np.sum(pre))
+        if self.paged:
+            s["pages_in_use"] = self.alloc.pages_in_use
+            s["peak_pages"] = self.alloc.peak_pages
+            s["page_size"] = self.page_size
         return s
 
     def reset_stats(self) -> None:
@@ -294,17 +463,20 @@ class ServeEngine:
         key = self._rng(rng)
         temps = jnp.full((b,), temperature, jnp.float32)
         t0 = time.perf_counter()
-        logits, caches = prefill(self.params,
-                                 {"tokens": jnp.asarray(prompts)}, caches)
+        with self._ctx():
+            logits, caches = prefill(self.params,
+                                     {"tokens": jnp.asarray(prompts)},
+                                     caches)
         t_prefill = time.perf_counter() - t0
         tok = _sample_batch(logits[:, -1], temps, key, 0)
         out = [tok]
         t1 = time.perf_counter()
-        for i in range(max_new_tokens - 1):
-            pos = jnp.full((b, 1), p + i, jnp.int32)
-            logits, caches = decode(self.params, tok, caches, pos)
-            tok = _sample_batch(logits[:, -1], temps, key, i + 1)
-            out.append(tok)
+        with self._ctx():
+            for i in range(max_new_tokens - 1):
+                pos = jnp.full((b, 1), p + i, jnp.int32)
+                logits, caches = decode(self.params, tok, caches, pos)
+                tok = _sample_batch(logits[:, -1], temps, key, i + 1)
+                out.append(tok)
         jax.block_until_ready(tok)
         t_decode = time.perf_counter() - t1
         tokens = np.asarray(jnp.concatenate(out, axis=1))
@@ -318,9 +490,13 @@ class ServeEngine:
 
 def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
                 max_batch: int = 8, max_seq: int = 256, seed: int = 0,
-                decode_block: int = 8) -> ServeEngine:
+                decode_block: int = 8, mesh: Optional[object] = None,
+                profile: str = "baseline", paged: Optional[bool] = None,
+                page_size: int = 16,
+                n_pages: Optional[int] = None) -> ServeEngine:
     model = build_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))
     return ServeEngine(model, params, max_batch, max_seq,
-                       decode_block=decode_block)
+                       decode_block=decode_block, mesh=mesh, profile=profile,
+                       paged=paged, page_size=page_size, n_pages=n_pages)

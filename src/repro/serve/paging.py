@@ -1,0 +1,162 @@
+"""Paged KV-cache bookkeeping for the serve engine (host-side).
+
+The engine's dense per-slot caches hold ``(B, max_seq)`` rows per leaf —
+every slot pays the worst case for its whole lifetime.  Paged mode keeps
+one flat **physical-row pool** per cache leaf, ``(periods, R, ...)`` with
+``R = n_pages × page_size``, shared across slots.  This allocator owns the
+mapping from logical positions to pool rows:
+
+* a **free list** of fixed-size pages (page 0 is never on it — see below),
+* **per-slot page lists**: pages are allocated up-front at admission to
+  cover the request's full token span (prompt + generation budget, known
+  at admit time) and returned the moment the slot finishes or is
+  quarantined — compaction is immediate, not deferred,
+* the ``page_map`` — an ``(B, max_seq) int32`` map from (slot, logical
+  position) to physical pool row, shipped to the device with every
+  dispatch.  Attention writes K/V through it and gathers the logical view
+  back out of the pool (models/attention.py).
+
+**The sacrificial page.**  Row 0 (all of page 0) plays the role the dense
+layout gives the ``max_seq - 1`` slot: left-pad positions are negative and
+park their K/V writes there, and any position a slot does not own
+(beyond its allocated span, or after release) also maps to row 0.  Reads
+through those map entries are always masked by the causal/visibility mask
+(`_sdpa` uses -inf → exp ≡ 0), so garbage in the sacrificial row never
+reaches a live score — the same argument that makes the dense pad-parking
+slot safe.  Column ``max_seq - 1`` of every map row therefore always
+stays sacrificial, preserving the engine's ``prompt + max_new ≤
+max_seq - 1`` invariant in paged form.
+
+Invariants (property-tested in tests/test_properties.py):
+
+* a page is never owned by two slots (no double-allocation),
+* ``len(free) + Σ_slot len(pages[slot]) == n_pages - 1`` always
+  (the pool is conserved; page 0 is permanently reserved),
+* a slot's page list reconstructs exactly the token positions a dense
+  cache would hold: logical position p lives at row
+  ``pages[p // page_size] * page_size + p % page_size``,
+* after release, a slot's map row is entirely sacrificial.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class PageAllocator:
+    """Free-list page allocator + logical→physical page map.
+
+    Pure host-side numpy; the engine ships ``page_map`` to the device as
+    an argument of each jitted dispatch (its values change between
+    dispatches, so it must not be baked into the trace).
+    """
+
+    SACRIFICIAL = 0  # physical row (and page) that absorbs masked writes
+
+    def __init__(self, n_pages: int, page_size: int, max_batch: int,
+                 max_seq: int):
+        if n_pages < 2:
+            raise ValueError("need at least one allocatable page "
+                             "beside the sacrificial page 0")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        # LIFO free list: recently released pages are re-used first (their
+        # rows are re-zeroed on admission — recycled-slot purity)
+        self.free: List[int] = list(range(1, self.n_pages))
+        self.pages: Dict[int, List[int]] = {i: [] for i in range(max_batch)}
+        self.spans: Dict[int, int] = {i: 0 for i in range(max_batch)}
+        self.page_map = np.zeros((max_batch, max_seq), dtype=np.int32)
+        self.peak_pages = 0
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def capacity_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self.pages.values())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= len(self.free)
+
+    # -- allocate / release ------------------------------------------------
+    def allocate(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Claim pages covering logical positions [0, n_tokens) for a slot
+        and point its map row at them.  Returns the physical rows that now
+        belong to the slot (the engine zeroes exactly these before the
+        admission prefill — no cross-request KV leakage).
+        """
+        if self.pages[slot]:
+            raise RuntimeError(f"slot {slot} still holds pages; "
+                               f"release it before re-admission")
+        n_tokens = int(n_tokens)
+        if not 0 < n_tokens <= self.max_seq - 1:
+            raise ValueError(f"token span {n_tokens} outside "
+                             f"(0, {self.max_seq - 1}]")
+        need = self.pages_needed(n_tokens)
+        if need > len(self.free):
+            raise RuntimeError(f"page pool exhausted: need {need}, "
+                               f"free {len(self.free)}")
+        got = [self.free.pop() for _ in range(need)]
+        self.pages[slot] = got
+        self.spans[slot] = n_tokens
+        ps = self.page_size
+        row = self.page_map[slot]
+        row[:] = self.SACRIFICIAL
+        for k, pid in enumerate(got):
+            lo = k * ps
+            hi = min(lo + ps, self.max_seq - 1)  # last col stays sacrificial
+            row[lo:hi] = pid * ps + np.arange(hi - lo, dtype=np.int32)
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return self.rows_of(slot)
+
+    def release(self, slot: int) -> None:
+        """Return a slot's pages to the free list and re-park its map row
+        on the sacrificial page.  Idempotent."""
+        self.free.extend(self.pages[slot])
+        self.pages[slot] = []
+        self.spans[slot] = 0
+        self.page_map[slot, :] = self.SACRIFICIAL
+
+    def rows_of(self, slot: int) -> np.ndarray:
+        """All physical rows owned by a slot (page-granular, includes the
+        tail rows of a partially-used last page)."""
+        ps = self.page_size
+        if not self.pages[slot]:
+            return np.zeros((0,), dtype=np.int32)
+        base = np.asarray(self.pages[slot], dtype=np.int32) * ps
+        return (base[:, None] + np.arange(ps, dtype=np.int32)).reshape(-1)
+
+    def check_invariants(self) -> None:
+        """Raise AssertionError if any pool invariant is violated."""
+        live = [p for ps_ in self.pages.values() for p in ps_]
+        assert self.SACRIFICIAL not in live and self.SACRIFICIAL not in \
+            self.free, "sacrificial page entered circulation"
+        assert len(set(live)) == len(live), "page double-allocated"
+        assert len(set(live) & set(self.free)) == 0, \
+            "page simultaneously live and free"
+        assert len(self.free) + len(live) == self.n_pages - 1, \
+            "pool not conserved"
+        ps = self.page_size
+        for slot, plist in self.pages.items():
+            row = self.page_map[slot]
+            # the map is page-granular: a slot's row covers the full extent
+            # of its pages (the tail of a partially-used last page belongs
+            # to the slot too — zeroed at admit, masked until written)
+            extent = len(plist) * ps
+            for col in range(self.max_seq):
+                if col < extent and col < self.max_seq - 1:
+                    want = plist[col // ps] * ps + col % ps
+                else:
+                    want = self.SACRIFICIAL
+                assert row[col] == want, (
+                    f"slot {slot} col {col}: map row {row[col]} != {want}")

@@ -25,10 +25,22 @@ round:
    which is why a request must fit ``prompt + max_new ≤ max_seq - 1``.
 
 2. **Decode** — one jitted ``lax.scan`` dispatch advances every slot by
-   ``decode_block`` tokens (finished/free slots decode masked-out garbage
-   for at most one chunk — the price of a fixed shape).  The host then
-   scans the (B, k) chunk for per-request EOS / length exhaustion,
-   finalizes responses and recycles slots for the next admit round.
+   up to ``decode_block`` tokens.  The scheduler passes each live slot's
+   remaining budget and the engine scans only ``min(decode_block,
+   max(remaining))`` steps, so finished/free slots no longer burn a full
+   block of masked-out garbage when every live slot is nearly done.  The
+   host then scans the (B, k) chunk for per-request EOS / length
+   exhaustion, finalizes responses and recycles slots for the next admit
+   round.
+
+Paged engines add a third policy axis: page-pool admission.  Each
+request's full token span (``prompt + max_new``) is claimed at admit and
+released the moment its slot finishes or is quarantined
+(``engine.release_slot``).  When the free list cannot cover the next
+queued request, admission *waits* — live slots keep decoding, and their
+releases unblock the queue.  This cannot deadlock: a submit-time guard
+rejects any request whose span exceeds the whole pool, so an all-free
+engine (⇒ an all-free pool) can always admit the queue head.
 
 Guardrails (chaos-tested in tests/test_chaos.py)
 ------------------------------------------------
@@ -136,6 +148,14 @@ class SlotScheduler:
                     f"request {r.uid}: prompt({len(r.prompt)}) + "
                     f"max_new({r.max_new_tokens}) must fit max_seq-1 = "
                     f"{max_seq - 1} (last slot is the pad-parking slot)")
+            if eng.paged:
+                span = len(r.prompt) + r.max_new_tokens
+                if eng.alloc.pages_needed(span) > eng.alloc.capacity_pages:
+                    raise ValueError(
+                        f"request {r.uid}: token span {span} needs "
+                        f"{eng.alloc.pages_needed(span)} pages but the "
+                        f"pool holds {eng.alloc.capacity_pages} — it "
+                        "could never be admitted")
         if not eng.supports_ragged:
             lens = {len(r.prompt) for r in requests}
             if len(lens) > 1:
@@ -185,6 +205,7 @@ class SlotScheduler:
                 eng.count("timeouts" if reason == "timeout" else "errors")
             slots[i] = None
             temps[i] = 0.0
+            eng.release_slot(i)  # paged: pages return to the pool now
             free.append(i)
 
         def quarantine(i: int) -> None:
@@ -205,6 +226,7 @@ class SlotScheduler:
             queue.appendleft(s.req)  # front: it already held a slot
             slots[i] = None
             temps[i] = 0.0
+            eng.release_slot(i)  # paged: pages return to the pool now
             free.append(i)
 
         def consume(i: int, toks: np.ndarray) -> None:
@@ -225,9 +247,11 @@ class SlotScheduler:
         while queue or len(free) < B:
             # ---- admit ------------------------------------------------
             newly: List[int] = []
+            pending_pages = 0  # pages this round will claim in eng.admit
             while queue and free:
-                req = queue.popleft()
+                req = queue[0]  # peek: pool waits must not reorder
                 if expired(req):  # died waiting in the queue
+                    queue.popleft()
                     done[req.uid] = Response(
                         uid=req.uid, prompt_len=len(req.prompt),
                         tokens=np.zeros((0,), np.int32),
@@ -235,6 +259,23 @@ class SlotScheduler:
                         latency_s=time.perf_counter() - t_submit[req.uid])
                     eng.count("timeouts")
                     continue
+                if eng.paged:
+                    need = eng.alloc.pages_needed(
+                        len(req.prompt) + req.max_new_tokens)
+                    # allocation happens inside eng.admit, after this
+                    # loop — count this round's earlier admissions too
+                    if need + pending_pages > len(eng.alloc.free):
+                        # wait for a live slot to finish and release
+                        # pages — the submit-time guard makes this
+                        # unreachable with an idle engine (all slots
+                        # free ⇒ the whole pool free)
+                        if not newly and len(free) == B:
+                            raise RuntimeError(
+                                f"page pool wedged: request {req.uid} "
+                                "cannot be admitted with every slot free")
+                        break
+                    pending_pages += need
+                queue.popleft()
                 i = free.pop()
                 slots[i] = _Slot(req=req, tokens=[],
                                  t_admit=time.perf_counter())
@@ -248,15 +289,18 @@ class SlotScheduler:
                 tokens = np.zeros((B, P), np.int32)
                 pads = np.full((B,), P, np.int32)  # non-admitted: all-pad
                 admit = np.zeros((B,), bool)
+                budgets = np.zeros((B,), np.int32)
                 for i in newly:
                     p = slots[i].req.prompt
                     tokens[i, P - len(p):] = p
                     pads[i] = P - len(p)
                     admit[i] = True
                     temps[i] = slots[i].req.temperature
+                    budgets[i] = len(p) + slots[i].req.max_new_tokens
                 positions = (np.arange(P)[None, :] -
                              pads[:, None]).astype(np.int32)
-                tok0, ok = eng.admit(tokens, positions, admit, temps, rng)
+                tok0, ok = eng.admit(tokens, positions, admit, temps, rng,
+                                     budgets=budgets)
                 for i in newly:
                     if not ok[i]:  # poisoned prefill: quarantine
                         quarantine(i)
@@ -267,8 +311,13 @@ class SlotScheduler:
             # ---- decode one chunk --------------------------------------
             if len(free) == B:
                 continue  # everything finished at its first token
-            toks, new_tok, new_pos, ok = eng.decode_chunk(cur_tok, pos,
-                                                          temps, rng)
+            remaining = np.zeros((B,), np.int32)
+            for i in range(B):
+                if slots[i] is not None:
+                    remaining[i] = (slots[i].req.max_new_tokens -
+                                    len(slots[i].tokens))
+            toks, new_tok, new_pos, ok = eng.decode_chunk(
+                cur_tok, pos, temps, rng, remaining=remaining)
             cur_tok, pos = new_tok, new_pos
             for i in range(B):
                 if slots[i] is None:

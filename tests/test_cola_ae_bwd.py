@@ -186,7 +186,18 @@ def test_planner_routes_by_shape_and_structure():
     assert _plan_infer("pallas", small_a, small_b,
                        DECODE_T_MAX + 1) == "monolith"
     assert _plan_infer("pallas", big_a, big_b, 4096) == "staged"
+    # row-parallel serving: the mid-pipeline z_pre psum takes the decode
+    # kernel cut at the z seam below the T threshold, the training stage
+    # pipeline above it; forcing the GEMV grain resolves to the split
     assert _plan_infer("pallas", small_a, small_b, 1,
+                       mid_psum=True) == "decode_split"
+    assert _plan_infer("pallas", small_a, small_b, DECODE_T_MAX,
+                       mid_psum=True) == "decode_split"
+    assert _plan_infer("pallas", small_a, small_b, DECODE_T_MAX + 1,
+                       mid_psum=True) == "staged"
+    assert _plan_infer("pallas:decode", small_a, small_b, 4096,
+                       mid_psum=True) == "decode_split"
+    assert _plan_infer("pallas:staged", small_a, small_b, 1,
                        mid_psum=True) == "staged"
     assert _plan_infer("ref", small_a, small_b, 1) == "ref"
 

@@ -245,3 +245,90 @@ def test_cola_ae_partition_invariants(case):
     assert _entry_axes(part.b_spec[1]) == part.out_axes
     assert _entry_axes(part.x_spec[2]) == part.in_axes
     assert _entry_axes(part.zpre_spec[1]) == part.rank_axes
+
+
+# --------------------------------------------------------------------------
+# Paged-KV allocator (serve/paging.py)
+# --------------------------------------------------------------------------
+from repro.serve.paging import PageAllocator  # noqa: E402
+
+
+@st.composite
+def _pool_trace(draw):
+    """A pool shape plus a random admit/release trace over its slots."""
+    page_size = draw(st.integers(1, 8))
+    max_batch = draw(st.integers(1, 4))
+    max_seq = draw(st.integers(4, 40))
+    n_pages = draw(st.integers(2, 24))
+    n_ops = draw(st.integers(1, 30))
+    ops = [(draw(st.sampled_from(["admit", "release"])),
+            draw(st.integers(0, max_batch - 1)),
+            draw(st.integers(1, max_seq - 1)))
+           for _ in range(n_ops)]
+    return page_size, max_batch, max_seq, n_pages, ops
+
+
+@settings(max_examples=120, deadline=None)
+@given(case=_pool_trace())
+def test_page_allocator_invariants_under_random_traces(case):
+    """Any admit/release interleaving preserves the pool invariants: no
+    double-allocation, conservation (free + live == n_pages - 1 with the
+    sacrificial page never circulating), and every live slot's map row
+    reconstructing exactly the dense layout's positions.  Failed admits
+    (slot busy / pool exhausted) must not corrupt state either."""
+    page_size, max_batch, max_seq, n_pages, ops = case
+    alloc = PageAllocator(n_pages, page_size, max_batch, max_seq)
+    for op, slot, span in ops:
+        if op == "admit":
+            if alloc.pages[slot] or not alloc.can_allocate(span):
+                with pytest.raises(RuntimeError):
+                    alloc.allocate(slot, span)
+            else:
+                rows = alloc.allocate(slot, span)
+                # page-granular ownership covers the token span
+                assert len(rows) == alloc.pages_needed(span) * page_size
+                assert PageAllocator.SACRIFICIAL not in rows
+        else:
+            alloc.release(slot)
+            # released rows are entirely sacrificial
+            assert (alloc.page_map[slot] ==
+                    PageAllocator.SACRIFICIAL).all()
+        alloc.check_invariants()
+        assert alloc.peak_pages <= alloc.capacity_pages
+
+
+@settings(max_examples=60, deadline=None)
+@given(case=_pool_trace(), seed=st.integers(0, 999))
+def test_page_map_is_dense_equivalent(case, seed):
+    """Writing token vectors through the page map and gathering them back
+    reproduces a dense (B, max_seq) cache exactly, for every live span —
+    including after slots are released and their pages recycled by other
+    slots (recycled rows are re-zeroed, as the engine does at admit)."""
+    page_size, max_batch, max_seq, n_pages, ops = case
+    rng = np.random.RandomState(seed)
+    alloc = PageAllocator(n_pages, page_size, max_batch, max_seq)
+    pool = np.zeros((n_pages * page_size,), np.float64)
+    dense = np.zeros((max_batch, max_seq), np.float64)
+    spans = {i: 0 for i in range(max_batch)}
+    for op, slot, span in ops:
+        if op == "admit" and not alloc.pages[slot] \
+                and alloc.can_allocate(span):
+            rows = alloc.allocate(slot, span)
+            pool[rows] = 0.0  # the engine's fresh-row wipe
+            dense[slot] = 0.0
+            vals = rng.randn(span)
+            cols = np.arange(span)
+            write = cols < max_seq - 1  # last col is the parking slot
+            pool[alloc.page_map[slot, cols[write]]] = vals[write]
+            dense[slot, cols[write]] = vals[write]
+            spans[slot] = span
+        elif op == "release":
+            alloc.release(slot)
+            spans[slot] = 0
+        # every live slot gathers back its dense row (positions below the
+        # parking column — the last column is sacrificial by design)
+        for i in range(max_batch):
+            if spans[i]:
+                n = min(spans[i], max_seq - 1)
+                got = pool[alloc.page_map[i, :n]]
+                np.testing.assert_array_equal(got, dense[i, :n])

@@ -43,12 +43,15 @@ def test_scan_engine_matches_python_loop(engine, rng):
 def test_one_dispatch_per_k_tokens(engine, rng):
     """The engine issues exactly ceil((n-1)/k) decode dispatches (the
     first token comes out of the admission prefill) — counted at the
-    jitted-call boundary."""
+    jitted-call boundary — and, with variable-k chunks, scans exactly
+    n-1 decode steps for an equal-budget batch: finished slots never
+    burn dead steps."""
     for n in (5, 9, 12):
         toks, stats = engine.generate(_prompts(rng, 2, 6), n)
         k = engine.decode_block
         assert stats["decode_dispatches"] == math.ceil((n - 1) / k), n
         assert stats["prefill_dispatches"] == 1
+        assert stats["decode_steps"] == n - 1, n
         assert toks.shape == (2, n)
 
 
@@ -127,6 +130,55 @@ def test_engine_fused_vs_unfused_identical_tokens(rng):
         got = run(fused=True)
     assert cao.DISPATCH["infer_decode"] > 0, dict(cao.DISPATCH)
     np.testing.assert_array_equal(got, want)
+
+
+def test_paged_matches_dense_and_releases_pages(rng):
+    """Paged KV (the default for attn-only archs) emits streams
+    bit-identical to the dense (B, max_seq) slot layout, and every page
+    returns to the pool once serving drains."""
+    reqs = lambda: [Request(uid=i, prompt=_prompts(rng, 1, L)[0],
+                            max_new_tokens=6)
+                    for i, L in enumerate([5, 9, 3, 12])]
+    rng_state = rng.get_state()
+    dense_eng = make_engine(_cfg(), max_batch=2, max_seq=64,
+                            decode_block=4, paged=False)
+    want = {r.uid: r.tokens.tolist() for r in dense_eng.serve(reqs())}
+    rng.set_state(rng_state)
+    eng = make_engine(_cfg(), max_batch=2, max_seq=64, decode_block=4)
+    assert eng.paged and not dense_eng.paged
+    got = {r.uid: r.tokens.tolist() for r in eng.serve(reqs())}
+    assert got == want
+    stats = eng.stats()
+    assert stats["pages_in_use"] == 0      # all released at finish
+    assert stats["peak_pages"] > 0
+    hbm = eng.cache_hbm_bytes()
+    assert 0 < hbm["paged_bytes"] < hbm["dense_bytes"]
+    eng.alloc.check_invariants()
+
+
+def test_small_pool_admission_waits_for_compaction(rng):
+    """A pool too small for all requests at once still serves everything:
+    admission waits for live slots to release pages instead of failing,
+    and a request that could never fit is rejected at submit."""
+    # page_size 4, 6 usable pages: one (prompt 8 + new 6 = 14-token)
+    # request needs 4 pages, so two can't be resident together
+    eng = make_engine(_cfg(), max_batch=2, max_seq=32, decode_block=4,
+                      page_size=4, n_pages=7)
+    prompts = [_prompts(rng, 1, 8)[0] for _ in range(3)]
+    want = []
+    for p in prompts:
+        solo = make_engine(_cfg(), max_batch=2, max_seq=32,
+                           decode_block=4, page_size=4, n_pages=7)
+        want.append(solo.serve([Request(uid=0, prompt=p,
+                                        max_new_tokens=6)])[0]
+                    .tokens.tolist())
+    resps = eng.serve([Request(uid=i, prompt=p, max_new_tokens=6)
+                       for i, p in enumerate(prompts)])
+    assert [r.tokens.tolist() for r in resps] == want
+    assert eng.stats()["peak_pages"] <= 6
+    with pytest.raises(ValueError, match="pool"):
+        eng.serve([Request(uid=0, prompt=_prompts(rng, 1, 20)[0],
+                           max_new_tokens=9)])  # 29 tokens > 24-row pool
 
 
 def test_decode_never_takes_training_kernel(rng):
