@@ -1,0 +1,89 @@
+"""Committed serving benchmark: BENCH_serve.json at the repo root.
+
+    # regenerate the committed file (trains the spec-decode model — ~3min)
+    PYTHONPATH=src python -m benchmarks.serve_json --out BENCH_serve.json
+
+    # CI schema gate: regenerate quickly (untrained model, short budgets)
+    # and fail if the row-name schema drifted from the committed file
+    PYTHONPATH=src python -m benchmarks.serve_json --quick \
+        --check BENCH_serve.json
+
+The file holds the serving rows of benchmarks/throughput_table.py —
+plain continuous-batching engine rows (serve/*) plus the speculative-
+decoding rows (serve_spec/*) — as ``{"schema_version", "mode", "rows":
+[{"name", "value", "note"}]}``.  Values are machine-relative and drift
+freely; the *row names* are the contract: a PR that renames, drops or
+adds a serving metric must regenerate the committed file in the same
+change, or the CI check fails with the name diff.
+"""
+import argparse
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+
+def collect(quick: bool):
+    from benchmarks import throughput_table as tt
+    rows = []
+
+    def emit(name, value, note=""):
+        rows.append({"name": name, "value": float(value), "note": note})
+        print(f"{name},{float(value):.6g},{note}", flush=True)
+
+    tt._serve_engine_bench(emit)
+    tt._serve_spec_bench(emit, quick=quick)
+    return {"schema_version": SCHEMA_VERSION,
+            "mode": "quick" if quick else "full",
+            "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the collected rows to this JSON file")
+    ap.add_argument("--check", default=None,
+                    help="compare row-name schema against this committed "
+                         "JSON file; exit nonzero on drift")
+    ap.add_argument("--quick", action="store_true",
+                    help="untrained model + short budgets (same row "
+                         "names; CI schema checks)")
+    args = ap.parse_args()
+    if not args.out and not args.check:
+        ap.error("need --out and/or --check")
+
+    doc = collect(args.quick)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.out} ({len(doc['rows'])} rows, "
+              f"mode={doc['mode']})")
+
+    if args.check:
+        with open(args.check) as f:
+            want = json.load(f)
+        errs = []
+        if want.get("schema_version") != SCHEMA_VERSION:
+            errs.append(f"schema_version: committed "
+                        f"{want.get('schema_version')} != {SCHEMA_VERSION}")
+        got_names = sorted(r["name"] for r in doc["rows"])
+        want_names = sorted(r["name"] for r in want.get("rows", []))
+        missing = sorted(set(want_names) - set(got_names))
+        extra = sorted(set(got_names) - set(want_names))
+        if missing:
+            errs.append(f"rows in {args.check} no longer emitted: "
+                        f"{missing}")
+        if extra:
+            errs.append(f"new rows not in {args.check}: {extra} "
+                        f"— regenerate it (--out) and commit")
+        if errs:
+            print("SCHEMA DRIFT:\n  " + "\n  ".join(errs), file=sys.stderr)
+            sys.exit(1)
+        print(f"schema check OK: {len(want_names)} rows match "
+              f"{args.check}")
+
+
+if __name__ == "__main__":
+    main()

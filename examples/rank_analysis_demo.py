@@ -31,3 +31,15 @@ for r in rows:
     bar = "#" * int(40 * r["effective_rank"] / r["dim"])
     print(f"  layer {r['layer']:2d}: r={r['effective_rank']:3d}/{r['dim']} "
           f"{bar}")
+
+# the same spectra drive the speculative-decoding self-draft: the rank
+# holding alpha of each layer's activation energy is the draft rank that
+# layer gets (serve/draft.py builds the truncated parameter views)
+from repro.core.rank_analysis import pick_draft_ranks
+
+print("\nper-layer draft ranks for speculative decoding "
+      "(pick_draft_ranks):")
+for a in (0.8, 0.9, 0.95):
+    ranks = pick_draft_ranks(rows, a)
+    print(f"  alpha={a:.2f}: " +
+          " ".join(f"L{l}:{r}" for l, r in sorted(ranks.items())))

@@ -16,15 +16,26 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def effective_rank(x: jax.Array, alpha: float = 0.95) -> int:
-    """x: (tokens, features) activation matrix."""
-    x32 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
-    s = np.linalg.svd(x32, compute_uv=False)
+def rank_at(spectrum: np.ndarray, alpha: float) -> int:
+    """Eq. (1) on a precomputed spectrum: the smallest k whose leading
+    σ²-energy share reaches ``alpha``.  Clamped to [1, len(spectrum)]
+    (float round-off can leave the normalized tail just under 1.0)."""
+    s = np.asarray(spectrum, np.float64).reshape(-1)
+    if s.size == 0:
+        return 0
     energy = np.cumsum(s**2)
     total = energy[-1]
     if total <= 0:
         return 0
-    return int(np.searchsorted(energy / total, alpha) + 1)
+    r = int(np.searchsorted(energy / total, alpha) + 1)
+    return max(1, min(r, s.size))
+
+
+def effective_rank(x: jax.Array, alpha: float = 0.95) -> int:
+    """x: (tokens, features) activation matrix."""
+    x32 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
+    s = np.linalg.svd(x32, compute_uv=False)
+    return rank_at(s, alpha)
 
 
 def singular_spectrum(x: jax.Array) -> np.ndarray:
@@ -54,10 +65,12 @@ def collect_activation_spectra(model, params, batch, alpha: float = 0.95
     n_per = transformer.n_periods(cfg)
     for p in range(n_per):
         pparams = jax.tree.map(lambda w: w[p], block_params)
+        spec = singular_spectrum(x)
         results.append({
             "layer": p * period,
             "dim": cfg.d_model,
-            "effective_rank": effective_rank(x, alpha),
+            "effective_rank": rank_at(spec, alpha),
+            "spectrum": spec,
         })
         aux = transformer._zero_aux(cfg)
         for i in range(period):
@@ -65,6 +78,38 @@ def collect_activation_spectra(model, params, batch, alpha: float = 0.95
                 cfg, kinds[i], cfg.layer_is_moe(p * period + i),
                 pparams[f"layer{i}"], x, cos_sin=cos_sin,
                 positions=positions, cache=None, aux_acc=aux)
+    spec = singular_spectrum(x)
     results.append({"layer": cfg.num_layers, "dim": cfg.d_model,
-                    "effective_rank": effective_rank(x, alpha)})
+                    "effective_rank": rank_at(spec, alpha),
+                    "spectrum": spec})
     return results
+
+
+def pick_draft_ranks(spectra: List[Dict], alpha: float,
+                     max_rank: Optional[int] = None) -> Dict[int, int]:
+    """Per-layer draft-rank picker for speculative decoding (ROADMAP item
+    2; CR-Net's cross-layer observation supports per-layer rather than
+    one global truncation).
+
+    ``spectra`` is a list of ``{"layer": idx, "spectrum": 1-D σ array}``
+    entries — either measured activation spectra from
+    :func:`collect_activation_spectra` or per-site factor-importance
+    scores (serve/draft.py).  Returns ``{layer: r'}`` with
+    ``r' = rank_at(spectrum, alpha)``, optionally clamped to
+    ``max_rank`` (the site's full factor rank — a draft can never use
+    more directions than the full model has).
+
+    Properties (tested in tests/test_speculative.py): monotone
+    non-decreasing in ``alpha``, never exceeds the spectrum length or
+    ``max_rank``, and a pure function of its inputs (bit-identical
+    across processes — no salted hashing anywhere).
+    """
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    out: Dict[int, int] = {}
+    for entry in spectra:
+        r = rank_at(np.asarray(entry["spectrum"]), alpha)
+        if max_rank is not None:
+            r = min(r, int(max_rank))
+        out[int(entry["layer"])] = max(1, r)
+    return out

@@ -62,6 +62,13 @@ def make_pipeline(mc: ModelConfig, tc: TrainConfig, *, shard: int = 0,
                   num_shards: int = 1) -> DataPipeline:
     if tc.data.startswith("packed:"):
         src = PackedCorpus(tc.data.split(":", 1)[1], seed=tc.seed)
+    elif tc.data.startswith("markov:"):
+        # "markov:<p>" — synthetic corpus with explicit transition
+        # determinism (benchmarks/throughput_table.py trains its
+        # speculative-decoding model on a high-p corpus so the self-draft
+        # has structure to predict)
+        src = MarkovZipf(mc.vocab_size, seed=tc.seed,
+                         markov_p=float(tc.data.split(":", 1)[1]))
     else:
         src = MarkovZipf(mc.vocab_size, seed=tc.seed)
     per_shard = tc.global_batch // num_shards

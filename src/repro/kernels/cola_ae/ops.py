@@ -53,6 +53,21 @@ tokens after the optional sequence-entry all_gather):
       (o/down: A d_in)       (mid-pipeline)
     fsdp / replicated        —                decode             monolith
                                                                  /staged
+    speculative verify       (per profile,    decode             (never: the
+      (B×k draft window)      as above)       /decode_split      engine caps
+                                                                 B·k ≤ T_MAX)
+
+The speculative-decoding engine (serve/engine.py) tags its dispatches by
+role through ``dispatch_scope``: the reduced-rank draft scan traces under
+``dispatch_scope('draft_')`` and the one-dispatch k-position verify under
+``dispatch_scope('verify_')``, prefixing every infer counter —
+``draft_infer_decode``, ``verify_infer_decode`` (and their
+``*_sharded_infer_decode`` / ``*_sharded_infer_decode_split`` forms under
+a mesh).  The verify window rides the same resident-token-tile decode
+kernel as a plain chunk step (weights streamed once per dispatch, not
+once per draft position), which is the whole amortization argument; the
+serve tests assert ``verify_infer_decode > 0`` with zero ``*_ref`` and
+zero training-shaped counters — no silent fallback, per role.
 
 Each taken plan lands a ``sharded_infer_{plan}`` DISPATCH counter; the
 serve parity harness (tests/test_serve_sharded.py) asserts a served
@@ -162,6 +177,31 @@ def force_impl(impl: Optional[str] = None, interpret: Optional[bool] = None,
         yield
     finally:
         _force.v = prev
+
+
+_scope = threading.local()
+
+
+@contextlib.contextmanager
+def dispatch_scope(prefix: str):
+    """Prefix every infer DISPATCH tag traced in scope — the speculative-
+    decoding engine wraps its draft scan in ``dispatch_scope('draft_')``
+    and its verify dispatch in ``dispatch_scope('verify_')``, so the
+    serve tests can assert the verify dispatch took the decode plan
+    (``verify_infer_decode`` / ``verify_sharded_infer_decode``) and the
+    reduced-rank draft steps the GEMV path (``draft_infer_decode``) —
+    no-silent-fallback, per role.  Trace-time, like force_impl: the
+    prefix is read while the jitted spec chunk traces its body."""
+    prev = getattr(_scope, "v", "")
+    _scope.v = prev + prefix
+    try:
+        yield
+    finally:
+        _scope.v = prev
+
+
+def _scoped(tag: str) -> str:
+    return getattr(_scope, "v", "") + tag
 
 
 def _apply_force(impl: str, interpret: bool) -> Tuple[str, bool]:
@@ -336,6 +376,7 @@ def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
     """
     plan = _plan_infer(impl, a, b, x2.shape[0],
                        mid_psum=psum_zpre is not None)
+    tag = _scoped(tag)  # draft_/verify_ speculative-decoding roles
     DISPATCH[f"{tag}_{plan}"] += 1
     if plan != "ref":
         DISPATCH[f"{tag}_pallas"] += 1

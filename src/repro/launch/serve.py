@@ -17,6 +17,13 @@ fused sharded CoLA kernels, so every decode dispatch runs the per-shard
 decode / decode_split Pallas bodies with the profile's collectives.
 Paged KV is on by default for attention-only architectures
 (``--dense-cache`` restores the dense (B, max_seq) slot layout).
+
+``--speculate`` switches decode to speculative rounds: a low-rank
+self-draft (``--draft-alpha`` rank truncation and/or ``--draft-depth``
+period truncation — views into the same weights, zero extra weight HBM)
+proposes ``--spec-window - 1`` tokens, the full model verifies the whole
+window in one dispatch, and the greedy output stream stays bit-identical
+to a ``--no-speculate`` run.
 """
 from __future__ import annotations
 
@@ -63,6 +70,27 @@ def main() -> None:
                     help="paged-KV tokens per page")
     ap.add_argument("--dense-cache", action="store_true",
                     help="disable paged KV (dense (B, max_seq) slot caches)")
+    spec = ap.add_mutually_exclusive_group()
+    spec.add_argument("--speculate", action="store_true",
+                      help="speculative decoding: a truncated-rank/-depth "
+                           "self-draft (views into the same weights) "
+                           "drafts, the full model verifies the window in "
+                           "one dispatch; greedy streams stay bit-"
+                           "identical to plain decode")
+    spec.add_argument("--no-speculate", action="store_true",
+                      help="explicit plain decode (CI parity runs)")
+    ap.add_argument("--draft-alpha", type=float, default=None,
+                    help="rank-energy level for the draft's per-site rank "
+                         "truncation (default 0.95 when --speculate sets "
+                         "no depth)")
+    ap.add_argument("--draft-depth", type=int, default=None,
+                    help="depth truncation: keep every p-th period "
+                         "(stride) or the first ceil(n/p) (prefix)")
+    ap.add_argument("--draft-depth-mode", default="stride",
+                    choices=("stride", "prefix"))
+    ap.add_argument("--spec-window", type=int, default=4,
+                    help="verified positions per speculative round "
+                         "(draft proposes spec-window - 1)")
     args = ap.parse_args()
 
     import dataclasses
@@ -95,8 +123,20 @@ def main() -> None:
                       profile=args.profile if mesh is not None
                       else "baseline",
                       paged=False if args.dense_cache else None,
-                      page_size=args.page_size)
+                      page_size=args.page_size,
+                      speculate=args.speculate,
+                      draft_alpha=args.draft_alpha,
+                      draft_depth=args.draft_depth,
+                      draft_depth_mode=args.draft_depth_mode,
+                      spec_window=args.spec_window)
     eng.max_queue = args.max_queue
+    if eng.speculating:
+        d = eng.draft_plan.describe()
+        ranks = [r for _, r in sorted(d["site_ranks"].items())]
+        print(f"speculate: window={args.spec_window} alpha={d['alpha']} "
+              f"depth={d['depth']}({d['depth_mode']}) "
+              f"keep_periods={len(d['keep_periods'])}/{d['n_periods']} "
+              f"site ranks (full,draft)={ranks}")
 
     rng = np.random.RandomState(args.seed)
     reqs = []
@@ -152,6 +192,13 @@ def main() -> None:
     if "per_token_p50_s" in stats:
         print(f"per-token latency p50={stats['per_token_p50_s']*1e3:.2f}ms "
               f"p95={stats['per_token_p95_s']*1e3:.2f}ms (steady-state)")
+    if eng.speculating:
+        print(f"speculative: rounds={stats['spec_rounds']} "
+              f"drafted={stats['spec_drafted']} "
+              f"accepted={stats['spec_accepted']} "
+              f"rejected={stats['spec_rejected']} "
+              f"acceptance={stats['spec_acceptance_rate']:.3f} "
+              f"mean_emitted={stats['spec_mean_emitted']:.2f}/round")
     print(f"guardrails: timeouts={stats['timeouts']} "
           f"rejected={stats['rejected']} quarantines={stats['quarantines']} "
           f"stalls={stats['stalls']}")

@@ -1,0 +1,237 @@
+"""Low-rank self-draft construction for speculative decoding.
+
+CoLA's 2×-smaller-model claim (paper Table 11) makes a CoLA model its own
+draft model: every linear site is already factorized ``h = B·σ(A·x)``, so
+a cheaper draft falls out of the *same* weights in two ways —
+
+* **rank truncation** — keep the r' most important factor directions of
+  each site.  Importance of direction j is ``s_j = ‖A[:, j]‖·‖B[j, :]‖``
+  (the exact σ_j when A, B come from an SVD; a cheap, calibration-free
+  proxy otherwise), aggregated over the period-stacked leading axis by
+  RMS.  ``core.rank_analysis.pick_draft_ranks`` turns those importance
+  spectra into per-site draft ranks at an energy level α — per-layer, not
+  one global cut (CR-Net's cross-layer rank observation, PAPERS.md).
+  The draft parameters are **gather views into the full A/B factors**
+  (``A[..., idx]``, ``B[..., idx, :]``) built in-trace at dispatch time:
+  the draft owns zero persistent weight HBM, and because the kept
+  directions preserve their original order, an α=1 draft reproduces the
+  full model's GEMM summation order — bit-identical logits, which is what
+  lets the α→1 limit degrade speculative decoding into plain decode
+  instead of into a subtly different stream.
+
+* **depth truncation** — keep a subset of the period-stacked transformer
+  blocks: every p-th period (``stride``, the cheap-uniform choice) or the
+  first ⌈n/p⌉ periods (``prefix``, which measures better on briefly
+  trained models whose late blocks contribute least).  The stacked
+  ``lax.scan`` derives its trip count from the leading axis of the
+  parameter leaves, so the sliced tree runs through the unmodified Model.
+
+Both compose.  The draft needs its own KV cache (its K/V projections
+differ from the full model's), shaped by the same page table in paged
+mode — ``draft_caches`` derives the pool from the engine's abstract cache
+shapes with the kept-period leading axis.
+
+``serve/engine.py`` drives the draft k−1 greedy steps through the
+existing decode GEMV path at reduced r, then verifies all k positions in
+one full-model dispatch; see the engine's spec-decode machinery for the
+accept/rollback protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rank_analysis import pick_draft_ranks
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteTrunc:
+    """One CoLA site's rank truncation: keep ``idx`` (sorted, original
+    order — summation-order-preserving) of the full rank."""
+    path: Tuple[str, ...]
+    d_in: int
+    rank: int
+    draft_rank: int
+    d_out: int
+    idx: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftPlan:
+    """Static description of the self-draft: which periods survive depth
+    truncation and which factor directions survive rank truncation.
+    Pure data — ``draft_params`` applies it in-trace."""
+    n_periods: int
+    keep_periods: Tuple[int, ...]
+    sites: Tuple[SiteTrunc, ...]
+    alpha: Optional[float] = None
+    depth: Optional[int] = None
+    depth_mode: str = "stride"
+
+    @property
+    def is_identity(self) -> bool:
+        return (len(self.keep_periods) == self.n_periods and
+                all(s.draft_rank == s.rank for s in self.sites))
+
+    def describe(self) -> Dict:
+        """JSON-able summary (benchmarks / launch logging)."""
+        return {
+            "alpha": self.alpha, "depth": self.depth,
+            "depth_mode": self.depth_mode,
+            "keep_periods": list(self.keep_periods),
+            "n_periods": self.n_periods,
+            "site_ranks": {"/".join(s.path): [s.rank, s.draft_rank]
+                           for s in self.sites},
+        }
+
+
+def _is_cola_site(tree) -> bool:
+    return isinstance(tree, dict) and "a" in tree and "b" in tree
+
+
+def _walk_sites(tree, path=()):
+    """Yield (path, site_dict) for every CoLA site in a block tree."""
+    if _is_cola_site(tree):
+        yield path, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk_sites(tree[k], path + (k,))
+
+
+def site_importance(site: Dict, keep_periods: np.ndarray) -> np.ndarray:
+    """Per-direction importance ``s_j = ‖A[:, j]‖·‖B[j, :]‖`` of a
+    period-stacked CoLA site, RMS-aggregated over the kept periods.
+    Host-side numpy on concrete params (plan time, not trace time)."""
+    a = np.asarray(site["a"], np.float32)[keep_periods]  # (P', ..., d_in, r)
+    b = np.asarray(site["b"], np.float32)[keep_periods]  # (P', ..., r, d_out)
+    na = np.sqrt(np.sum(a * a, axis=-2))                 # (P', ..., r)
+    nb = np.sqrt(np.sum(b * b, axis=-1))                 # (P', ..., r)
+    s = na * nb
+    s = s.reshape(-1, s.shape[-1])                       # fold periods/experts
+    return np.sqrt(np.mean(s * s, axis=0))               # (r,)
+
+
+def plan_draft(params: Dict, *, alpha: Optional[float] = None,
+               depth: Optional[int] = None,
+               depth_mode: str = "stride") -> DraftPlan:
+    """Build a :class:`DraftPlan` from concrete full-model params.
+
+    ``alpha``   — keep each site's smallest direction set holding α of
+                  its importance energy (``pick_draft_ranks``); None or
+                  1.0 keeps the full rank.
+    ``depth``   — keep every ``depth``-th period (``depth_mode='stride'``)
+                  or the first ⌈n/depth⌉ periods (``'prefix'``); None or
+                  1 keeps the full depth.
+    """
+    if depth_mode not in ("stride", "prefix"):
+        raise ValueError(f"depth_mode must be stride|prefix: {depth_mode}")
+    blocks = params["blocks"]
+    n_per = int(jax.tree.leaves(blocks)[0].shape[0])
+    if depth is None or depth <= 1:
+        keep = tuple(range(n_per))
+    elif depth_mode == "stride":
+        keep = tuple(range(0, n_per, int(depth)))
+    else:
+        keep = tuple(range(-(-n_per // int(depth))))
+    kp = np.asarray(keep, np.int32)
+
+    sites: List[SiteTrunc] = []
+    for path, site in _walk_sites(blocks):
+        d_in = int(site["a"].shape[-2])
+        rank = int(site["a"].shape[-1])
+        d_out = int(site["b"].shape[-1])
+        if alpha is None or alpha >= 1.0:
+            r_draft, idx = rank, tuple(range(rank))
+        else:
+            imp = site_importance(site, kp)
+            r_draft = pick_draft_ranks(
+                [{"layer": 0, "spectrum": imp}], alpha, max_rank=rank)[0]
+            order = np.argsort(-imp, kind="stable")[:r_draft]
+            idx = tuple(int(i) for i in np.sort(order))
+        sites.append(SiteTrunc(path, d_in, rank, r_draft, d_out, idx))
+    return DraftPlan(n_per, keep, tuple(sites), alpha=alpha, depth=depth,
+                     depth_mode=depth_mode)
+
+
+def draft_params(params: Dict, plan: DraftPlan) -> Dict:
+    """Derive the draft parameter tree as views into the full params.
+    Safe to call inside a jit trace: period selection and rank selection
+    are static gathers (the indices are plan constants), so XLA fuses
+    them into the consuming GEMVs — the draft stores no weights of its
+    own."""
+    if plan.is_identity:
+        return params
+    kp = np.asarray(plan.keep_periods, np.int32)
+    blocks = jax.tree.map(lambda w: w[kp], params["blocks"])
+    for s in plan.sites:
+        if s.draft_rank == s.rank:
+            continue
+        node = blocks
+        for k in s.path[:-1]:
+            node = node[k]
+        site = dict(node[s.path[-1]])
+        idx = np.asarray(s.idx, np.int32)
+        site["a"] = jnp.take(site["a"], idx, axis=-1)
+        site["b"] = jnp.take(site["b"], idx, axis=-2)
+        if site.get("bias_a") is not None:
+            site["bias_a"] = jnp.take(site["bias_a"], idx, axis=-1)
+        node[s.path[-1]] = site
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def draft_caches(abstract_full: Dict, plan: DraftPlan,
+                 make=jnp.zeros) -> Dict:
+    """Fresh draft KV buffers shaped like the engine's full caches with
+    the kept-period leading axis (the draft's K/V differ from the full
+    model's, so it cannot share cache storage — only weight storage)."""
+    n_keep = len(plan.keep_periods)
+    return jax.tree.map(
+        lambda l: make((n_keep,) + tuple(l.shape[1:]), l.dtype),
+        abstract_full)
+
+
+# ---- modeled HBM ---------------------------------------------------------
+def draft_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2) -> int:
+    """Streamed A/B factor bytes for ONE draft decode step (all kept
+    periods, truncated ranks) — the ``w`` term of the modeled
+    HBM-per-accepted-token story."""
+    per_period = sum(bytes_el * s.draft_rank * (s.d_in + s.d_out)
+                     for s in plan.sites)
+    return per_period * len(plan.keep_periods)
+
+
+def full_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2) -> int:
+    """Streamed A/B factor bytes for one full-model dispatch (weights are
+    read once per dispatch regardless of the resident token count — the
+    decode kernel's amortization, kernels/cola_ae/kernel.py)."""
+    per_period = sum(bytes_el * s.rank * (s.d_in + s.d_out)
+                     for s in plan.sites)
+    return per_period * plan.n_periods
+
+
+def spec_hbm_per_accepted_token(plan: DraftPlan, window: int,
+                                mean_accepted: float, *,
+                                bytes_el: int = 2) -> Dict[str, float]:
+    """Modeled weight-stream bytes per *accepted* token of one
+    speculative round against the plain-decode baseline.
+
+    One round = (window−1) draft steps (each streams the truncated
+    factors once) + one full-model verify dispatch (streams the full
+    factors once, amortized over all ``window`` resident positions),
+    yielding ``mean_accepted`` tokens.  Plain decode streams the full
+    factors once per token.
+    """
+    d = draft_weight_bytes(plan, bytes_el=bytes_el)
+    f = full_weight_bytes(plan, bytes_el=bytes_el)
+    spec = ((window - 1) * d + f) / max(mean_accepted, 1e-9)
+    return {"plain_bytes_per_token": float(f),
+            "spec_bytes_per_accepted_token": float(spec),
+            "draft_step_bytes": float(d),
+            "hbm_ratio_vs_plain": float(spec / f)}

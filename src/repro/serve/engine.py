@@ -20,10 +20,31 @@ loop survives only as ``generate_python_loop``, the parity/benchmark
 reference.  ``stats()['decode_dispatches']`` counts the jitted calls so
 tests can assert dispatches == ceil(tokens / k).  Chunks are
 **variable-k**: the scheduler passes each live slot's remaining budget
-and the chunk scans only ``min(decode_block, max(remaining))`` steps —
-finished slots no longer burn up to k decode steps per chunk, and
-``stats()['decode_steps']`` counts the steps actually scanned (equal-
-budget batches decode exactly ``max_new - 1`` steps, zero waste).
+and the chunk scans only ``min(decode_block, min(remaining over live
+slots))`` steps — the smallest live budget bounds the chunk, so a
+freshly admitted long request cannot inflate k past a nearly-done slot
+(its overshoot tokens would be dropped by the scheduler — pure waste),
+and ``stats()['decode_steps']`` counts the steps actually scanned
+(equal-budget batches decode exactly ``max_new - 1`` steps, zero waste).
+
+Speculative decoding (ROADMAP item 2): constructing the engine with a
+``draft_plan`` (serve/draft.py) replaces plain chunks with **spec
+rounds**: a truncated-rank/-depth self-draft — gather *views* into the
+same A/B factors, zero extra weight HBM — greedily scans
+``spec_window - 1`` draft tokens through the same decode GEMV path at
+reduced r, then the full model scores all ``spec_window`` positions in
+ONE dispatch (the decode kernel streams weights once per dispatch
+regardless of the resident token count, so verifying k positions costs
+barely more than decoding one).  The longest matching prefix of the
+draft is accepted plus the full model's bonus/correction token; rejected
+positions are rolled back by zeroing exactly the cache rows they wrote
+(page-map-aware — the sacrificial row 0 is never touched), leaving the
+paged KV byte-identical to a never-drafted run.  Every emitted token is
+the full model's greedy argmax, so greedy streams are bit-identical to
+plain decode *by construction*; acceptance only affects speed.  Spec
+mode is greedy-only (the scheduler rejects temperature>0 requests), and
+``stats()`` gains spec_drafted / spec_accepted / spec_rejected counters
+plus the realized acceptance rate.
 
 Paged KV (default for attn-only architectures): instead of dense
 ``(B, max_seq)`` slot caches, each cache leaf is a flat physical-row
@@ -71,7 +92,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.kernels.cola_ae import ops as cola_ops
 from repro.models.model import Model, build_model
+from repro.serve import draft as draft_mod
 from repro.serve.paging import PageAllocator
 from repro.serve.scheduler import Request, Response, SlotScheduler
 
@@ -116,6 +139,15 @@ class ServeEngine:
     # ---- tensor parallelism ----------------------------------------------
     mesh: Optional[object] = None     # jax Mesh; dispatches trace under it
     profile: str = "baseline"         # sharding profile when mesh is set
+    # ---- speculative decoding --------------------------------------------
+    # draft_plan (serve/draft.py) switches the engine into spec-decode
+    # mode: a truncated-rank/-depth self-draft (views into the same
+    # weights) greedily drafts spec_window-1 tokens per round and the full
+    # model verifies all spec_window positions in ONE decode dispatch —
+    # greedy streams stay bit-identical to plain decode by construction
+    # (every emitted token is the full model's greedy argmax).
+    draft_plan: Optional[object] = None
+    spec_window: int = 4              # verified positions per spec round
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -144,7 +176,29 @@ class ServeEngine:
             self.alloc = None
             self._caches = self.model.init_caches(self.max_batch,
                                                   self.max_seq)
-        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=4)
+        self._draft_caches = None
+        if self.draft_plan is not None:
+            if not self.supports_ragged:
+                raise ValueError(
+                    "speculative decoding needs an attn-only architecture "
+                    "(rejection rollback = positional KV truncation; "
+                    "recurrent states cannot roll back)")
+            if self.spec_window < 1:
+                raise ValueError("spec_window must be >= 1")
+            if self.max_batch * self.spec_window > cola_ops.DECODE_T_MAX:
+                raise ValueError(
+                    f"max_batch × spec_window = "
+                    f"{self.max_batch * self.spec_window} exceeds "
+                    f"DECODE_T_MAX={cola_ops.DECODE_T_MAX}: the verify "
+                    "window would fall off the decode-kernel plan "
+                    "(shrink spec_window or max_batch)")
+            # the draft's K/V differ from the full model's, so it owns its
+            # own cache pool (kept-period leading axis) — weights stay
+            # shared views, caches do not
+            self._draft_caches = draft_mod.draft_caches(
+                self._caches, self.draft_plan)
+        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(4, 11))
+        self._spec_fns: Dict[int, object] = {}
         # decode chunks jit per (static) step count k: variable-k chunks
         # stop early when every live slot's budget is spent.  At most
         # decode_block entries ever exist.
@@ -158,6 +212,10 @@ class ServeEngine:
         self._no_poison = jnp.zeros((self.max_batch,), bool)
         self._stats = self._fresh_stats()
         self.events: List[dict] = []
+
+    @property
+    def speculating(self) -> bool:
+        return self.draft_plan is not None
 
     def _init_paged_caches(self) -> Dict:
         """Flat physical-row pools: each dense leaf (periods, B, S, ...)
@@ -186,7 +244,15 @@ class ServeEngine:
                 "chunk_s": [], "chunk_k": [], "prefill_s": [],
                 "quarantines": 0, "requeues": 0, "timeouts": 0,
                 "rejected": 0, "stalls": 0, "nonfinite_chunks": 0,
-                "errors": 0}
+                "errors": 0,
+                # speculative decoding (0 unless a draft_plan is set):
+                # drafted = draft proposals, accepted = proposals the full
+                # model agreed with, rejected = drafted - accepted; the
+                # per-round bonus token is the full model's own and counts
+                # in decode_tokens only
+                "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+                "spec_rejected": 0, "spec_emitted": 0,
+                "spec_slot_rounds": 0}
 
     def count(self, name: str, n: int = 1) -> None:
         """Guardrail event counter (scheduler + watchdog feed this)."""
@@ -195,7 +261,7 @@ class ServeEngine:
     # ---- device functions -------------------------------------------------
     def _admit_impl(self, params, tokens, positions, admit_mask, caches,
                     temps, rng, idx, poison, page_map=None,
-                    fresh_mask=None):
+                    fresh_mask=None, dcaches=None):
         """Batched left-padded prefill over the full slot dim.  Rows not
         being admitted run an all-pad dummy prompt (their writes park in
         the sacrificial slot/row) and — dense mode — their cache rows are
@@ -204,15 +270,30 @@ class ServeEngine:
         physical rows (``fresh_mask`` over the pool's row axis) are zeroed
         before the prefill so a recycled page never leaks the previous
         tenant's K/V.  Also returns a per-slot finite-ness flag over the
-        sampled-from logits (``poison`` is the chaos-injection mask)."""
+        sampled-from logits (``poison`` is the chaos-injection mask).
+
+        Spec-decode mode additionally prefills the self-draft's KV
+        (``dcaches``) through the truncated parameter views — the draft
+        needs the prompt's K/V under its own projections before it can
+        scan; its logits are discarded (the first token is always the
+        full model's)."""
         if fresh_mask is not None:
             def wipe(c):
                 m = fresh_mask.reshape((1, -1) + (1,) * (c.ndim - 2))
                 return jnp.where(m, jnp.zeros_like(c), c)
             caches = jax.tree.map(wipe, caches)
+            if dcaches is not None:
+                dcaches = jax.tree.map(wipe, dcaches)
         logits, new_caches = self.model.prefill(
             params, {"tokens": tokens}, caches, positions=positions,
             page_map=page_map)
+        new_dcaches = dcaches
+        if dcaches is not None:
+            dp = draft_mod.draft_params(params, self.draft_plan)
+            with cola_ops.dispatch_scope("draft_"):
+                _, new_dcaches = self.model.prefill(
+                    dp, {"tokens": tokens}, dcaches, positions=positions,
+                    page_map=page_map)
         if page_map is None:
             def merge(n, o):
                 # cache leaves are period-stacked: (periods, B, ...) — the
@@ -221,12 +302,14 @@ class ServeEngine:
                 m = admit_mask.reshape((1, -1) + (1,) * (n.ndim - 2))
                 return jnp.where(m, n, o)
             caches = jax.tree.map(merge, new_caches, caches)
+            if dcaches is not None:
+                new_dcaches = jax.tree.map(merge, new_dcaches, dcaches)
         else:
             caches = new_caches
         last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
         ok = jnp.all(jnp.isfinite(last), axis=-1)
         tok = _sample_batch(last, temps, rng, idx)
-        return tok, caches, ok
+        return tok, caches, ok, new_dcaches
 
     def _chunk_impl(self, k, params, tok, pos, temps, caches, rng, base,
                     poison, page_map=None):
@@ -259,6 +342,110 @@ class ServeEngine:
             fn = jax.jit(functools.partial(self._chunk_impl, k),
                          donate_argnums=4)
             self._chunk_fns[k] = fn
+        return fn
+
+    # ---- speculative decoding --------------------------------------------
+    def _zero_stale(self, caches, wpos, stale, page_map):
+        """Rollback: zero exactly the cache rows written for rejected
+        window positions.  ``wpos`` (B, k) are the written logical
+        positions, ``stale`` (B, k) marks the rejected ones.  Paged mode
+        maps logical→physical through the page table and exempts the
+        sacrificial row 0 (it absorbs unowned-position writes in plain
+        decode too — zeroing it would *create* a byte difference); dense
+        mode parks non-stale entries on the sacrificial last column and
+        exempts it the same way.  After this, the cache bytes equal a
+        never-drafted run's: accepted rows were computed from identical
+        token history, rejected rows are zero exactly like the
+        admission-time fresh wipe left them."""
+        if page_map is not None:
+            bidx = jnp.arange(self.max_batch)[:, None]
+            rows = jnp.where(stale, page_map[bidx, wpos], 0)
+            n_rows = self.n_pages * self.page_size
+            keep = jnp.ones((n_rows,), bool).at[rows.reshape(-1)].set(False)
+            keep = keep.at[0].set(True)
+
+            def z(l):
+                m = keep.reshape((1, -1) + (1,) * (l.ndim - 2))
+                return jnp.where(m, l, jnp.zeros_like(l))
+            return jax.tree.map(z, caches)
+        bidx = jnp.arange(self.max_batch)[:, None]
+        cols = jnp.where(stale, wpos, self.max_seq - 1)
+        keep = jnp.ones((self.max_batch, self.max_seq), bool)
+        keep = keep.at[bidx, cols].set(False)
+        keep = keep.at[:, self.max_seq - 1].set(True)
+
+        def z(l):
+            m = keep.reshape((1,) + keep.shape + (1,) * (l.ndim - 3))
+            return jnp.where(m, l, jnp.zeros_like(l))
+        return jax.tree.map(z, caches)
+
+    def _spec_chunk_impl(self, k, params, tok, pos, caches, dcaches,
+                         poison, page_map=None):
+        """One speculative round in one dispatch (k = spec_window,
+        static):
+
+        1. the self-draft (truncated parameter views, derived in-trace —
+           zero persistent draft weights) greedily scans k-1 tokens
+           through the decode GEMV path, writing its own KV,
+        2. the full model scores all k window positions [t0, d1..d_{k-1}]
+           in a single decode_step — the resident-token-tile decode
+           kernel streams the weights once for the whole window,
+        3. greedy accept: the longest prefix of drafts matching the full
+           model's argmax targets is accepted, plus the bonus/correction
+           token targets[n_acc] — so every emitted token is the full
+           model's greedy choice and the stream is bit-identical to plain
+           decode by construction,
+        4. rollback: rows written for rejected positions are zeroed in
+           both cache sets (_zero_stale), page-map-aware.
+
+        Returns (targets (B,k), n_emit (B,), new token, new pos, caches,
+        dcaches, per-slot finite-ness over the verify logits)."""
+        B = self.max_batch
+        dp = draft_mod.draft_params(params, self.draft_plan)
+
+        with cola_ops.dispatch_scope("draft_"):
+            def dbody(carry, _):
+                t, p, dc = carry
+                lg, dc = self.model.decode_step(dp, t, dc, p[:, None],
+                                                page_map=page_map)
+                nt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                p = jnp.minimum(p + 1, self.max_seq - 1)
+                return (nt, p, dc), nt[:, 0]
+            (_, _, dcaches), drafts = jax.lax.scan(
+                dbody, (tok, pos, dcaches), jnp.arange(k - 1))
+        drafts = drafts.T                                   # (B, k-1)
+
+        window = jnp.concatenate([tok, drafts], axis=1)     # (B, k)
+        wpos = jnp.minimum(pos[:, None] + jnp.arange(k)[None, :],
+                           self.max_seq - 1)
+        with cola_ops.dispatch_scope("verify_"):
+            logits, caches = self.model.decode_step(
+                params, window, caches, wpos, page_map=page_map)
+        logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+        ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k)
+
+        match = jnp.concatenate(
+            [drafts == targets[:, :k - 1], jnp.zeros((B, 1), bool)], axis=1)
+        n_acc = jnp.argmin(match.astype(jnp.int32), axis=1)  # first False
+        n_emit = n_acc + 1                                   # ∈ [1, k]
+        new_tok = jnp.take_along_axis(targets, n_acc[:, None], axis=1)
+        new_pos = jnp.minimum(pos + n_emit, self.max_seq - 1)
+
+        offs = jnp.arange(k)[None, :]
+        stale = offs >= n_emit[:, None]                      # (B, k)
+        caches = self._zero_stale(caches, wpos, stale, page_map)
+        if k > 1:  # draft wrote rows at window offsets 0..k-2 only
+            dcaches = self._zero_stale(dcaches, wpos[:, :k - 1],
+                                       stale[:, :k - 1], page_map)
+        return targets, n_emit, new_tok, new_pos, caches, dcaches, ok
+
+    def _get_spec_fn(self, k: int):
+        fn = self._spec_fns.get(k)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._spec_chunk_impl, k),
+                         donate_argnums=(3, 4))
+            self._spec_fns[k] = fn
         return fn
 
     # ---- scheduler-facing API --------------------------------------------
@@ -309,10 +496,11 @@ class ServeEngine:
             page_map, fresh = self._page_map(), jnp.asarray(fresh_np)
         t0 = time.perf_counter()
         with self._ctx():
-            tok, self._caches, ok = self._admit_fn(
+            tok, self._caches, ok, self._draft_caches = self._admit_fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(admit_mask), self._caches, jnp.asarray(temps),
-                self._rng(rng), self._rng_step, poison, page_map, fresh)
+                self._rng(rng), self._rng_step, poison, page_map, fresh,
+                self._draft_caches)
         tok, ok = np.asarray(tok), np.asarray(ok)
         if delay_s:
             time.sleep(delay_s)  # simulated device stall (chaos)
@@ -339,14 +527,20 @@ class ServeEngine:
         somewhere in the chunk and its tokens are garbage).
 
         ``remaining``: per-slot tokens still owed (0 for free/finished
-        slots).  The chunk scans k = min(decode_block, max(remaining))
-        steps, so a chunk whose live slots all finish early stops with
-        them instead of burning the full block."""
+        slots).  The chunk scans ``k = min(decode_block, min(remaining
+        over live slots))`` steps: the *smallest* live budget bounds the
+        chunk, so one freshly admitted long request can no longer inflate
+        k past a nearly-done slot's budget (tokens decoded past a slot's
+        budget are dropped by the scheduler — pure waste, previously
+        visible as decode_steps > Σ per-slot tokens).  A slot that
+        finishes at the clamp boundary frees its slot for the next admit
+        round instead of idling through the tail of a long chunk."""
         k = self.decode_block
         if remaining is not None:
-            owed = int(np.max(remaining))
-            if owed > 0:
-                k = min(k, owed)
+            rem = np.asarray(remaining)
+            live = rem > 0
+            if live.any():
+                k = min(k, int(rem[live].min()))
         idx = self._stats["decode_dispatches"]
         poison, delay_s = self._fault("decode", idx)
         t0 = time.perf_counter()
@@ -371,6 +565,68 @@ class ServeEngine:
             self.count("nonfinite_chunks")
         # writable copies: the scheduler mutates these host mirrors in place
         return toks, np.array(tok), np.array(pos), ok
+
+    def spec_chunk(self, cur_tok: np.ndarray, pos: np.ndarray,
+                   temps: np.ndarray, rng,
+                   remaining: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+        """One speculative round (spec-decode counterpart of
+        ``decode_chunk``).  Returns (window tokens (B, k), per-slot valid
+        count n_emit (B,), next token, next pos, per-slot finite-ness
+        flag).  Only ``toks[i, :n_emit[i]]`` are real output — every one
+        of them is the full model's greedy argmax, so the consumed stream
+        is bit-identical to plain decode.
+
+        ``temps``/``rng`` are accepted for signature symmetry with
+        ``decode_chunk`` but unused: speculative mode is greedy-only (the
+        scheduler enforces temperature == 0).  The window is clamped by
+        the smallest live budget exactly like decode_chunk's k — drafting
+        past a slot's budget is pure waste."""
+        k = self.spec_window
+        if remaining is not None:
+            rem = np.asarray(remaining)
+            live = rem > 0
+            if live.any():
+                k = max(1, min(k, int(rem[live].min())))
+        else:
+            live = np.ones((self.max_batch,), bool)
+        idx = self._stats["decode_dispatches"]
+        poison, delay_s = self._fault("decode", idx)
+        t0 = time.perf_counter()
+        with self._ctx():
+            (toks, n_emit, tok, new_pos, self._caches, self._draft_caches,
+             ok) = self._get_spec_fn(k)(
+                self.params, jnp.asarray(cur_tok), jnp.asarray(pos),
+                self._caches, self._draft_caches, poison, self._page_map())
+        toks = np.asarray(toks)      # (B, k) — the one host sync per round
+        n_emit = np.asarray(n_emit)  # (B,)
+        ok = np.asarray(ok)
+        if delay_s:
+            time.sleep(delay_s)  # simulated device stall (chaos)
+        elapsed = time.perf_counter() - t0
+        n_live = int(live.sum())
+        emitted = int(n_emit[live].sum())
+        self._stats["decode_dispatches"] += 1
+        self._stats["decode_steps"] += k
+        self._stats["decode_tokens"] += emitted
+        self._stats["spec_rounds"] += 1
+        self._stats["spec_slot_rounds"] += n_live
+        drafted = n_live * (k - 1)
+        accepted = int((n_emit[live] - 1).sum())
+        self._stats["spec_drafted"] += drafted
+        self._stats["spec_accepted"] += accepted
+        self._stats["spec_rejected"] += drafted - accepted
+        self._stats["spec_emitted"] += emitted
+        self._stats["chunk_s"].append(elapsed)
+        # per-token normalization uses *accepted* tokens per live slot —
+        # the quantity the throughput table reports
+        self._stats["chunk_k"].append(emitted / max(n_live, 1))
+        self._watch_stall("decode", idx, elapsed)
+        if not ok.all():
+            self.count("nonfinite_chunks")
+        # writable copies: the scheduler mutates these host mirrors in place
+        return toks, n_emit, np.array(tok), np.array(new_pos), ok
 
     def cache_hbm_bytes(self, *, peak: bool = True) -> Dict[str, int]:
         """Measured KV-cache HBM footprint: bytes per logical row summed
@@ -413,6 +669,11 @@ class ServeEngine:
             s["pages_in_use"] = self.alloc.pages_in_use
             s["peak_pages"] = self.alloc.peak_pages
             s["page_size"] = self.page_size
+        if self.speculating:
+            s["spec_acceptance_rate"] = (
+                s["spec_accepted"] / max(s["spec_drafted"], 1))
+            s["spec_mean_emitted"] = (
+                s["spec_emitted"] / max(s["spec_slot_rounds"], 1))
         return s
 
     def reset_stats(self) -> None:
@@ -492,11 +753,23 @@ def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
                 max_batch: int = 8, max_seq: int = 256, seed: int = 0,
                 decode_block: int = 8, mesh: Optional[object] = None,
                 profile: str = "baseline", paged: Optional[bool] = None,
-                page_size: int = 16,
-                n_pages: Optional[int] = None) -> ServeEngine:
+                page_size: int = 16, n_pages: Optional[int] = None,
+                speculate: bool = False,
+                draft_alpha: Optional[float] = None,
+                draft_depth: Optional[int] = None,
+                draft_depth_mode: str = "stride",
+                spec_window: int = 4) -> ServeEngine:
     model = build_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))
+    plan = None
+    if speculate:
+        if draft_alpha is None and draft_depth is None:
+            draft_alpha = 0.95  # rank-energy default (paper Eq. (1) level)
+        plan = draft_mod.plan_draft(params, alpha=draft_alpha,
+                                    depth=draft_depth,
+                                    depth_mode=draft_depth_mode)
     return ServeEngine(model, params, max_batch, max_seq,
                        decode_block=decode_block, mesh=mesh, profile=profile,
-                       paged=paged, page_size=page_size, n_pages=n_pages)
+                       paged=paged, page_size=page_size, n_pages=n_pages,
+                       draft_plan=plan, spec_window=spec_window)

@@ -27,11 +27,21 @@ round:
 2. **Decode** — one jitted ``lax.scan`` dispatch advances every slot by
    up to ``decode_block`` tokens.  The scheduler passes each live slot's
    remaining budget and the engine scans only ``min(decode_block,
-   max(remaining))`` steps, so finished/free slots no longer burn a full
-   block of masked-out garbage when every live slot is nearly done.  The
-   host then scans the (B, k) chunk for per-request EOS / length
-   exhaustion, finalizes responses and recycles slots for the next admit
-   round.
+   min(remaining over live slots))`` steps: the *smallest* live budget
+   bounds the chunk, so a nearly-done slot never rides through (and a
+   fresh long request never inflates) a chunk whose tail it would drop
+   anyway.  The host then scans the (B, k) chunk for per-request EOS /
+   length exhaustion, finalizes responses and recycles slots for the next
+   admit round.
+
+   With a ``draft_plan`` set the decode dispatch is a **speculative
+   round** instead (``engine.spec_chunk``): the low-rank self-draft
+   proposes ``spec_window - 1`` tokens, the full model verifies the whole
+   window in one dispatch, and only the accepted prefix + bonus token
+   (``toks[i, :n_valid[i]]``) is consumed — every consumed token is the
+   full model's greedy argmax, so the output stream is bit-identical to
+   plain decode.  Speculative mode is greedy-only (``run`` rejects
+   ``temperature > 0`` requests up front).
 
 Paged engines add a third policy axis: page-pool admission.  Each
 request's full token span (``prompt + max_new``) is claimed at admit and
@@ -163,6 +173,11 @@ class SlotScheduler:
                     "ragged prompts need per-position attention masking; "
                     f"recurrent arch '{eng.model.cfg.name}' requires "
                     "equal-length prompts")
+        if eng.speculating and any(r.temperature > 0 for r in requests):
+            raise ValueError(
+                "speculative decoding is greedy-only: acceptance compares "
+                "draft tokens against the full model's argmax (sampled "
+                "verification needs rejection sampling — not implemented)")
 
         t0 = time.perf_counter()
         t_submit = {r.uid: t0 for r in requests}
@@ -316,8 +331,16 @@ class SlotScheduler:
                 if slots[i] is not None:
                     remaining[i] = (slots[i].req.max_new_tokens -
                                     len(slots[i].tokens))
-            toks, new_tok, new_pos, ok = eng.decode_chunk(
-                cur_tok, pos, temps, rng, remaining=remaining)
+            if eng.speculating:
+                # one spec round: only toks[i, :n_valid[i]] are real —
+                # the accepted draft prefix plus the bonus/correction
+                # token, each the full model's greedy argmax
+                toks, n_valid, new_tok, new_pos, ok = eng.spec_chunk(
+                    cur_tok, pos, temps, rng, remaining=remaining)
+            else:
+                toks, new_tok, new_pos, ok = eng.decode_chunk(
+                    cur_tok, pos, temps, rng, remaining=remaining)
+                n_valid = np.full((B,), toks.shape[1], np.int32)
             cur_tok, pos = new_tok, new_pos
             for i in range(B):
                 if slots[i] is None:
@@ -325,7 +348,7 @@ class SlotScheduler:
                 if not ok[i]:  # poisoned chunk: drop its tokens
                     quarantine(i)
                     continue
-                consume(i, toks[i])
+                consume(i, toks[i, :n_valid[i]])
 
         out = [done[r.uid] for r in requests]
         self.last_wall_s = time.perf_counter() - t0
