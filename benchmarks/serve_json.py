@@ -9,9 +9,11 @@
         --check BENCH_serve.json
 
 The file holds the serving rows of benchmarks/throughput_table.py —
-plain continuous-batching engine rows (serve/*) plus the speculative-
-decoding rows (serve_spec/*) — as ``{"schema_version", "mode", "rows":
-[{"name", "value", "note"}]}``.  Values are machine-relative and drift
+plain continuous-batching engine rows (serve/*), the speculative-
+decoding rows (serve_spec/*), and the quantized-weight-streaming rows
+(serve_quant/*: bf16/int8/int4 tok/s plain + speculative, modeled
+weight-stream bytes/token, top-1 agreement vs bf16) — as
+``{"schema_version", "mode", "rows": [{"name", "value", "note"}]}``.  Values are machine-relative and drift
 freely; the *row names* are the contract: a PR that renames, drops or
 adds a serving metric must regenerate the committed file in the same
 change, or the CI check fails with the name diff.
@@ -33,6 +35,7 @@ def collect(quick: bool):
 
     tt._serve_engine_bench(emit)
     tt._serve_spec_bench(emit, quick=quick)
+    tt._serve_quant_bench(emit, quick=quick)
     return {"schema_version": SCHEMA_VERSION,
             "mode": "quick" if quick else "full",
             "rows": rows}

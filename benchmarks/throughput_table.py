@@ -429,6 +429,95 @@ def _serve_spec_bench(emit, quick=False):
              f"(full={np.mean([r for r, _ in eng.draft_plan.describe()['site_ranks'].values()]):.0f})")
 
 
+def _serve_quant_bench(emit, quick=False):
+    """serve_quant/* rows — quantized weight streaming for decode
+    (kernels/cola_ae/quant.py + the quant decode kernels):
+
+    * measured decode tok/s for bf16/int8/int4 engines on the same
+      trained model, plain and speculative (rank-energy draft over the
+      quantized factors) — all three run the fused Pallas path (interpret
+      mode off-TPU) so CPU numbers compare like structure with like,
+    * modeled weight-stream HBM bytes per decode token at the llama-1b
+      o-proj-class site (``decode_hbm_traffic(weight_bits=...)`` minus
+      the activation bytes): the acceptance bar is ≥1.8x (int8) / ≥3.2x
+      (int4) vs bf16 — below the raw 2x/4x because the f32 per-row/
+      -column scales are charged honestly,
+    * measured top-1 greedy agreement vs the bf16 engine (per-step,
+      counted only while the context prefixes still match) — the quality
+      column that keeps the byte wins honest.
+
+    Same model recipe as _serve_spec_bench: the full run trains a
+    12-layer llama-60m smoke model on markov:0.95; ``quick`` keeps every
+    row name with an untrained 4-layer model and short budgets.
+    """
+    from repro.data.synthetic import MarkovZipf
+    from repro.kernels.cola_ae import kernel as cak
+    from repro.kernels.cola_ae import ops as cao
+    from repro.serve.engine import make_engine
+    from repro.train.loop import train
+
+    layers = 4 if quick else 12
+    steps = 0 if quick else 200
+    new_tokens = 8 if quick else 32
+    window = 3
+    mc = get_config("llama-60m").smoke().with_overrides(num_layers=layers)
+    params = None
+    if steps:
+        tc = TrainConfig(steps=steps, global_batch=8, seq_len=128,
+                         data="markov:0.95", log_every=100)
+        params = train(mc, tc)["state"].params
+    prompts = MarkovZipf(mc.vocab_size, seed=0,
+                         markov_p=0.95).batch(999, 8, 16)["tokens"]
+    prompts = np.asarray(prompts, np.int32)
+
+    def agreement(got, want):
+        # per-step top-1: count a position only while its row's prefixes
+        # still match (identical context -> argmax-vs-argmax comparison)
+        same = np.asarray(got) == np.asarray(want)
+        ctx = np.cumprod(np.concatenate(
+            [np.ones((same.shape[0], 1), bool), same[:, :-1]], axis=1),
+            axis=1).astype(bool)
+        return float(same[ctx].mean())
+
+    din, r, dout = 2048, 512, 2048  # llama-1b o-proj-class site
+    act = 2 * (din + dout)          # bf16 activation bytes, T=1
+    stream_bf16 = cak.decode_hbm_traffic(1, din, r, dout) - act
+    streams = {}
+    for wd in ("bf16", "int8", "int4"):
+        with cao.force_impl("pallas", True):
+            eng = make_engine(mc, params, max_batch=8, max_seq=64,
+                              decode_block=8, seed=0, weight_dtype=wd)
+            eng.generate(prompts, new_tokens)            # compile
+            toks, s = eng.generate(prompts, new_tokens)  # steady state
+            spec = make_engine(mc, params, max_batch=8, max_seq=64,
+                               decode_block=8, seed=0, weight_dtype=wd,
+                               speculate=True, draft_alpha=0.95,
+                               spec_window=window)
+            spec.generate(prompts, new_tokens)
+            _, ss = spec.generate(prompts, new_tokens)
+        streams[wd] = toks
+        emit(f"serve_quant/plain_tok_s_{wd}", s["decode_tok_per_s"],
+             f"B=8 new={new_tokens} k=8, llama-60m smoke {layers}L "
+             f"{'untrained' if quick else 'trained markov:0.95'}, "
+             f"fused Pallas path for all dtypes")
+        emit(f"serve_quant/spec_tok_s_{wd}", ss["decode_tok_per_s"],
+             f"w={window} alpha=0.95 "
+             f"acceptance={ss['spec_acceptance_rate']:.3f} "
+             f"(draft gathers q codes, shares scales)")
+        bits = None if wd == "bf16" else int(wd[3:])
+        stream = cak.decode_hbm_traffic(1, din, r, dout,
+                                        weight_bits=bits) - act
+        emit(f"serve_quant/weight_stream_B_per_tok_{wd}", stream,
+             f"modeled, d_in={din} r={r} d_out={dout} T=1 "
+             f"(q codes + f32 scales), "
+             f"ratio_vs_bf16={stream_bf16 / stream:.2f}x")
+        if wd != "bf16":
+            emit(f"serve_quant/top1_agreement_{wd}",
+                 agreement(streams[wd], streams["bf16"]),
+                 f"greedy argmax vs bf16 engine, same-context decode "
+                 f"steps, {'untrained' if quick else 'trained'} {layers}L")
+
+
 def run(emit):
     _cola_ae_bwd_bench(emit)
     _cola_ae_split_bench(emit)
@@ -437,6 +526,7 @@ def run(emit):
     _serve_engine_bench(emit)
     _serve_sharded_bench(emit)
     _serve_spec_bench(emit)
+    _serve_quant_bench(emit)
     variants = {
         "full_rank": dict(parameterization="dense", remat="none"),
         "vanilla_gcp": dict(parameterization="dense", remat="full"),

@@ -103,6 +103,13 @@ def cola_apply(params, x: jax.Array, *, sigma: bool = True,
                 bias_a=params.get("bias_a"), bias_b=params.get("bias_b"),
                 in_ax=weight_axes[0], out_ax=weight_axes[1], mode=mode)
         cola_ops.DISPATCH["apply_fused_fallback"] += 1
+    from repro.kernels.cola_ae import quant as _quant
+    if isinstance(params["a"], _quant.QuantFactor):
+        raise TypeError(
+            "quantized CoLA factors reached the unfused einsum path — "
+            "quantized weight streaming requires the fused kernels "
+            "(cola.use_fused_kernel=True and 3-D activations; "
+            "serve.make_engine(weight_dtype=...) sets this up)")
     a = params["a"].astype(x.dtype)
     b = params["b"].astype(x.dtype)
     z = jnp.einsum("...d,dr->...r", x, a)

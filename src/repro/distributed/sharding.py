@@ -409,6 +409,29 @@ def cola_ae_partition(env: MeshEnv, x_shape: Sequence[int],
     )
 
 
+def cola_ae_quant_specs(part: ColaAePartition):
+    """(sa_spec, sb_spec) for a quantized site's scale arrays under
+    ``part``.  Factors are quantized once *globally* and the arrays are
+    sharded: the per-row/per-column scale layouts commute with d_in /
+    d_out / rank sharding, so sharded quantized decode streams local
+    q-blocks with local scales and stays bit-identical to the
+    single-device quantized engine (per-shard re-quantization would not:
+    a rank-sharded A row's max|w| differs per shard).
+
+    The q arrays reuse ``part.a_spec`` / ``part.b_spec`` verbatim —
+    PartitionSpecs carry block semantics, so int4's halved packed axis
+    shards correctly as long as the *local* packed extent is whole
+    (ops validates local evenness).  Scales:
+
+    * ``sa`` (d_in, 1): one f32 per A input row — shards with d_in
+      (``a_spec``'s first entry), replicated over rank,
+    * ``sb`` (1, d_out): one f32 per B output column — shards with d_out
+      (``b_spec``'s second entry), replicated over rank.
+    """
+    return (PartitionSpec(part.a_spec[0], None),
+            PartitionSpec(None, part.b_spec[1]))
+
+
 def cola_ae_collective_bytes(env: MeshEnv, part: ColaAePartition, T: int,
                              d_in: int, r: int, d_out: int, *,
                              bytes_el: int = 2, mode: str = "train") -> int:

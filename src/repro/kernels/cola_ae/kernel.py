@@ -118,6 +118,33 @@ output-sharded (megatron) site can take the monolith once sharded.  Sites
 that need a mid-pipeline collective (row-parallel z_pre psum, column-
 parallel dzl psum) take the two-stage path regardless of size, which is
 what makes megatron row-parallel sites fully fused for the first time.
+
+Quantized weight streaming (decode only)
+----------------------------------------
+Decode reads every weight element exactly once per token, so shrinking
+the *streamed representation* shrinks the dominant byte term directly.
+``cola_ae_decode_quant`` and the split twins
+``cola_ae_decode_stage_a_quant`` / ``cola_ae_decode_stage_b_quant`` run
+the same phased grid as their bf16 counterparts but stream
+``quant.QuantFactor`` blocks: int8 codes (int4 nibble-packed pairwise
+along the non-rank axis) plus f32 per-row (A) / per-column (B) scales.
+Per grid step k the BlockSpecs deliver
+
+    A phase (k < n_i):  x (Tp, bi) · [q_a (bi/pk, r), s_a (bi, 1)]
+    B phase (k ≥ n_i):  [q_b (r, bo/pk), s_b (1, bo)] → out (Tp, bo)
+
+where pk = 2 for int4, 1 for int8.  The body dequantizes in-register —
+``q.astype(f32) * scale`` (plus a nibble unpack for int4), cast to the
+compute dtype — immediately before the MXU dot, so f32 accumulation and
+the grid/loop structure are untouched.  Block sizes bi/bo come from the
+SAME ``_fit_block`` calls as the bf16 kernels, keyed on the *compute*
+element size, so the quantized kernel is bit-identical to running the
+bf16 kernel on ``quant.dequantize(...)`` of the same factors (the
+scale layouts slice exactly along the weight-grid axes).  VMEM residency
+only shrinks: q-blocks are 1–2 bytes-per-4 cheaper than the bf16 blocks
+budgeted for, scales add 4·(bi + bo) bytes.  ``decode_hbm_traffic``'s
+``weight_bits`` term models the payoff: weight bytes drop to
+``ceil(w·bits/8)`` plus the honest 4-byte-per-row/column scale charge.
 """
 from __future__ import annotations
 
@@ -131,6 +158,7 @@ from jax.experimental.pallas import tpu as pltpu
 import numpy as np
 
 from repro.kernels.cola_ae import act as _act
+from repro.kernels.cola_ae import quant as _quant
 
 # Bytes the fwd/dx kernels may keep resident in VMEM (whole weights +
 # per-step tiles out of ~16 MB/core, leaving headroom for double buffering).
@@ -511,6 +539,239 @@ def cola_ae_decode_stage_b(z_pre: jax.Array, b: jax.Array,
     out = pl.pallas_call(
         functools.partial(_decode_stage_b_kernel, sigma=sigma,
                           has_bias=bias is not None),
+        grid=(d_out // bo,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Tp, bo), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:T] if pad else out
+
+
+# --------------------------------------------------------------------------
+# quantized decode: the same phased GEMV grids streaming int8/int4 q-blocks
+# + f32 scales, dequantized in-register just before the MXU dot.  Block
+# planning is keyed on the COMPUTE element size (not the packed size), so
+# grid/loop structure — and therefore f32 accumulation order — matches the
+# bf16 kernels exactly: quant kernel ≡ bf16 kernel on dequantize(factors).
+# --------------------------------------------------------------------------
+def _check_quant_factors(qa, qb):
+    if not isinstance(qa, _quant.QuantFactor) or qa.kind != "in":
+        raise ValueError(
+            f"qa must be a QuantFactor(kind='in'), got {qa!r}")
+    if not isinstance(qb, _quant.QuantFactor) or qb.kind != "out":
+        raise ValueError(
+            f"qb must be a QuantFactor(kind='out'), got {qb!r}")
+
+
+def _decode_quant_kernel(x_ref, qa_ref, sa_ref, qb_ref, sb_ref, *rest,
+                         n_i: int, sigma: str, has_ba: bool, has_bb: bool,
+                         bits_a: int, bits_b: int):
+    """``_decode_kernel`` with streamed q-blocks: qa_ref (bi/pk_a, r) int8
+    + sa_ref (bi, 1) f32 in the A phase, qb_ref (r, bo/pk_b) int8 +
+    sb_ref (1, bo) f32 in the B phase.  Dequantization (nibble unpack for
+    int4, widen, scale, cast to the compute dtype) happens in-register;
+    the dots and the f32 z scratch are identical to the bf16 body."""
+    refs = list(rest)
+    ba_ref = refs.pop(0) if has_ba else None
+    bb_ref = refs.pop(0) if has_bb else None
+    out_ref, z_ref = refs
+    k = pl.program_id(0)
+
+    @pl.when(k < n_i)
+    def _accum_z():
+        a_blk = _quant.dequant_block(
+            qa_ref[...], sa_ref[...], kind="in",
+            bits=bits_a).astype(x_ref.dtype)
+        acc = jnp.dot(x_ref[...], a_blk, preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _init():
+            z_ref[...] = acc
+
+        @pl.when(k > 0)
+        def _add():
+            z_ref[...] += acc
+
+    @pl.when(k >= n_i)
+    def _emit():
+        b_blk = _quant.dequant_block(
+            qb_ref[...], sb_ref[...], kind="out",
+            bits=bits_b).astype(x_ref.dtype)
+        zp = z_ref[...]
+        if has_ba:
+            zp = zp + ba_ref[...]
+        z = _act.apply_act(zp, sigma).astype(b_blk.dtype)
+        acc = jnp.dot(z, b_blk, preferred_element_type=jnp.float32)
+        if has_bb:
+            acc = acc + bb_ref[...]
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def cola_ae_decode_quant(x: jax.Array, qa, qb,
+                         bias_a: "jax.Array | None" = None,
+                         bias_b: "jax.Array | None" = None, *, sigma=True,
+                         out_dtype=None, interpret: bool = False
+                         ) -> jax.Array:
+    """``cola_ae_decode`` over quantized factors: qa/qb are
+    ``quant.QuantFactor``s (kind 'in'/'out'); their q-blocks + scales
+    stream through VMEM and dequantize in-register.  Same grid, same
+    block planning (keyed on the compute dtype), same f32 accumulation
+    — bit-identical to ``cola_ae_decode(x, dequantize(qa).astype(...),
+    dequantize(qb).astype(...), ...)``."""
+    _check_quant_factors(qa, qb)
+    sigma = _act.canon(sigma)
+    T, d_in = x.shape
+    r, d_out = qb.shape                       # logical (unpacked) shape
+    out_dtype = out_dtype or x.dtype
+    e = jnp.dtype(x.dtype).itemsize           # compute dtype, NOT packed
+    pad = (-T) % 8
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = x.shape[0]
+    bi = _fit_block(d_in, per_unit_bytes=e * (Tp + r),
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    bo = _fit_block(d_out, per_unit_bytes=e * (r + Tp) + 4,
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    n_i, n_o = d_in // bi, d_out // bo
+    pk_a = 2 if qa.bits == 4 else 1
+    pk_b = 2 if qb.bits == 4 else 1
+    in_specs = [
+        pl.BlockSpec((Tp, bi), lambda k: (0, jnp.minimum(k, n_i - 1))),
+        pl.BlockSpec((bi // pk_a, r), lambda k: (jnp.minimum(k, n_i - 1), 0)),
+        pl.BlockSpec((bi, 1), lambda k: (jnp.minimum(k, n_i - 1), 0)),
+        pl.BlockSpec((r, bo // pk_b), lambda k: (0, jnp.maximum(k - n_i, 0))),
+        pl.BlockSpec((1, bo), lambda k: (0, jnp.maximum(k - n_i, 0))),
+    ]
+    args = [x, qa.q, qa.scale, qb.q, qb.scale]
+    if bias_a is not None:
+        in_specs.append(pl.BlockSpec((1, r), lambda k: (0, 0)))
+        args.append(bias_a.astype(jnp.float32).reshape(1, r))
+    if bias_b is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bo), lambda k: (0, jnp.maximum(k - n_i, 0))))
+        args.append(bias_b.astype(jnp.float32).reshape(1, d_out))
+    out = pl.pallas_call(
+        functools.partial(_decode_quant_kernel, n_i=n_i, sigma=sigma,
+                          has_ba=bias_a is not None,
+                          has_bb=bias_b is not None,
+                          bits_a=qa.bits, bits_b=qb.bits),
+        grid=(n_i + n_o,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Tp, bo),
+                               lambda k: (0, jnp.maximum(k - n_i, 0))),
+        out_shape=jax.ShapeDtypeStruct((Tp, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((Tp, r), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out[:T] if pad else out
+
+
+def _decode_stage_a_quant_kernel(x_ref, qa_ref, sa_ref, zp_ref, *,
+                                 bits: int):
+    """``_decode_stage_a_kernel`` with a streamed q-block + per-row
+    scales dequantized in-register before the dot."""
+    k = pl.program_id(0)
+    a_blk = _quant.dequant_block(qa_ref[...], sa_ref[...], kind="in",
+                                 bits=bits).astype(x_ref.dtype)
+    acc = jnp.dot(x_ref[...], a_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        zp_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        zp_ref[...] += acc
+
+
+def cola_ae_decode_stage_a_quant(x: jax.Array, qa, *,
+                                 interpret: bool = False) -> jax.Array:
+    """``cola_ae_decode_stage_a`` over a quantized A factor — the
+    row-parallel TP stage, streaming local q-blocks with local scales."""
+    if not isinstance(qa, _quant.QuantFactor) or qa.kind != "in":
+        raise ValueError(
+            f"qa must be a QuantFactor(kind='in'), got {qa!r}")
+    T, d_in = x.shape
+    r = qa.shape[-1]
+    e = jnp.dtype(x.dtype).itemsize
+    pad = (-T) % 8
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = x.shape[0]
+    bi = _fit_block(d_in, per_unit_bytes=e * (Tp + r),
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    pk = 2 if qa.bits == 4 else 1
+    zp = pl.pallas_call(
+        functools.partial(_decode_stage_a_quant_kernel, bits=qa.bits),
+        grid=(d_in // bi,),
+        in_specs=[
+            pl.BlockSpec((Tp, bi), lambda k: (0, k)),
+            pl.BlockSpec((bi // pk, r), lambda k: (k, 0)),
+            pl.BlockSpec((bi, 1), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((Tp, r), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, r), jnp.float32),
+        interpret=interpret,
+    )(x, qa.q, qa.scale)
+    return zp[:T] if pad else zp
+
+
+def _decode_stage_b_quant_kernel(zp_ref, qb_ref, sb_ref, *rest, sigma: str,
+                                 has_bias: bool, bits: int):
+    """``_decode_stage_b_kernel`` with a streamed q-block + per-column
+    scales; the dequantized block is cast to the output dtype (the
+    compute dtype the caller threads through ``out_dtype``) so σ(z_pre)
+    is cast exactly as in the bf16 body."""
+    bias_ref, out_ref = rest if has_bias else (None, rest[0])
+    b_blk = _quant.dequant_block(qb_ref[...], sb_ref[...], kind="out",
+                                 bits=bits).astype(out_ref.dtype)
+    z = _act.apply_act(zp_ref[...], sigma).astype(b_blk.dtype)
+    acc = jnp.dot(z, b_blk, preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + bias_ref[...]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def cola_ae_decode_stage_b_quant(z_pre: jax.Array, qb,
+                                 bias: "jax.Array | None" = None, *,
+                                 sigma=True, out_dtype,
+                                 interpret: bool = False) -> jax.Array:
+    """``cola_ae_decode_stage_b`` over a quantized B factor.
+    ``out_dtype`` is required: it is the compute dtype (the bf16 twin
+    keys block planning and the σ(z_pre) cast on ``b.dtype``, which the
+    ops layer sets to the activation dtype — quantized factors carry no
+    such dtype, so the caller must thread it)."""
+    if not isinstance(qb, _quant.QuantFactor) or qb.kind != "out":
+        raise ValueError(
+            f"qb must be a QuantFactor(kind='out'), got {qb!r}")
+    sigma = _act.canon(sigma)
+    T, r = z_pre.shape
+    d_out = qb.shape[-1]
+    e = jnp.dtype(out_dtype).itemsize
+    pad = (-T) % 8
+    if pad:
+        z_pre = jnp.pad(z_pre, ((0, pad), (0, 0)))
+    Tp = z_pre.shape[0]
+    bo = _fit_block(d_out, per_unit_bytes=e * (r + Tp) + 4,
+                    fixed_bytes=4 * Tp * r, budget=FWD_VMEM_BUDGET,
+                    cap=1024)
+    pk = 2 if qb.bits == 4 else 1
+    in_specs = [
+        pl.BlockSpec((Tp, r), lambda k: (0, 0)),
+        pl.BlockSpec((r, bo // pk), lambda k: (0, k)),
+        pl.BlockSpec((1, bo), lambda k: (0, k)),
+    ]
+    args = (z_pre, qb.q, qb.scale)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bo), lambda k: (0, k)))
+        args += (bias.astype(jnp.float32).reshape(1, d_out),)
+    out = pl.pallas_call(
+        functools.partial(_decode_stage_b_quant_kernel, sigma=sigma,
+                          has_bias=bias is not None, bits=qb.bits),
         grid=(d_out // bo,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((Tp, bo), lambda k: (0, k)),
@@ -1089,7 +1350,8 @@ def hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
 def decode_hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
                        bytes_el: int = 2, fused: bool = True,
                        shards_in: int = 1, shards_rank: int = 1,
-                       shards_out: int = 1, split: bool = False) -> int:
+                       shards_out: int = 1, split: bool = False,
+                       weight_bits: "int | None" = None) -> int:
     """Modeled forward-only HBM bytes for one AE site at decode (T = decode
     batch, typically 1–64 — weight-traffic-bound, activations negligible).
 
@@ -1109,18 +1371,35 @@ def decode_hbm_traffic(T: int, d_in: int, r: int, d_out: int, *,
     launches with an f32 (T, r) z_pre round-trip at the psum seam (stage A
     writes it, stage B reads it back post-collective) — the collective's
     own wire bytes live in ``sharding.cola_ae_collective_bytes``.
+
+    ``weight_bits`` (None | 8 | 4) — the quantized streaming kernels
+    (``cola_ae_decode_quant`` and split twins): each *weight* term drops
+    from ``e·w`` to ``ceil(w·bits/8)`` (int4 nibble-packs two elements
+    per byte) **plus** the honest scale charge — 4 bytes per A row and
+    per B column, i.e. ``4·(di + do)`` per shard — which does not shrink
+    with bits or rank truncation.  Activation terms (x, out, the f32
+    z_pre seam) are charged at ``bytes_el`` unchanged: quantization
+    touches only what streams from the weight grid.
     """
     e = bytes_el
     di = d_in // shards_in
     rr = r // shards_rank
     do = d_out // shards_out
     w = di * rr + rr * do
+
+    def wbytes(n_el, n_scales):
+        """Bytes to stream n_el weight elements (+ their scale rows)."""
+        if weight_bits is None:
+            return e * n_el
+        return (n_el * weight_bits + 7) // 8 + 4 * n_scales
     if split:
-        stage_a = e * (T * di + di * rr) + 4 * T * rr    # x·A → z_pre seam
-        stage_b = 4 * T * rr + e * (rr * do + T * do)    # σ(z_pre)·B + bias
+        # x·A → z_pre seam; σ(z_pre)·B + bias.  A charges d_in-row
+        # scales, B charges d_out-column scales.
+        stage_a = e * T * di + wbytes(di * rr, di) + 4 * T * rr
+        stage_b = 4 * T * rr + wbytes(rr * do, do) + e * T * do
         return stage_a + stage_b
     if fused:
-        return e * (T * di + w + T * do)
-    return (e * (T * di + di * rr + T * rr)         # x·A → z
+        return e * (T * di + T * do) + wbytes(w, di + do)
+    return (e * (T * di + T * rr) + wbytes(di * rr, di)  # x·A → z
             + 2 * e * T * rr                        # σ: read z, write σ(z)
-            + e * (T * rr + rr * do + T * do))      # σ(z)·B → out
+            + e * (T * rr + T * do) + wbytes(rr * do, do))  # σ(z)·B → out

@@ -57,6 +57,27 @@ tokens after the optional sequence-entry all_gather):
       (B×k draft window)      as above)       /decode_split      engine caps
                                                                  B·k ≤ T_MAX)
 
+Quantized weight streaming adds a ``weight_dtype ∈ {bf16, int8, int4}``
+routing axis to ``_plan_infer`` (inference only — ``quantize_params``'d
+factors arrive as ``quant.QuantFactor``s).  The decode-grain plans swap
+in the quantized kernels; prefill-grain plans dequantize the whole
+factors once (XLA) and ride the bf16 kernels, renamed so the counters
+stay honest; a non-pallas impl with a quant request is an **error**, not
+a bf16/ref dispatch — there is no silent fallback:
+
+    weight_dtype   T ≤ DECODE_T_MAX        T above            impl != pallas
+    ─────────────  ──────────────────────  ─────────────────  ──────────────
+    bf16           decode[_split]          monolith/staged    ref
+    int8 / int4    decode[_split] over     dequant_monolith   ValueError
+                   q-blocks + scales       /dequant_staged
+
+Counters gain a ``quant_`` tag prefix *inside* the role scope —
+``quant_infer_decode``, ``quant_sharded_infer_decode_split``,
+``draft_quant_infer_decode``, ``verify_quant_infer_decode``, and
+``quant_infer_dequant_monolith`` for the prefill dequant path — so the
+serve tests can assert a quantized stream shows zero bare-bf16 decode
+counters, per role.
+
 The speculative-decoding engine (serve/engine.py) tags its dispatches by
 role through ``dispatch_scope``: the reduced-rank draft scan traces under
 ``dispatch_scope('draft_')`` and the one-dispatch k-position verify under
@@ -135,6 +156,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.cola_ae import act as _act
+from repro.kernels.cola_ae import quant as _quant
 
 # --------------------------------------------------------------------------
 # Dispatch accounting + test override
@@ -286,7 +308,8 @@ def _plan_bwd(impl: str, a, b, *, want_dbias: bool = False,
     return _plan(impl, a, b, needs_seam=want_dbias or mid_psum)
 
 
-def _plan_infer(impl: str, a, b, T: int, *, mid_psum: bool = False) -> str:
+def _plan_infer(impl: str, a, b, T: int, *, mid_psum: bool = False,
+                weight_dtype: str = "bf16") -> str:
     """Inference plan: like ``_plan_fwd`` but with the decode fast paths —
     T ≤ DECODE_T_MAX takes a GEMV-shaped launch, which streams weights so
     *any* site fits and fuses both biases.  A mid-pipeline collective
@@ -294,24 +317,46 @@ def _plan_infer(impl: str, a, b, T: int, *, mid_psum: bool = False) -> str:
     takes ``decode_split`` — the decode kernel cut at the z seam — and
     above the threshold the training stage pipeline.
     ``force_impl(plan='decode')`` pins the GEMV grain for tests (it
-    resolves to decode_split at collective sites)."""
+    resolves to decode_split at collective sites).
+
+    ``weight_dtype != 'bf16'`` (QuantFactor args; a/b are then compute-
+    dtype shape proxies): decode-grain plans are served by the quantized
+    streaming kernels unchanged-in-name; prefill-grain plans become
+    ``dequant_monolith``/``dequant_staged`` (whole-factor XLA dequant,
+    then the bf16 kernel); a non-pallas impl raises — quantized factors
+    have no ref math and silently streaming bf16 would falsify every
+    byte model built on the weight_bits term."""
+    if weight_dtype not in ("bf16", "int8", "int4"):
+        raise ValueError(f"weight_dtype must be bf16|int8|int4, "
+                         f"got {weight_dtype!r}")
     _, forced = _split_impl(impl)
     base = _canon_impl(impl)
     if base != "pallas":
+        if weight_dtype != "bf16":
+            raise ValueError(
+                f"no {base!r} implementation for weight_dtype="
+                f"{weight_dtype}: quantized weight streaming is "
+                f"Pallas-only and does not fall back (off-TPU, trace "
+                f"under force_impl('pallas', interpret=True))")
         return "ref"
     if mid_psum:
         if forced in ("monolith", "staged"):
-            return "staged"
-        if T <= DECODE_T_MAX or forced == "decode":
-            return "decode_split"
-        return "staged"
-    if forced == "decode":
-        return "decode"
-    if forced in ("monolith", "staged"):
-        return forced
-    if T <= DECODE_T_MAX:
-        return "decode"
-    return _plan(impl, a, b, needs_seam=False)
+            plan = "staged"
+        elif T <= DECODE_T_MAX or forced == "decode":
+            plan = "decode_split"
+        else:
+            plan = "staged"
+    elif forced == "decode":
+        plan = "decode"
+    elif forced in ("monolith", "staged"):
+        plan = forced
+    elif T <= DECODE_T_MAX:
+        plan = "decode"
+    else:
+        plan = _plan(impl, a, b, needs_seam=False)
+    if weight_dtype != "bf16" and plan in ("monolith", "staged"):
+        plan = f"dequant_{plan}"
+    return plan
 
 
 # --------------------------------------------------------------------------
@@ -373,15 +418,38 @@ def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
     here, and so does any prefill small enough to be GEMV-shaped (smoke
     configs).  Production-sized prefills (B×P above the threshold) ride
     the same monolith/staged kernels as training, minus the z_pre write.
+
+    Quantized factors (a/b are ``quant.QuantFactor``s): decode-grain
+    plans stream q-blocks + scales through the quantized kernel twins;
+    prefill-grain plans dequantize whole factors once and ride the bf16
+    kernels (``dequant_*`` counters).  The planner sees compute-dtype
+    shape proxies so block/plan choices match the bf16 engine exactly —
+    the quantized stream is bit-identical to an engine holding
+    ``dequantize(...)`` of the same factors.
     """
-    plan = _plan_infer(impl, a, b, x2.shape[0],
-                       mid_psum=psum_zpre is not None)
-    tag = _scoped(tag)  # draft_/verify_ speculative-decoding roles
+    is_quant = isinstance(a, _quant.QuantFactor)
+    if is_quant:
+        # plan against compute-dtype proxies: byte-based plan guards
+        # (weights_fit_vmem) must key on what the bf16 twin would do,
+        # not on the packed storage — identical routing, identical grids
+        plan = _plan_infer(
+            impl, jax.ShapeDtypeStruct(a.shape, x2.dtype),
+            jax.ShapeDtypeStruct(b.shape, x2.dtype), x2.shape[0],
+            mid_psum=psum_zpre is not None, weight_dtype=f"int{a.bits}")
+        tag = _scoped("quant_" + tag)
+    else:
+        plan = _plan_infer(impl, a, b, x2.shape[0],
+                           mid_psum=psum_zpre is not None)
+        tag = _scoped(tag)  # draft_/verify_ speculative-decoding roles
     DISPATCH[f"{tag}_{plan}"] += 1
     if plan != "ref":
         DISPATCH[f"{tag}_pallas"] += 1
     if plan == "decode":
         from repro.kernels.cola_ae import kernel as _k
+        if is_quant:
+            return _k.cola_ae_decode_quant(x2, a, b, bias_a, bias_b,
+                                           sigma=sigma, out_dtype=x2.dtype,
+                                           interpret=interpret)
         return _k.cola_ae_decode(x2, a, b, bias_a, bias_b, sigma=sigma,
                                  out_dtype=x2.dtype, interpret=interpret)
     if plan == "decode_split":
@@ -389,14 +457,31 @@ def _fwd_infer(x2, a, b, bias_a, bias_b, sigma, impl, interpret, *,
         # f32 z_pre, the row-parallel psum (+ bias_a) runs between, stage B
         # applies σ·B [+ bias_b] — same GEMV-shaped grids as `decode`
         from repro.kernels.cola_ae import kernel as _k
-        z_pre = _k.cola_ae_decode_stage_a(x2, a, interpret=interpret)
+        if is_quant:
+            z_pre = _k.cola_ae_decode_stage_a_quant(x2, a,
+                                                    interpret=interpret)
+        else:
+            z_pre = _k.cola_ae_decode_stage_a(x2, a, interpret=interpret)
         if psum_zpre is not None:
             z_pre = psum_zpre(z_pre)
         if bias_a is not None:
             z_pre = z_pre + bias_a.astype(jnp.float32)
+        if is_quant:
+            return _k.cola_ae_decode_stage_b_quant(z_pre, b, bias_b,
+                                                   sigma=sigma,
+                                                   out_dtype=x2.dtype,
+                                                   interpret=interpret)
         return _k.cola_ae_decode_stage_b(z_pre, b, bias_b, sigma=sigma,
                                          out_dtype=x2.dtype,
                                          interpret=interpret)
+    if plan in ("dequant_monolith", "dequant_staged"):
+        # prefill grain: weight traffic is amortized over T tokens, so
+        # dequantize the whole factors once (XLA) and ride the bf16
+        # kernels — the counters keep the dequant_ name so a quantized
+        # stream can still assert zero bare-bf16 dispatches
+        a = _quant.dequantize(a).astype(x2.dtype)
+        b = _quant.dequantize(b).astype(x2.dtype)
+        plan = plan[len("dequant_"):]
     if plan == "monolith":
         from repro.kernels.cola_ae import kernel as _k
         return _k.cola_ae_fwd(x2, a, b, bias_a, bias_b, sigma=sigma,
@@ -744,6 +829,71 @@ def _sh_infer(x, a, b, biases, sigma, impl, interpret, mesh, part):
                      out_specs=part.out_spec, check_rep=False)(*args)
 
 
+def _sh_infer_quant(x, qa, qb, biases, sigma, impl, interpret, mesh, part):
+    """``_sh_infer`` over quantized factors: the q and scale arrays enter
+    the shard_map as four leaves (q reuses the factor's weight spec, the
+    scales ride ``sharding.cola_ae_quant_specs``) and the body rebuilds
+    local ``QuantFactor``s, so each shard streams its local q-blocks with
+    its local scales.  Factors were quantized *globally* at engine build
+    — scale layouts commute with the sharding, so the sharded stream is
+    bit-identical to the single-device quantized engine."""
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed import sharding as _sh
+    has_bias = biases is not None
+
+    def _n(axes):
+        n = 1
+        for ax in axes:
+            n *= mesh.shape[ax]
+        return n
+
+    # int4 packs two elements per byte along the *sharded* weight dims
+    # (A: d_in, B: d_out) — a packed pair must not straddle a shard
+    # boundary, so the local extent must stay even
+    d_in = qa.shape[-2]
+    d_out = qb.shape[-1]
+    if qa.bits == 4 and (d_in // _n(part.in_axes)) % 2:
+        raise ValueError(
+            f"int4 A factor: local d_in {d_in}/{_n(part.in_axes)} shards "
+            f"is odd — nibble pairs would straddle shard boundaries")
+    if qb.bits == 4 and (d_out // _n(part.out_axes)) % 2:
+        raise ValueError(
+            f"int4 B factor: local d_out {d_out}/{_n(part.out_axes)} "
+            f"shards is odd — nibble pairs would straddle shard "
+            f"boundaries")
+    sa_spec, sb_spec = _sh.cola_ae_quant_specs(part)
+    kind_a, bits_a = qa.kind, qa.bits
+    kind_b, bits_b = qb.kind, qb.bits
+
+    def body(xl, qal, sal, qbl, sbl, *bias_l):
+        ba_l, bb_l = bias_l if has_bias else (None, None)
+        if part.seq_axes:
+            DISPATCH["sharded_entry_allgather"] += 1
+            xl = jax.lax.all_gather(xl, part.seq_axes, axis=1, tiled=True)
+        x2 = xl.reshape(-1, xl.shape[-1])
+        al = _quant.QuantFactor(qal, sal, kind=kind_a, bits=bits_a)
+        bl = _quant.QuantFactor(qbl, sbl, kind=kind_b, bits=bits_b)
+        psum_zpre = ((lambda zp: jax.lax.psum(zp, part.in_axes))
+                     if part.in_axes else None)
+        bb_kernel = None if part.rank_axes else bb_l
+        out = _fwd_infer(x2, al, bl, ba_l, bb_kernel, sigma, impl,
+                         interpret, psum_zpre=psum_zpre,
+                         tag="sharded_infer")
+        if part.rank_axes:
+            out = jax.lax.psum(out, part.rank_axes)
+            if bb_l is not None:
+                out = out + bb_l.astype(out.dtype)
+        return out.reshape(*xl.shape[:-1], out.shape[-1])
+
+    in_specs = (part.x_spec, part.a_spec, sa_spec, part.b_spec, sb_spec)
+    args = (x, qa.q, qa.scale, qb.q, qb.scale)
+    if has_bias:
+        in_specs += (part.bias_a_spec, part.bias_b_spec)
+        args += tuple(biases)
+    return shard_map(body, mesh, in_specs=in_specs,
+                     out_specs=part.out_spec, check_rep=False)(*args)
+
+
 def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
                     sigma=True, bias_a: Optional[jax.Array] = None,
                     bias_b: Optional[jax.Array] = None, env=None,
@@ -776,11 +926,19 @@ def cola_ae_sharded(x: jax.Array, a: jax.Array, b: jax.Array, *,
         raise ValueError(f"mode must be 'train'|'infer', got {mode!r}")
     act_mode = _act.canon(sigma)
     impl, interpret = _apply_force(impl, interpret)
+    is_quant = isinstance(a, _quant.QuantFactor)
+    if is_quant and mode != "infer":
+        raise ValueError("quantized factors are inference-only: training "
+                         "needs f32/bf16 weights (quantize_params is a "
+                         "serve-engine build step)")
     part = _sh.cola_ae_partition(env, x.shape, a.shape, b.shape,
                                  in_ax, out_ax)
     DISPATCH["sharded_call"] += 1
     if mode == "infer":
         biases = (bias_a, bias_b) if bias_a is not None else None
+        if is_quant:
+            return _sh_infer_quant(x, a, b, biases, act_mode, impl,
+                                   interpret, env.mesh, part)
         return _sh_infer(x, a.astype(x.dtype), b.astype(x.dtype), biases,
                          act_mode, impl, interpret, env.mesh, part)
     if bias_a is not None:
@@ -814,12 +972,21 @@ def cola_ae(x: jax.Array, a: jax.Array, b: jax.Array, *,
                          "(cola_defs always creates the pair)")
     if mode not in ("train", "infer"):
         raise ValueError(f"mode must be 'train'|'infer', got {mode!r}")
+    is_quant = isinstance(a, _quant.QuantFactor)
+    if is_quant and mode != "infer":
+        raise ValueError("quantized factors are inference-only: training "
+                         "needs f32/bf16 weights (quantize_params is a "
+                         "serve-engine build step)")
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
     if mode == "infer":
         DISPATCH["infer_call"] += 1
-        out = _fwd_infer(x2d, a.astype(x.dtype), b.astype(x.dtype),
-                         bias_a, bias_b, act_mode, impl, interpret)
+        if is_quant:
+            out = _fwd_infer(x2d, a, b, bias_a, bias_b, act_mode, impl,
+                             interpret)
+        else:
+            out = _fwd_infer(x2d, a.astype(x.dtype), b.astype(x.dtype),
+                             bias_a, bias_b, act_mode, impl, interpret)
     elif bias_a is not None:
         out = _cola_ae2d_bias(x2d, a.astype(x.dtype), b.astype(x.dtype),
                               bias_a, bias_b, act_mode, impl, interpret)

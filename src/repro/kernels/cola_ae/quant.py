@@ -1,0 +1,206 @@
+"""Symmetric per-axis quantization for streamed CoLA-AE weight factors.
+
+Decode is weight-traffic-bound: every A/B element is read from HBM
+exactly once per token (see ``decode_hbm_traffic``).  Quantizing the
+*streamed* representation to int8 or nibble-packed int4 shrinks that
+dominant byte term by ~2x / ~4x while the in-register math stays f32:
+the kernels stream q-blocks + their f32 scales through VMEM and
+dequantize just before the MXU dot, so accumulation precision is
+unchanged and the quantized kernel is bit-identical to running the
+bf16 kernel on ``dequantize(...)`` of the same factors.
+
+Layout contract (scale granularity follows the weight-grid streaming
+axis so every grid step can dequantize its block locally):
+
+* A factors (``kind='in'``, shape (..., d_in, r)) get one scale per
+  *input row*: ``scale`` has shape (..., d_in, 1).  int4 packs two
+  consecutive d_in rows per byte -> ``q`` is (..., d_in//2, r).
+* B factors (``kind='out'``, shape (..., r, d_out)) get one scale per
+  *output column*: ``scale`` has shape (..., 1, d_out).  int4 packs two
+  consecutive d_out columns per byte -> ``q`` is (..., r, d_out//2).
+
+Both layouts slice cleanly along the decode kernels' weight-grid axes
+(d_in blocks for A, d_out blocks for B) and commute with tensor-
+parallel sharding of d_in / d_out / rank, so factors are quantized
+once globally and the *arrays* are sharded — sharded decode streams
+local q-blocks with local scales and stays bit-identical to the
+single-device quantized engine.
+
+Symmetric quantization, zero-point-free:
+
+    scale = max(|w|, eps) / q_max          q_max = 127 (int8), 7 (int4)
+    q     = clip(round(w / scale), -q_max, q_max)
+    w~    = q * scale
+
+Nibble packing stores element ``2i`` in the low nibble and ``2i+1`` in
+the high nibble of byte ``i``; unpacking sign-extends via int8
+arithmetic shifts, so pack/unpack round-trips bit-exactly.
+
+This module deliberately imports nothing from kernel.py/ops.py (they
+import *it*) and nothing stateful: scale layout is a pure function of
+the weight values, independent of PYTHONHASHSEED or dict order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = {8: 127, 4: 7}
+_KINDS = ("in", "out")
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantFactor:
+    """A quantized weight factor: packed int8 codes + f32 scales.
+
+    Behaves enough like the array it replaces (``.shape``/``.ndim``
+    report the *logical* unpacked shape) that the draft planner and
+    sharding resolver work unchanged, while being a pytree whose
+    leaves (q, scale) shard / gather / donate like plain arrays.
+    """
+
+    __slots__ = ("q", "scale", "kind", "bits")
+
+    def __init__(self, q, scale, *, kind, bits):
+        if kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+        if bits not in _QMAX:
+            raise ValueError(f"bits must be one of {tuple(_QMAX)}, got {bits!r}")
+        self.q = q
+        self.scale = scale
+        self.kind = kind
+        self.bits = bits
+
+    @property
+    def shape(self):
+        # logical (unpacked) shape: the packed axis is the non-rank
+        # axis, whose true extent the scale layout always carries
+        if self.kind == "in":      # q (..., d_in//pk, r), scale (..., d_in, 1)
+            return tuple(self.scale.shape[:-1]) + (self.q.shape[-1],)
+        # 'out':                   q (..., r, d_out//pk), scale (..., 1, d_out)
+        return tuple(self.q.shape[:-1]) + (self.scale.shape[-1],)
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.kind, self.bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, kind=aux[0], bits=aux[1])
+
+    def __repr__(self):
+        return (f"QuantFactor(shape={self.shape}, kind={self.kind!r}, "
+                f"bits={self.bits})")
+
+
+def quantize_array(x, *, bits: int = 8, axis=None):
+    """Symmetric quantization of ``x`` to ``bits`` with scales reduced
+    over ``axis`` (None -> one scalar scale, the legacy
+    optim/compression behaviour).  Returns ``(q, scale)`` with q int8
+    (int4 values live in int8 storage until packed) and scale f32
+    broadcastable against x."""
+    qmax = _QMAX[bits]
+    x32 = jnp.asarray(x, jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x32))
+    else:
+        amax = jnp.max(jnp.abs(x32), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def pack_nibbles(q, axis: int = -1):
+    """Pack int4 values (int8 storage, range [-7, 7]) pairwise along
+    ``axis``: byte i holds element 2i in the low nibble and 2i+1 in
+    the high nibble.  The packed axis must be even."""
+    axis = axis % q.ndim
+    if q.shape[axis] % 2:
+        raise ValueError(
+            f"int4 packing needs an even extent along axis {axis}, "
+            f"got shape {q.shape}")
+    lo = jax.lax.slice_in_dim(q, 0, None, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(q, 1, None, stride=2, axis=axis)
+    return jnp.bitwise_or(jnp.bitwise_and(lo, jnp.int8(0x0F)),
+                          jnp.left_shift(hi, jnp.int8(4)))
+
+
+def unpack_nibbles(packed, axis: int = -1):
+    """Inverse of :func:`pack_nibbles`: sign-extends both nibbles via
+    int8 arithmetic shifts and re-interleaves along ``axis``."""
+    axis = axis % packed.ndim
+    lo = jnp.right_shift(jnp.left_shift(packed, jnp.int8(4)), jnp.int8(4))
+    hi = jnp.right_shift(packed, jnp.int8(4))
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    shape = packed.shape[:axis] + (2 * packed.shape[axis],) + packed.shape[axis + 1:]
+    return out.reshape(shape)
+
+
+def quantize_factor(w, kind: str, bits: int = 8) -> QuantFactor:
+    """Quantize one CoLA-AE factor.  ``kind='in'`` for A (..., d_in, r)
+    with per-d_in-row scales; ``kind='out'`` for B (..., r, d_out) with
+    per-d_out-column scales.  int4 packs along the non-rank axis."""
+    if kind not in _KINDS:
+        raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+    reduce_axis = -1 if kind == "in" else -2
+    pack_axis = -2 if kind == "in" else -1
+    q, scale = quantize_array(w, bits=bits, axis=reduce_axis)
+    if bits == 4:
+        q = pack_nibbles(q, axis=pack_axis)
+    return QuantFactor(q, jnp.asarray(scale, jnp.float32), kind=kind, bits=bits)
+
+
+def dequant_block(q_blk, s_blk, *, kind: str, bits: int):
+    """Reference dequantization of one streamed block: unpack (int4),
+    widen to f32, scale.  This exact expression runs inside the Pallas
+    kernel bodies, so whole-tensor XLA dequantization (this function on
+    the full q/scale arrays) is elementwise bit-identical to what the
+    quantized kernels compute in-register."""
+    if bits == 4:
+        q_blk = unpack_nibbles(q_blk, axis=-2 if kind == "in" else -1)
+    return q_blk.astype(jnp.float32) * s_blk
+
+
+def dequantize(qf: QuantFactor):
+    """Whole-factor f32 reconstruction (the XLA reference)."""
+    return dequant_block(qf.q, qf.scale, kind=qf.kind, bits=qf.bits)
+
+
+def _is_cola_site(node) -> bool:
+    return isinstance(node, dict) and "a" in node and "b" in node
+
+
+def quantize_params(params, bits: int = 8):
+    """Quantize every CoLA-AE site (dicts carrying both "a" and "b")
+    under ``params['blocks']``, leaving biases, embeddings, norms and
+    the lm head untouched.  Returns a new tree; raises if the model has
+    no factorized sites (dense parameterizations can't stream
+    q-blocks)."""
+    n_sites = 0
+
+    def walk(node):
+        nonlocal n_sites
+        if _is_cola_site(node):
+            n_sites += 1
+            out = dict(node)
+            out["a"] = quantize_factor(node["a"], "in", bits)
+            out["b"] = quantize_factor(node["b"], "out", bits)
+            return out
+        if isinstance(node, dict):
+            return {k: walk(node[k]) for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    out = dict(params)
+    out["blocks"] = walk(params["blocks"])
+    if n_sites == 0:
+        raise ValueError(
+            "quantize_params found no CoLA-AE factor sites under "
+            "params['blocks'] — weight-dtype quantization needs the "
+            "factorized (cola) parameterization")
+    return out

@@ -24,6 +24,14 @@ period truncation — views into the same weights, zero extra weight HBM)
 proposes ``--spec-window - 1`` tokens, the full model verifies the whole
 window in one dispatch, and the greedy output stream stays bit-identical
 to a ``--no-speculate`` run.
+
+``--weight-dtype int8|int4`` quantizes the CoLA A/B factors once at
+engine build and streams packed q-blocks + f32 scales through the decode
+kernels (dequantized in-VMEM, f32 accumulation unchanged) — roughly 2×/4×
+fewer weight-stream bytes per token.  Composes with ``--profile`` (the
+q/scale arrays are sharded, scales commute) and ``--speculate`` (the
+draft gathers q codes, sharing scales).  A ``quantized:`` line reports
+the quant decode counters so CI can assert no silent bf16 fallback.
 """
 from __future__ import annotations
 
@@ -91,6 +99,12 @@ def main() -> None:
     ap.add_argument("--spec-window", type=int, default=4,
                     help="verified positions per speculative round "
                          "(draft proposes spec-window - 1)")
+    ap.add_argument("--weight-dtype", default="bf16",
+                    choices=("bf16", "int8", "int4"),
+                    help="quantize the CoLA A/B factors at engine build "
+                         "and stream int8 / nibble-packed int4 q-blocks "
+                         "+ f32 scales through the decode kernels "
+                         "(dequantized in-VMEM; KV caches unaffected)")
     args = ap.parse_args()
 
     import dataclasses
@@ -128,7 +142,8 @@ def main() -> None:
                       draft_alpha=args.draft_alpha,
                       draft_depth=args.draft_depth,
                       draft_depth_mode=args.draft_depth_mode,
-                      spec_window=args.spec_window)
+                      spec_window=args.spec_window,
+                      weight_dtype=args.weight_dtype)
     eng.max_queue = args.max_queue
     if eng.speculating:
         d = eng.draft_plan.describe()
@@ -159,9 +174,11 @@ def main() -> None:
             max_new_tokens=args.new_tokens, deadline_s=0.0))
 
     force = contextlib.nullcontext()
-    if mesh is not None and jax.default_backend() != "tpu":
-        # the point of --profile is the sharded kernel path; off-TPU that
-        # means interpret-mode Pallas (same as the parity tests)
+    if (mesh is not None or args.weight_dtype != "bf16") \
+            and jax.default_backend() != "tpu":
+        # the point of --profile is the sharded kernel path, and quantized
+        # streaming is Pallas-only (no ref math, no silent fallback);
+        # off-TPU both mean interpret-mode Pallas (as in the parity tests)
         from repro.kernels.cola_ae import ops as _ops
         force = _ops.force_impl("pallas", True)
 
@@ -199,6 +216,17 @@ def main() -> None:
               f"rejected={stats['spec_rejected']} "
               f"acceptance={stats['spec_acceptance_rate']:.3f} "
               f"mean_emitted={stats['spec_mean_emitted']:.2f}/round")
+    if args.weight_dtype != "bf16":
+        from repro.kernels.cola_ae import ops as _ops
+        n_q = sum(v for k, v in _ops.DISPATCH.items()
+                  if "quant_" in k and (k.endswith("_decode")
+                                        or k.endswith("_decode_split")))
+        n_bare = sum(
+            v for k, v in _ops.DISPATCH.items()
+            if "quant" not in k and (k.endswith("infer_decode")
+                                     or k.endswith("infer_decode_split")))
+        print(f"quantized: weight_dtype={args.weight_dtype} "
+              f"quant_infer_decode={n_q} bare_bf16_decode={n_bare}")
     print(f"guardrails: timeouts={stats['timeouts']} "
           f"rejected={stats['rejected']} quarantines={stats['quarantines']} "
           f"stalls={stats['stalls']}")

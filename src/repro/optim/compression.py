@@ -11,6 +11,13 @@ Two layers:
 
 Error feedback (Seide et al. 2014): e_{t} = g_t + e_{t-1} - Q(g_t + e_{t-1})
 keeps the compressed SGD unbiased in the long run.
+
+The quantization numerics live in ``kernels/cola_ae/quant.py`` (one
+symmetric-quant implementation shared with the quantized decode weight
+streaming).  ``quantize`` here keeps its historic per-tensor scalar-scale
+int8 default but now also exposes the shared per-axis scales (``axis=``)
+and int4 (``bits=4``, optionally nibble-packed via ``quant.pack_nibbles``)
+for callers that want finer grain.
 """
 from __future__ import annotations
 
@@ -21,13 +28,19 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.kernels.cola_ae import quant as _quant
 
-def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8: returns (q, scale)."""
-    x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+
+def quantize(x: jax.Array, *, bits: int = 8,
+             axis=None) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantization: returns (q, scale).
+
+    Defaults (``bits=8, axis=None``) reproduce the original per-tensor
+    scalar-scale int8 behaviour exactly; ``axis`` selects per-axis scale
+    blocks (keepdims) and ``bits=4`` narrows to the int4 grid.  Delegates
+    to :func:`repro.kernels.cola_ae.quant.quantize_array`.
+    """
+    return _quant.quantize_array(x, bits=bits, axis=axis)
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:

@@ -93,6 +93,31 @@ def _is_cola_site(tree) -> bool:
     return isinstance(tree, dict) and "a" in tree and "b" in tree
 
 
+def _host_factor(w) -> np.ndarray:
+    """Concrete f32 host copy of a factor — dequantizes QuantFactors so
+    the importance spectra (and therefore the plan) computed on a
+    quantized engine match an engine holding ``dequantize(params)``."""
+    from repro.kernels.cola_ae import quant as _quant
+    if isinstance(w, _quant.QuantFactor):
+        return np.asarray(_quant.dequantize(w), np.float32)
+    return np.asarray(w, np.float32)
+
+
+def _take_rank(w, idx: np.ndarray, axis: int):
+    """Rank-axis gather view for dense factors AND QuantFactors.  The
+    rank axis never carries int4 packing (packing is along d_in/d_out)
+    and the scale layouts are rank-independent, so a quantized draft
+    gathers the q codes and *shares the scale arrays untouched* — still
+    zero persistent draft weight HBM, and
+    ``dequantize(take(q)) == take(dequantize(q))`` keeps the truncated
+    quant draft bit-identical to truncating the dequantized factors."""
+    from repro.kernels.cola_ae import quant as _quant
+    if isinstance(w, _quant.QuantFactor):
+        return _quant.QuantFactor(jnp.take(w.q, idx, axis=axis),
+                                  w.scale, kind=w.kind, bits=w.bits)
+    return jnp.take(w, idx, axis=axis)
+
+
 def _walk_sites(tree, path=()):
     """Yield (path, site_dict) for every CoLA site in a block tree."""
     if _is_cola_site(tree):
@@ -107,8 +132,8 @@ def site_importance(site: Dict, keep_periods: np.ndarray) -> np.ndarray:
     """Per-direction importance ``s_j = ‖A[:, j]‖·‖B[j, :]‖`` of a
     period-stacked CoLA site, RMS-aggregated over the kept periods.
     Host-side numpy on concrete params (plan time, not trace time)."""
-    a = np.asarray(site["a"], np.float32)[keep_periods]  # (P', ..., d_in, r)
-    b = np.asarray(site["b"], np.float32)[keep_periods]  # (P', ..., r, d_out)
+    a = _host_factor(site["a"])[keep_periods]            # (P', ..., d_in, r)
+    b = _host_factor(site["b"])[keep_periods]            # (P', ..., r, d_out)
     na = np.sqrt(np.sum(a * a, axis=-2))                 # (P', ..., r)
     nb = np.sqrt(np.sum(b * b, axis=-1))                 # (P', ..., r)
     s = na * nb
@@ -176,8 +201,8 @@ def draft_params(params: Dict, plan: DraftPlan) -> Dict:
             node = node[k]
         site = dict(node[s.path[-1]])
         idx = np.asarray(s.idx, np.int32)
-        site["a"] = jnp.take(site["a"], idx, axis=-1)
-        site["b"] = jnp.take(site["b"], idx, axis=-2)
+        site["a"] = _take_rank(site["a"], idx, axis=-1)
+        site["b"] = _take_rank(site["b"], idx, axis=-2)
         if site.get("bias_a") is not None:
             site["bias_a"] = jnp.take(site["bias_a"], idx, axis=-1)
         node[s.path[-1]] = site
@@ -198,27 +223,48 @@ def draft_caches(abstract_full: Dict, plan: DraftPlan,
 
 
 # ---- modeled HBM ---------------------------------------------------------
-def draft_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2) -> int:
+def _site_stream_bytes(rank: int, d_in: int, d_out: int, bytes_el: int,
+                       weight_bits: Optional[int]) -> int:
+    """Streamed bytes for one site's factor pair at the given rank.
+    ``weight_bits`` (8|4) models the quantized stream: packed codes at
+    ``ceil(n·bits/8)`` plus 4 f32 scale bytes per A row and per B column
+    — the scale term does NOT shrink under rank truncation (a quantized
+    draft gathers q codes but streams the full per-row/column scale
+    vectors), so drafts over quantized factors are charged honestly."""
+    if weight_bits is None:
+        return bytes_el * rank * (d_in + d_out)
+    return ((rank * (d_in + d_out) * weight_bits + 7) // 8
+            + 4 * (d_in + d_out))
+
+
+def draft_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2,
+                       weight_bits: Optional[int] = None) -> int:
     """Streamed A/B factor bytes for ONE draft decode step (all kept
     periods, truncated ranks) — the ``w`` term of the modeled
     HBM-per-accepted-token story."""
-    per_period = sum(bytes_el * s.draft_rank * (s.d_in + s.d_out)
-                     for s in plan.sites)
+    per_period = sum(
+        _site_stream_bytes(s.draft_rank, s.d_in, s.d_out, bytes_el,
+                           weight_bits)
+        for s in plan.sites)
     return per_period * len(plan.keep_periods)
 
 
-def full_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2) -> int:
+def full_weight_bytes(plan: DraftPlan, *, bytes_el: int = 2,
+                      weight_bits: Optional[int] = None) -> int:
     """Streamed A/B factor bytes for one full-model dispatch (weights are
     read once per dispatch regardless of the resident token count — the
     decode kernel's amortization, kernels/cola_ae/kernel.py)."""
-    per_period = sum(bytes_el * s.rank * (s.d_in + s.d_out)
-                     for s in plan.sites)
+    per_period = sum(
+        _site_stream_bytes(s.rank, s.d_in, s.d_out, bytes_el, weight_bits)
+        for s in plan.sites)
     return per_period * plan.n_periods
 
 
 def spec_hbm_per_accepted_token(plan: DraftPlan, window: int,
                                 mean_accepted: float, *,
-                                bytes_el: int = 2) -> Dict[str, float]:
+                                bytes_el: int = 2,
+                                weight_bits: Optional[int] = None
+                                ) -> Dict[str, float]:
     """Modeled weight-stream bytes per *accepted* token of one
     speculative round against the plain-decode baseline.
 
@@ -226,10 +272,12 @@ def spec_hbm_per_accepted_token(plan: DraftPlan, window: int,
     factors once) + one full-model verify dispatch (streams the full
     factors once, amortized over all ``window`` resident positions),
     yielding ``mean_accepted`` tokens.  Plain decode streams the full
-    factors once per token.
+    factors once per token.  ``weight_bits`` composes the quantized
+    stream into both sides (scale bytes charged per step, unshrunk by
+    rank truncation).
     """
-    d = draft_weight_bytes(plan, bytes_el=bytes_el)
-    f = full_weight_bytes(plan, bytes_el=bytes_el)
+    d = draft_weight_bytes(plan, bytes_el=bytes_el, weight_bits=weight_bits)
+    f = full_weight_bytes(plan, bytes_el=bytes_el, weight_bits=weight_bits)
     spec = ((window - 1) * d + f) / max(mean_accepted, 1e-9)
     return {"plain_bytes_per_token": float(f),
             "spec_bytes_per_accepted_token": float(spec),

@@ -148,6 +148,13 @@ class ServeEngine:
     # (every emitted token is the full model's greedy argmax).
     draft_plan: Optional[object] = None
     spec_window: int = 4              # verified positions per spec round
+    # ---- quantized weight streaming --------------------------------------
+    # 'bf16' | 'int8' | 'int4' — informational tag set by make_engine after
+    # it ran quantize_params: the CoLA A/B factors in ``params`` are then
+    # QuantFactors and every decode dispatch streams q-blocks + scales
+    # through the quantized kernel twins (quant_* DISPATCH counters; no
+    # silent bf16 fallback).  KV caches are unaffected.
+    weight_dtype: str = "bf16"
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -633,7 +640,12 @@ class ServeEngine:
         over every (period-stacked) leaf, × rows held.  ``paged`` counts
         the rows actually backed by claimed pages (+ the sacrificial
         page); ``dense`` is the B × max_seq layout the paged pool
-        replaces.  Benchmarks emit both (serve_sharded/* rows)."""
+        replaces.  Benchmarks emit both (serve_sharded/* rows).
+
+        Weight quantization (``weight_dtype``) does NOT change these
+        numbers: it shrinks the *streamed factor* bytes only
+        (``kernel.decode_hbm_traffic(weight_bits=...)``) — KV rows keep
+        the model's activation dtype."""
         ab = self.model.abstract_caches(1, 1)
         row_bytes = sum(
             l.shape[0] * int(np.prod(l.shape[3:], dtype=np.int64))
@@ -758,18 +770,42 @@ def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
                 draft_alpha: Optional[float] = None,
                 draft_depth: Optional[int] = None,
                 draft_depth_mode: str = "stride",
-                spec_window: int = 4) -> ServeEngine:
+                spec_window: int = 4,
+                weight_dtype: str = "bf16") -> ServeEngine:
+    if weight_dtype not in ("bf16", "int8", "int4"):
+        raise ValueError(f"weight_dtype must be bf16|int8|int4, "
+                         f"got {weight_dtype!r}")
+    if weight_dtype != "bf16":
+        # quantized factors only exist on the fused kernel path (the
+        # unfused einsum fallback cannot consume QuantFactors) — force it
+        # on before the model facade is built
+        cfg = cfg.with_overrides(
+            cola=dataclasses.replace(cfg.cola, use_fused_kernel=True))
     model = build_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))
+    if weight_dtype != "bf16":
+        # quantize ONCE, globally, at engine build: under TP the q/scale
+        # *arrays* are then sharded (scale layouts commute with the
+        # sharding), keeping sharded streams bit-identical to the
+        # single-device quantized engine — per-shard re-quantization
+        # would pick different scales at rank-sharded sites
+        from repro.kernels.cola_ae import quant as _quant
+        params = _quant.quantize_params(params,
+                                        bits=int(weight_dtype[3:]))
     plan = None
     if speculate:
         if draft_alpha is None and draft_depth is None:
             draft_alpha = 0.95  # rank-energy default (paper Eq. (1) level)
+        # planned on the (possibly quantized) factors the engine will
+        # serve: the rank ordering is computed from the dequantized
+        # values, so a reference engine built on dequantize(params)
+        # resolves the identical plan
         plan = draft_mod.plan_draft(params, alpha=draft_alpha,
                                     depth=draft_depth,
                                     depth_mode=draft_depth_mode)
     return ServeEngine(model, params, max_batch, max_seq,
                        decode_block=decode_block, mesh=mesh, profile=profile,
                        paged=paged, page_size=page_size, n_pages=n_pages,
-                       draft_plan=plan, spec_window=spec_window)
+                       draft_plan=plan, spec_window=spec_window,
+                       weight_dtype=weight_dtype)
