@@ -9,8 +9,11 @@
         --check BENCH_serve.json
 
 The file holds the serving rows of benchmarks/throughput_table.py —
-plain continuous-batching engine rows (serve/*), the speculative-
-decoding rows (serve_spec/*), and the quantized-weight-streaming rows
+plain continuous-batching engine rows (serve/*), the chunked-prefill
+latency rows (serve_overlap/*: TTFT p95 + inter-token-latency p95 with
+overlap on vs off under a churny staggered-arrival trace, modeled
+per-chunk weight re-stream overhead), the speculative-decoding rows
+(serve_spec/*), and the quantized-weight-streaming rows
 (serve_quant/*: bf16/int8/int4 tok/s plain + speculative, modeled
 weight-stream bytes/token, top-1 agreement vs bf16) — as
 ``{"schema_version", "mode", "rows": [{"name", "value", "note"}]}``.  Values are machine-relative and drift
@@ -34,6 +37,7 @@ def collect(quick: bool):
         print(f"{name},{float(value):.6g},{note}", flush=True)
 
     tt._serve_engine_bench(emit)
+    tt._serve_overlap_bench(emit, quick=quick)
     tt._serve_spec_bench(emit, quick=quick)
     tt._serve_quant_bench(emit, quick=quick)
     return {"schema_version": SCHEMA_VERSION,

@@ -55,6 +55,18 @@ def main() -> None:
                     help="continuous-batching slot count (decode batch)")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per device dispatch")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens consumed per mixed dispatch while "
+                         "other slots keep decoding (default: the prompt "
+                         "bucket, 16); smaller chunks bound the decode "
+                         "stall an admission can cause")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="escape hatch: restore the admit-then-decode "
+                         "engine (each admission prefills its whole "
+                         "prompt in one dispatch, fencing the decode "
+                         "stream).  Greedy streams are bit-identical "
+                         "either way; use this to isolate overlap when "
+                         "debugging latency or dispatch-count drift")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="treat this token id as EOS (early slot recycle)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -133,6 +145,8 @@ def main() -> None:
     max_seq = args.max_prompt + args.new_tokens + 1  # +1: pad-parking slot
     eng = make_engine(cfg, max_batch=args.slots, max_seq=max_seq,
                       seed=args.seed, decode_block=args.decode_block,
+                      prefill_chunk=args.prefill_chunk,
+                      overlap=not args.no_overlap,
                       mesh=mesh,
                       profile=args.profile if mesh is not None
                       else "baseline",
@@ -200,6 +214,20 @@ def main() -> None:
           f"{stats['decode_dispatches']} decode "
           f"({stats['decode_steps']} steps scanned, "
           f"k<={args.decode_block})")
+    print(f"overlap: {'on' if eng.overlap else 'off'} "
+          f"prefill_chunk={eng.prefill_chunk} "
+          f"mixed_dispatches={stats['mixed_dispatches']} "
+          f"prefill_chunks={stats['prefill_chunks']}")
+    if "ttft_p50_s" in stats:
+        print(f"ttft p50={stats['ttft_p50_s']*1e3:.2f}ms "
+              f"p95={stats['ttft_p95_s']*1e3:.2f}ms "
+              f"p99={stats['ttft_p99_s']*1e3:.2f}ms (arrival -> first "
+              f"token, incl. queue wait)")
+    if "itl_p50_s" in stats:
+        print(f"inter-token p50={stats['itl_p50_s']*1e3:.2f}ms "
+              f"p95={stats['itl_p95_s']*1e3:.2f}ms "
+              f"p99={stats['itl_p99_s']*1e3:.2f}ms (per-request arrival "
+              f"gaps; tail = cross-dispatch stalls)")
     if "peak_pages" in stats:
         hbm = eng.cache_hbm_bytes()
         print(f"paged KV: page_size={stats['page_size']} "

@@ -9,6 +9,19 @@ sharded axis become all-reduces of (b, h) scalars per token — i.e. the
 partial-softmax + logsumexp-combine schedule, without hand-written
 shard_map.  An explicit shard_map variant lives in serve/engine.py for the
 perf comparison.
+
+Mixed-phase mask contract (what chunked prefill leans on): query
+positions are per-token and may start anywhere — visibility is
+``arange(kv_len) <= q_position``, so a prompt slice re-entered at its
+true cache positions sees exactly the rows earlier slices wrote and
+nothing newer, and K/V written at position p depends only on the token at
+p.  Negative positions are the inert encoding: a position-(-1) query is
+fully masked (it attends to nothing real) and its K/V write parks in the
+sacrificial slot — dense caches' reserved ``max_seq - 1`` column, paged
+caches' page-0 rows via ``page_map[b, -1]``.  The serve engine's mixed
+dispatches run every non-participating batch row at position -1, which is
+why one fused dispatch can hold prefilling and decoding tenants without
+any attention-level branching.
 """
 from __future__ import annotations
 

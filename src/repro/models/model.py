@@ -172,7 +172,8 @@ class Model:
     # ---- serving -------------------------------------------------------------
     def prefill(self, params: Dict, batch: Dict, caches: Dict,
                 positions: Optional[jax.Array] = None,
-                page_map: Optional[jax.Array] = None
+                page_map: Optional[jax.Array] = None,
+                all_logits: bool = False
                 ) -> Tuple[jax.Array, Dict]:
         """Write the prompt into caches; returns (last-token logits, caches).
 
@@ -184,6 +185,15 @@ class Model:
         last cache slot (see attention.gqa_apply).  ``page_map``: paged-KV
         serving — attention caches are flat physical-row pools and K/V
         route through the (B, max_seq) logical→physical map.
+
+        ``positions`` need not start at 0: chunked prefill (the overlap
+        serve engine) re-enters with each prompt slice at its true cache
+        positions and the attention mask lets every chunk token see all
+        previously cached positions — the cache K/V written is
+        byte-identical to a single monolithic prefill of the same prompt.
+        ``all_logits=True`` returns the full (B, S, V) logits instead of
+        the last column (the mixed dispatch samples only rows whose prompt
+        ends inside the chunk; left-padding keeps those in column -1).
         """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -200,7 +210,9 @@ class Model:
             x, new_caches = encdec.decode_stack(
                 cfg, params["blocks"], x, positions=positions, caches=caches,
                 mode="infer")
-            return self._logits(params, x[:, -1:]), new_caches
+            if not all_logits:
+                x = x[:, -1:]
+            return self._logits(params, x), new_caches
         x = self._embed_inputs(params, batch, dtype)
         b, s = x.shape[:2]
         if positions is None:
@@ -209,7 +221,9 @@ class Model:
         x, new_caches, _ = transformer.stack_forward(
             cfg, params["blocks"], x, cos_sin=cos_sin, positions=positions,
             caches=caches, mode="infer", page_map=page_map)
-        return self._logits(params, x[:, -1:]), new_caches
+        if not all_logits:
+            x = x[:, -1:]
+        return self._logits(params, x), new_caches
 
     def decode_step(self, params: Dict, tokens: jax.Array, caches: Dict,
                     positions: jax.Array,

@@ -172,6 +172,12 @@ def stack_forward(cfg: ModelConfig, block_params: Dict, x: jax.Array, *,
     paths (Model.prefill / Model.decode_step) pass 'infer' so CoLA sites
     skip residual saving and decode batches dispatch the GEMV kernel.
 
+    positions: per-token cache positions; they need not start at 0 or be
+    contiguous across calls — chunked prefill re-enters the stack with
+    each prompt slice at its true positions, and negative positions mark
+    inert rows (fully masked queries, K/V parked in the sacrificial
+    slot; see models/attention.py).
+
     page_map: paged-KV serving (loop-invariant across periods — it closes
     over the scan body rather than riding the carry); attention cache
     leaves are then flat physical-row pools, see attention.gqa_apply."""

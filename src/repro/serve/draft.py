@@ -34,7 +34,11 @@ shapes with the kept-period leading axis.
 ``serve/engine.py`` drives the draft k−1 greedy steps through the
 existing decode GEMV path at reduced r, then verifies all k positions in
 one full-model dispatch; see the engine's spec-decode machinery for the
-accept/rollback protocol.
+accept/rollback protocol.  Under the overlap engine the draft KV is
+prefilled **chunk by chunk** alongside the full model's (each mixed
+dispatch's prompt slice runs through the truncated views too), so
+speculation composes with chunked prefill without a draft-side admission
+stall.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
-"""Serving engine: persistent slot caches + jitted admission prefill +
-a jitted ``lax.scan`` decode loop advancing every slot k tokens per device
-dispatch.  Policy (admission order, EOS, slot recycling) lives in
+"""Serving engine: persistent slot caches + jitted **mixed dispatches**
+(chunked prefill fused with the decode scan) advancing every slot per
+device call.  Policy (admission order, EOS, slot recycling) lives in
 serve/scheduler.py; this module owns the device state and the compiled
 functions.
 
@@ -12,6 +12,29 @@ token batch lands below ``ops.DECODE_T_MAX`` so every CoLA site dispatches
 the GEMV-shaped ``cola_ae_decode`` kernel — single launch, weights
 streamed, z in VMEM — instead of the training-shaped token-tile grids
 that are degenerate at T=1.
+
+Chunked prefill / prefill-decode overlap (the default, ROADMAP item 1):
+admission no longer fences the decode stream.  Each admitted prompt is
+consumed in fixed ``prefill_chunk``-token slices, and every slice rides a
+**mixed dispatch** (``mixed_chunk``): one jitted call in which prefilling
+slots run their next left-padded prompt chunk at its true cache
+positions while decoding slots advance k tokens through the same scan.
+Non-participating rows run at position -1 — fully masked queries, K/V
+parked in the sacrificial row (models/attention.py) — so the two phases
+share one compiled function per static (c, k) without any masking logic
+in the model.  Greedy streams are bit-identical to the non-overlapped
+engine (``overlap=False``): chunked prefill writes the same cache bytes
+as a monolithic one, per-token projections follow the same
+T-independent decode plan (keep B·c ≤ ops.DECODE_T_MAX), and batch rows
+are independent.  Chunks are left-padded so the final slice's newest
+token always sits in the last column — one ``logits[:, -1]`` read
+samples the first token exactly like the monolithic admit.  Pure-decode
+rounds still go through ``decode_chunk``/``spec_chunk`` unchanged, and
+recurrent archs auto-fall back to the admit-then-decode path (chunk
+re-entry needs positional caches).  ``stats()['mixed_dispatches']`` /
+``['prefill_chunks']`` count the fused calls and per-slot chunks;
+``ttft_s``/``itl_s`` percentile samples (fed by the scheduler) surface
+the latency this exists to fix.
 
 Dispatch discipline: the old engine issued one device dispatch per token
 (84-line Python loop).  Here ``decode_chunk`` is one jitted call that
@@ -120,7 +143,22 @@ class ServeEngine:
     max_batch: int
     max_seq: int
     decode_block: int = 8     # tokens decoded per device dispatch
-    prompt_bucket: int = 16   # prefill length quantum (bounds recompiles)
+    prompt_bucket: int = 16   # prefill length quantum (bounds recompiles;
+                              # non-overlap admission path only)
+    # ---- chunked prefill / overlap ---------------------------------------
+    # overlap=True (the default, attn-only archs) dissolves the admit-then-
+    # decode round structure into ONE phase-tagged mixed dispatch: slots in
+    # the prefilling phase consume their next prefill_chunk prompt tokens
+    # while slots in the decoding phase advance k tokens — an admission no
+    # longer fences the decode stream for the whole prompt.  Greedy streams
+    # are bit-identical to overlap=False (chunked prefill writes the same
+    # cache bytes as a monolithic one; batch rows are independent).  The
+    # fixed chunk width also collapses the per-bucket prefill recompile
+    # family into one compiled shape per (chunk, k).
+    prefill_chunk: Optional[int] = None  # prompt tokens per chunk
+                                         # (None = prompt_bucket)
+    overlap: bool = True      # auto-off for recurrent archs (chunk re-entry
+                              # needs positional caches)
     # ---- guardrails ------------------------------------------------------
     max_queue: Optional[int] = None   # admission-queue bound (None = ∞);
                                       # overflow -> finish_reason='rejected'
@@ -162,6 +200,14 @@ class ServeEngine:
             raise ValueError("serve engine targets decoder-only LMs "
                              "(whisper serving needs a frames frontend)")
         self.supports_ragged = set(cfg.layer_kinds()) == {"attn"}
+        if self.prefill_chunk is None:
+            self.prefill_chunk = self.prompt_bucket
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        # chunk re-entry replays positional K/V; recurrent states would
+        # absorb the other phases' pad tokens — fall back to the
+        # admit-then-decode engine there
+        self.overlap = bool(self.overlap) and self.supports_ragged
         if self.paged is None:
             self.paged = self.supports_ragged
         elif self.paged and not self.supports_ragged:
@@ -205,6 +251,10 @@ class ServeEngine:
             self._draft_caches = draft_mod.draft_caches(
                 self._caches, self.draft_plan)
         self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(4, 11))
+        # mixed (chunked-prefill + decode) dispatches jit per static
+        # (chunk width c, decode steps k); c is always prefill_chunk and
+        # k ≤ decode_block (or spec_window), so the family is tiny
+        self._mixed_fns: Dict[Tuple[int, int], object] = {}
         self._spec_fns: Dict[int, object] = {}
         # decode chunks jit per (static) step count k: variable-k chunks
         # stop early when every live slot's budget is spent.  At most
@@ -248,6 +298,19 @@ class ServeEngine:
     def _fresh_stats(self) -> Dict:
         return {"prefill_dispatches": 0, "decode_dispatches": 0,
                 "decode_tokens": 0, "decode_steps": 0,
+                # mixed_dispatches counts fused chunked-prefill dispatches
+                # (a mixed dispatch with a decode component also bumps
+                # decode_dispatches; one with a prefill component bumps
+                # prefill_dispatches — the legacy counters keep their
+                # "dispatch that advanced this phase" meaning);
+                # prefill_chunks counts per-slot chunks consumed
+                "mixed_dispatches": 0, "prefill_chunks": 0,
+                # per-request latency samples (scheduler feeds these):
+                # ttft_s = submit→first-token per request; itl_s = arrival
+                # gap between consecutive tokens of one request (tokens in
+                # the same dispatch share a timestamp, so the tail
+                # percentiles surface exactly the inter-dispatch stalls)
+                "ttft_s": [], "itl_s": [],
                 "chunk_s": [], "chunk_k": [], "prefill_s": [],
                 "quarantines": 0, "requeues": 0, "timeouts": 0,
                 "rejected": 0, "stalls": 0, "nonfinite_chunks": 0,
@@ -349,6 +412,168 @@ class ServeEngine:
             fn = jax.jit(functools.partial(self._chunk_impl, k),
                          donate_argnums=4)
             self._chunk_fns[k] = fn
+        return fn
+
+    # ---- chunked prefill / mixed dispatch --------------------------------
+    def _prefill_part(self, params, ptoks, ppos, caches, dcaches, page_map,
+                      fresh_mask, temps, rng, base, poison):
+        """The prefill half of a mixed dispatch: one (B, c) left-padded
+        prompt chunk at its true cache positions.  Rows with no chunk this
+        dispatch carry an all-pad slice (negative positions park their
+        writes in the sacrificial row; no merge needed — attn-only archs
+        only, so non-chunk rows' live cache rows are untouched).  Chunks
+        are left-padded, so every row's newest token sits in the last
+        column and one ``logits[:, -1]`` read samples the first token of
+        any row whose prompt ends in this chunk (the host ignores it for
+        mid-prompt rows).  Spec mode also prefills the draft KV through
+        the truncated views, chunk by chunk — speculation composes with
+        overlap."""
+        if fresh_mask is not None:
+            def wipe(c):
+                m = fresh_mask.reshape((1, -1) + (1,) * (c.ndim - 2))
+                return jnp.where(m, jnp.zeros_like(c), c)
+            caches = jax.tree.map(wipe, caches)
+            if dcaches is not None:
+                dcaches = jax.tree.map(wipe, dcaches)
+        logits, caches = self.model.prefill(
+            params, {"tokens": ptoks}, caches, positions=ppos,
+            page_map=page_map)
+        if dcaches is not None:
+            dp = draft_mod.draft_params(params, self.draft_plan)
+            with cola_ops.dispatch_scope("draft_"):
+                _, dcaches = self.model.prefill(
+                    dp, {"tokens": ptoks}, dcaches, positions=ppos,
+                    page_map=page_map)
+        last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        first = _sample_batch(last, temps, rng, base)
+        return first, ok, caches, dcaches
+
+    def _mixed_chunk_impl(self, c, k, params, ptoks, ppos, cur_tok, pos,
+                          decode_mask, temps, caches, rng, base, poison,
+                          page_map=None, fresh_mask=None, dcaches=None):
+        """ONE fused mixed-phase dispatch (c, k static): prefilling slots
+        consume their next c-token prompt chunk while decoding slots
+        advance k tokens — admission no longer fences the decode stream.
+        ``decode_mask`` tags the decoding rows; all other rows run the
+        decode scan at position -1, so their queries are fully masked and
+        their K/V writes park in the sacrificial row (their carry values
+        pass through unchanged).  Decoding rows execute the exact per-row
+        math of ``_chunk_impl`` — batch rows are independent, so their
+        greedy streams are bit-identical to the non-overlapped engine."""
+        B = self.max_batch
+        first = jnp.zeros((B, 1), jnp.int32)
+        ok_p = jnp.ones((B,), bool)
+        if c:
+            first, ok_p, caches, dcaches = self._prefill_part(
+                params, ptoks, ppos, caches, dcaches, page_map, fresh_mask,
+                temps, rng, base, poison)
+        dbase = base + (1 if c else 0)
+
+        def body(carry, i):
+            tok, p, caches, ok = carry
+            qpos = jnp.where(decode_mask, p, -1)
+            logits, caches = self.model.decode_step(params, tok, caches,
+                                                    qpos[:, None],
+                                                    page_map=page_map)
+            last = jnp.where(poison[:, None], jnp.nan, logits[:, -1])
+            ok = ok & jnp.all(jnp.isfinite(last), axis=-1)
+            nxt = _sample_batch(last, temps, rng, dbase + i)
+            nxt = jnp.where(decode_mask[:, None], nxt, tok)
+            p = jnp.where(decode_mask,
+                          jnp.minimum(p + 1, self.max_seq - 1), p)
+            return (nxt, p, caches, ok), nxt[:, 0]
+
+        ok_d = jnp.ones((B,), bool)
+        if k:
+            (cur_tok, pos, caches, ok_d), toks = jax.lax.scan(
+                body, (cur_tok, pos, caches, ok_d), jnp.arange(k))
+            toks = toks.T
+        else:
+            toks = jnp.zeros((B, 0), jnp.int32)
+        return first, ok_p, toks, cur_tok, pos, caches, dcaches, ok_d
+
+    def _mixed_spec_impl(self, c, k, params, ptoks, ppos, cur_tok, pos,
+                         decode_mask, temps, caches, dcaches, rng, base,
+                         poison, page_map=None, fresh_mask=None):
+        """Mixed dispatch, speculative flavour: the prefill half is
+        identical to ``_mixed_chunk_impl`` (and also advances the draft
+        KV), the decode half is one spec round restricted to
+        ``decode_mask`` rows — masked rows draft/verify at position -1
+        (parked writes), their rollback entries are forced non-stale, and
+        their tok/pos carries pass through untouched, so a prefilling
+        neighbour can never perturb a speculating slot's stream or the
+        paged pool bytes."""
+        B = self.max_batch
+        first = jnp.zeros((B, 1), jnp.int32)
+        ok_p = jnp.ones((B,), bool)
+        if c:
+            first, ok_p, caches, dcaches = self._prefill_part(
+                params, ptoks, ppos, caches, dcaches, page_map, fresh_mask,
+                temps, rng, base, poison)
+        if not k:
+            return (first, ok_p, jnp.zeros((B, 0), jnp.int32),
+                    jnp.zeros((B,), jnp.int32), cur_tok, pos, caches,
+                    dcaches, jnp.ones((B,), bool))
+        dp = draft_mod.draft_params(params, self.draft_plan)
+
+        with cola_ops.dispatch_scope("draft_"):
+            def dbody(carry, _):
+                t, p, dc = carry
+                qpos = jnp.where(decode_mask, p, -1)
+                lg, dc = self.model.decode_step(dp, t, dc, qpos[:, None],
+                                                page_map=page_map)
+                nt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                nt = jnp.where(decode_mask[:, None], nt, t)
+                p = jnp.where(decode_mask,
+                              jnp.minimum(p + 1, self.max_seq - 1), p)
+                return (nt, p, dc), nt[:, 0]
+            (_, _, dcaches), drafts = jax.lax.scan(
+                dbody, (cur_tok, pos, dcaches), jnp.arange(k - 1))
+        drafts = drafts.T                                   # (B, k-1)
+
+        window = jnp.concatenate([cur_tok, drafts], axis=1)  # (B, k)
+        wpos = jnp.minimum(pos[:, None] + jnp.arange(k)[None, :],
+                           self.max_seq - 1)
+        # masked rows verify at -1: queries fully masked, writes parked
+        wpos = jnp.where(decode_mask[:, None], wpos, -1)
+        with cola_ops.dispatch_scope("verify_"):
+            logits, caches = self.model.decode_step(
+                params, window, caches, wpos, page_map=page_map)
+        logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+        ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k)
+
+        match = jnp.concatenate(
+            [drafts == targets[:, :k - 1],
+             jnp.zeros((B, 1), bool)], axis=1)
+        n_acc = jnp.argmin(match.astype(jnp.int32), axis=1)  # first False
+        n_emit = n_acc + 1                                   # ∈ [1, k]
+        new_tok = jnp.take_along_axis(targets, n_acc[:, None], axis=1)
+        new_tok = jnp.where(decode_mask[:, None], new_tok, cur_tok)
+        new_pos = jnp.where(decode_mask,
+                            jnp.minimum(pos + n_emit, self.max_seq - 1),
+                            pos)
+
+        offs = jnp.arange(k)[None, :]
+        stale = (offs >= n_emit[:, None]) & decode_mask[:, None]
+        caches = self._zero_stale(caches, wpos, stale, page_map)
+        if k > 1:  # draft wrote rows at window offsets 0..k-2 only
+            dcaches = self._zero_stale(dcaches, wpos[:, :k - 1],
+                                       stale[:, :k - 1], page_map)
+        return (first, ok_p, targets, n_emit, new_tok, new_pos, caches,
+                dcaches, ok)
+
+    def _get_mixed_fn(self, c: int, k: int):
+        fn = self._mixed_fns.get((c, k))
+        if fn is None:
+            if self.speculating:
+                fn = jax.jit(functools.partial(self._mixed_spec_impl, c, k),
+                             donate_argnums=(7, 8))
+            else:
+                fn = jax.jit(functools.partial(self._mixed_chunk_impl, c, k),
+                             donate_argnums=(7, 13))
+            self._mixed_fns[(c, k)] = fn
         return fn
 
     # ---- speculative decoding --------------------------------------------
@@ -635,6 +860,142 @@ class ServeEngine:
         # writable copies: the scheduler mutates these host mirrors in place
         return toks, n_emit, np.array(tok), np.array(new_pos), ok
 
+    def mixed_chunk(self, ptoks: np.ndarray, ppos: np.ndarray,
+                    cur_tok: np.ndarray, pos: np.ndarray,
+                    decode_mask: np.ndarray, temps: np.ndarray, rng,
+                    remaining: Optional[np.ndarray] = None,
+                    admit_budgets: Optional[np.ndarray] = None
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+        """One fused mixed-phase dispatch: prefilling slots consume the
+        (B, c) left-padded prompt chunk ``ptoks``/``ppos`` (pad = -1)
+        while ``decode_mask`` slots advance up to decode_block (or one
+        spec round of up to spec_window) tokens.  The scheduler calls
+        this only when at least one slot is prefilling — pure-decode
+        rounds go through decode_chunk / spec_chunk unchanged.
+
+        Returns (first_tok (B,), ok_prefill (B,), toks (B, k),
+        n_valid (B,), next token, next pos, ok_decode (B,)).
+        ``first_tok[i]`` is meaningful only for rows whose prompt ended
+        in this chunk; only ``toks[i, :n_valid[i]]`` of decode rows are
+        real output.
+
+        ``admit_budgets``: per-slot token spans (> 0 exactly for slots
+        admitted this dispatch) — paged mode claims their pages up front
+        and fresh-wipes the claimed rows in-dispatch, exactly like
+        ``admit``."""
+        ptoks = np.asarray(ptoks, np.int32)
+        c = int(ptoks.shape[1])
+        ppos = np.asarray(ppos, np.int32)
+        dec = np.asarray(decode_mask, bool)
+        # rows carrying a real chunk this dispatch (newest column != pad)
+        pre = ppos[:, -1] >= 0 if c else np.zeros((self.max_batch,), bool)
+        k = 0
+        if dec.any():
+            k = self.spec_window if self.speculating else self.decode_block
+            if remaining is not None:
+                rem = np.asarray(remaining)
+                live = dec & (rem > 0)
+                if live.any():
+                    k = max(1, min(k, int(rem[live].min())))
+        # a mixed dispatch advances both phases: consult both chaos
+        # tables and both watchdog identities so fault-injection keyed on
+        # ("prefill"|"decode", idx) keeps firing under overlap
+        pidx = self._stats["prefill_dispatches"]
+        didx = self._stats["decode_dispatches"]
+        poison, delay_s = self._no_poison, 0.0
+        if c:
+            pp, pd = self._fault("prefill", pidx)
+            poison, delay_s = poison | pp, delay_s + pd
+        if k:
+            dp, dd = self._fault("decode", didx)
+            poison, delay_s = poison | dp, delay_s + dd
+        page_map = fresh = None
+        if self.paged:
+            # always ship a fresh mask (usually all-False) so the (c, k)
+            # jit entry keeps one trace whether or not this chunk admits
+            fresh_np = np.zeros((self.n_pages * self.page_size,), bool)
+            if admit_budgets is not None:
+                for i in np.nonzero(np.asarray(admit_budgets) > 0)[0]:
+                    self.alloc.release(int(i))  # idempotent safety net
+                    fresh_np[self.alloc.allocate(
+                        int(i), int(admit_budgets[i]))] = True
+            page_map, fresh = self._page_map(), jnp.asarray(fresh_np)
+        t0 = time.perf_counter()
+        with self._ctx():
+            if self.speculating:
+                (first, ok_p, toks, n_emit, tok, new_pos, self._caches,
+                 self._draft_caches, ok_d) = self._get_mixed_fn(c, k)(
+                    self.params, jnp.asarray(ptoks), jnp.asarray(ppos),
+                    jnp.asarray(cur_tok), jnp.asarray(pos),
+                    jnp.asarray(dec), jnp.asarray(temps), self._caches,
+                    self._draft_caches, self._rng(rng), self._rng_step,
+                    poison, page_map, fresh)
+            else:
+                (first, ok_p, toks, tok, new_pos, self._caches,
+                 self._draft_caches, ok_d) = self._get_mixed_fn(c, k)(
+                    self.params, jnp.asarray(ptoks), jnp.asarray(ppos),
+                    jnp.asarray(cur_tok), jnp.asarray(pos),
+                    jnp.asarray(dec), jnp.asarray(temps), self._caches,
+                    self._rng(rng), self._rng_step, poison, page_map,
+                    fresh, self._draft_caches)
+                n_emit = np.full((self.max_batch,), k, np.int32)
+        first = np.asarray(first)[:, 0]
+        ok_p, ok_d = np.asarray(ok_p), np.asarray(ok_d)
+        toks, n_emit = np.asarray(toks), np.asarray(n_emit)
+        if delay_s:
+            time.sleep(delay_s)  # simulated device stall (chaos)
+        elapsed = time.perf_counter() - t0
+        self._stats["mixed_dispatches"] += 1
+        if c:
+            # the prefill-part sample consumed one rng fold (greedy rows
+            # are fold-independent; see _sample_batch)
+            self._rng_step += 1
+            self._stats["prefill_dispatches"] += 1
+            self._stats["prefill_chunks"] += int(pre.sum())
+            if not k:
+                self._stats["prefill_s"].append(elapsed)
+                self._watch_stall("prefill", pidx, elapsed)
+        if k:
+            self._stats["decode_dispatches"] += 1
+            self._stats["decode_steps"] += k
+            if self.speculating:
+                n_live = int(dec.sum())
+                emitted = int(n_emit[dec].sum())
+                drafted = n_live * (k - 1)
+                accepted = int((n_emit[dec] - 1).sum())
+                self._stats["decode_tokens"] += emitted
+                self._stats["spec_rounds"] += 1
+                self._stats["spec_slot_rounds"] += n_live
+                self._stats["spec_drafted"] += drafted
+                self._stats["spec_accepted"] += accepted
+                self._stats["spec_rejected"] += drafted - accepted
+                self._stats["spec_emitted"] += emitted
+                self._stats["chunk_k"].append(emitted / max(n_live, 1))
+            else:
+                self._rng_step += k
+                self._stats["decode_tokens"] += toks.shape[0] * k
+                self._stats["chunk_k"].append(k)
+            self._stats["chunk_s"].append(elapsed)
+            self._watch_stall("decode", didx, elapsed)
+        if (k and not ok_d[dec].all()) or (c and not ok_p[pre].all()):
+            self.count("nonfinite_chunks")
+        # writable copies: the scheduler mutates these host mirrors in place
+        return (first, ok_p, toks, n_emit, np.array(tok),
+                np.array(new_pos), ok_d)
+
+    def record_ttft(self, seconds: float) -> None:
+        """Per-request time-to-first-token sample (scheduler feeds this
+        the moment a request's first token is consumed)."""
+        self._stats["ttft_s"].append(float(seconds))
+
+    def record_itl(self, seconds: float) -> None:
+        """Per-request inter-token arrival gap (tokens emitted by one
+        dispatch share a timestamp — the tail percentiles are exactly the
+        cross-dispatch stalls chunked prefill exists to shrink)."""
+        self._stats["itl_s"].append(float(seconds))
+
     def cache_hbm_bytes(self, *, peak: bool = True) -> Dict[str, int]:
         """Measured KV-cache HBM footprint: bytes per logical row summed
         over every (period-stacked) leaf, × rows held.  ``paged`` counts
@@ -668,6 +1029,19 @@ class ServeEngine:
         chunks = s.pop("chunk_s")
         ks = s.pop("chunk_k")
         pre = s.pop("prefill_s")
+        ttft = s.pop("ttft_s")
+        itl = s.pop("itl_s")
+        # per-REQUEST latency (the serving SLO view, distinct from the
+        # per-dispatch wall times below): TTFT includes queue wait +
+        # (possibly chunked) prefill; ITL gaps include every stall a
+        # request's stream experienced — admission fences, spec rounds,
+        # page waits — not just its own decode chunks
+        if ttft:
+            for p in (50, 95, 99):
+                s[f"ttft_p{p}_s"] = float(np.percentile(ttft, p))
+        if itl:
+            for p in (50, 95, 99):
+                s[f"itl_p{p}_s"] = float(np.percentile(itl, p))
         # steady-state: the first chunk carries compile time
         steady = [t / kk for t, kk in zip(chunks, ks)]
         steady = steady[1:] or steady
@@ -763,7 +1137,10 @@ class ServeEngine:
 
 def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
                 max_batch: int = 8, max_seq: int = 256, seed: int = 0,
-                decode_block: int = 8, mesh: Optional[object] = None,
+                decode_block: int = 8,
+                prefill_chunk: Optional[int] = None,
+                overlap: bool = True,
+                mesh: Optional[object] = None,
                 profile: str = "baseline", paged: Optional[bool] = None,
                 page_size: int = 16, n_pages: Optional[int] = None,
                 speculate: bool = False,
@@ -805,7 +1182,9 @@ def make_engine(cfg: ModelConfig, params: Optional[Dict] = None, *,
                                     depth=draft_depth,
                                     depth_mode=draft_depth_mode)
     return ServeEngine(model, params, max_batch, max_seq,
-                       decode_block=decode_block, mesh=mesh, profile=profile,
+                       decode_block=decode_block,
+                       prefill_chunk=prefill_chunk, overlap=overlap,
+                       mesh=mesh, profile=profile,
                        paged=paged, page_size=page_size, n_pages=n_pages,
                        draft_plan=plan, spec_window=spec_window,
                        weight_dtype=weight_dtype)

@@ -8,8 +8,21 @@ guardrails (deadlines, admission-queue bounds, NaN-slot quarantine).
 
 Execution model
 ---------------
-``max_batch`` slots share one (B, max_seq) cache set.  Each scheduler
-round:
+``max_batch`` slots share one (B, max_seq) cache set.  With the default
+**overlap** engine each slot carries a phase (``prefill`` | ``decode``)
+and every scheduler round issues ONE fused mixed dispatch
+(``engine.mixed_chunk``): free slots pull arrived requests off the FIFO
+queue (page-pool permitting) and enter the prefill phase; prefilling
+slots consume their next ``prefill_chunk`` prompt tokens (the final,
+partial slice left-padded so the newest token is always the last
+column); decoding slots advance up to ``decode_block`` tokens (or one
+spec round) in the same call.  A slot whose prompt completes flips to
+decode with the dispatch's sampled first token; deadlines are re-checked
+at every chunk boundary, so a long prompt can time out *mid-prefill* and
+a page-blocked request is admitted the first chunk after pages free up.
+Rounds with no prefilling slot fall through to the plain decode path
+below.  ``overlap=False`` (and recurrent archs, automatically) restores
+the legacy admit-then-decode rounds:
 
 1. **Admit** — free slots pull requests off the queue.  The newly admitted
    prompts are **left-padded** to a shared bucket length and prefilled in
@@ -59,9 +72,12 @@ Guardrails (chaos-tested in tests/test_chaos.py)
   with ``finish_reason='rejected'`` (a typed response, never an
   exception) so a traffic spike degrades instead of OOMing the host.
 * **Per-request deadlines** — ``Request.deadline_s`` is a wall-clock
-  budget from submission; a request that expires while queued or
-  mid-generation is finalized with whatever tokens it has and
-  ``finish_reason='timeout'``.
+  budget from arrival; a request that expires while queued, mid-prefill
+  (overlap engines: between prompt chunks) or mid-generation is
+  finalized with whatever tokens it has and ``finish_reason='timeout'``.
+  Deadlines are swept after *every* dispatch — a queued request whose
+  deadline passes during a long dispatch is reaped immediately
+  (``queue_timeout`` event), not one full round late.
 * **NaN quarantine** — the engine flags any slot whose logits went
   non-finite during a chunk.  That slot's chunk tokens are discarded, the
   slot is quarantined (freed; its cache row is rewritten by the next
@@ -95,14 +111,19 @@ FINISH_REASONS = ("eos", "length", "timeout", "rejected", "error")
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``prompt`` is a 1-D int32 token array.
-    ``deadline_s`` is an optional wall-clock budget measured from
-    submission (None = no deadline)."""
+    ``deadline_s`` is an optional wall-clock budget measured from arrival
+    (None = no deadline).  ``arrival_s`` staggers the request's arrival
+    relative to ``run()``'s start (churn traces for the latency
+    benchmarks; 0 = available immediately, the historical behavior) —
+    admission stays FIFO, a not-yet-arrived queue head blocks the ones
+    behind it."""
     uid: int
     prompt: np.ndarray
     max_new_tokens: int
     temperature: float = 0.0
     eos_id: Optional[int] = None
     deadline_s: Optional[float] = None
+    arrival_s: float = 0.0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -122,7 +143,9 @@ class Response:
     prompt_len: int
     tokens: np.ndarray
     finish_reason: str          # FINISH_REASONS
-    latency_s: float            # submit -> finish
+    latency_s: float            # arrival -> finish
+    ttft_s: Optional[float] = None  # arrival -> first token (None if the
+                                    # request never produced one)
 
 
 @dataclasses.dataclass
@@ -130,6 +153,13 @@ class _Slot:
     req: Request
     tokens: List[int]
     t_admit: float
+    # chunked-prefill state (overlap engines): how many prompt tokens
+    # have been written to the cache, and which phase the slot is in
+    cursor: int = 0
+    phase: str = "decode"       # 'prefill' | 'decode'
+    # latency bookkeeping
+    t_first: Optional[float] = None  # first-token wall time
+    t_last: Optional[float] = None   # latest-token wall time
 
 
 def _bucket(n: int, quantum: int) -> int:
@@ -179,8 +209,11 @@ class SlotScheduler:
                 "draft tokens against the full model's argmax (sampled "
                 "verification needs rejection sampling — not implemented)")
 
+        overlap = eng.overlap
         t0 = time.perf_counter()
-        t_submit = {r.uid: t0 for r in requests}
+        # arrival: deadlines and latency are measured from when the
+        # request arrives, not from run()'s start
+        t_submit = {r.uid: t0 + r.arrival_s for r in requests}
         retries: Dict[int, int] = collections.Counter()
         done: Dict[int, Response] = {}
 
@@ -215,13 +248,31 @@ class SlotScheduler:
             done[s.req.uid] = Response(
                 uid=s.req.uid, prompt_len=len(s.req.prompt),
                 tokens=np.asarray(s.tokens, np.int32), finish_reason=reason,
-                latency_s=time.perf_counter() - t_submit[s.req.uid])
+                latency_s=time.perf_counter() - t_submit[s.req.uid],
+                ttft_s=(None if s.t_first is None
+                        else s.t_first - t_submit[s.req.uid]))
             if reason in ("timeout", "error"):
                 eng.count("timeouts" if reason == "timeout" else "errors")
             slots[i] = None
             temps[i] = 0.0
             eng.release_slot(i)  # paged: pages return to the pool now
             free.append(i)
+
+        def sweep_queue() -> None:
+            """Deadline sweep over *queued* requests.  Runs after every
+            dispatch — not just at round boundaries — so a request whose
+            deadline passes during a long dispatch (or a long prompt's
+            chunked prefill) is finalized immediately instead of one full
+            round late."""
+            for req in [r for r in queue if expired(r)]:
+                queue.remove(req)
+                done[req.uid] = Response(
+                    uid=req.uid, prompt_len=len(req.prompt),
+                    tokens=np.zeros((0,), np.int32),
+                    finish_reason="timeout",
+                    latency_s=time.perf_counter() - t_submit[req.uid])
+                eng.count("timeouts")
+                eng.events.append({"kind": "queue_timeout", "uid": req.uid})
 
         def quarantine(i: int) -> None:
             """The engine flagged slot i's logits non-finite: its chunk
@@ -244,11 +295,23 @@ class SlotScheduler:
             eng.release_slot(i)  # paged: pages return to the pool now
             free.append(i)
 
-        def consume(i: int, toks: np.ndarray) -> None:
+        def consume(i: int, toks: np.ndarray,
+                    t_now: Optional[float] = None) -> None:
             """Fold freshly decoded tokens into slot i, finishing on EOS
-            or budget exhaustion (extra chunk tokens are dropped)."""
+            or budget exhaustion (extra chunk tokens are dropped).
+            ``t_now`` is the dispatch-completion wall time: every token
+            of one dispatch shares it, so the recorded inter-token gaps
+            are 0 within a chunk and the real stall between chunks —
+            exactly the tail the latency percentiles must surface."""
             s = slots[i]
+            t_now = time.perf_counter() if t_now is None else t_now
             for t in toks:
+                if s.t_first is None:
+                    s.t_first = t_now
+                    eng.record_ttft(t_now - t_submit[s.req.uid])
+                else:
+                    eng.record_itl(t_now - s.t_last)
+                s.t_last = t_now
                 s.tokens.append(int(t))
                 if s.req.eos_id is not None and int(t) == s.req.eos_id:
                     finish(i, "eos")
@@ -260,11 +323,14 @@ class SlotScheduler:
                 finish(i, "timeout")
 
         while queue or len(free) < B:
-            # ---- admit ------------------------------------------------
+            sweep_queue()
+            # ---- admit: assign free slots (FIFO) ----------------------
             newly: List[int] = []
-            pending_pages = 0  # pages this round will claim in eng.admit
+            pending_pages = 0  # pages this round's admissions will claim
             while queue and free:
-                req = queue[0]  # peek: pool waits must not reorder
+                req = queue[0]  # peek: pool/arrival waits must not reorder
+                if t_submit[req.uid] > time.perf_counter():
+                    break  # not yet arrived
                 if expired(req):  # died waiting in the queue
                     queue.popleft()
                     done[req.uid] = Response(
@@ -277,8 +343,12 @@ class SlotScheduler:
                 if eng.paged:
                     need = eng.alloc.pages_needed(
                         len(req.prompt) + req.max_new_tokens)
-                    # allocation happens inside eng.admit, after this
-                    # loop — count this round's earlier admissions too
+                    # allocation happens inside the admitting dispatch,
+                    # after this loop — count this round's earlier
+                    # admissions too.  Overlap engines re-run this check
+                    # at every chunk boundary (admission is no longer a
+                    # once-per-round event), so a page-blocked request
+                    # is admitted the first chunk after pages free up.
                     if need + pending_pages > len(eng.alloc.free):
                         # wait for a live slot to finish and release
                         # pages — the submit-time guard makes this
@@ -293,9 +363,72 @@ class SlotScheduler:
                 queue.popleft()
                 i = free.pop()
                 slots[i] = _Slot(req=req, tokens=[],
-                                 t_admit=time.perf_counter())
+                                 t_admit=time.perf_counter(),
+                                 phase="prefill" if overlap else "decode")
+                temps[i] = req.temperature
                 newly.append(i)
-            if newly:
+
+            # ---- overlap: one fused mixed-phase dispatch ---------------
+            pre_rows = [i for i in range(B) if slots[i] is not None and
+                        slots[i].phase == "prefill"] if overlap else []
+            if pre_rows:
+                c = eng.prefill_chunk
+                ptoks = np.zeros((B, c), np.int32)
+                ppos = np.full((B, c), -1, np.int32)
+                completes: List[int] = []
+                for i in pre_rows:
+                    s = slots[i]
+                    prompt = s.req.prompt
+                    take = min(c, len(prompt) - s.cursor)
+                    # left-pad the (final, partial) chunk so the row's
+                    # newest token always lands in the last column
+                    ptoks[i, c - take:] = prompt[s.cursor:s.cursor + take]
+                    ppos[i, c - take:] = np.arange(s.cursor, s.cursor + take)
+                    s.cursor += take
+                    if s.cursor == len(prompt):
+                        completes.append(i)
+                admit_budgets = None
+                if newly:
+                    admit_budgets = np.zeros((B,), np.int32)
+                    for i in newly:
+                        admit_budgets[i] = (len(slots[i].req.prompt) +
+                                            slots[i].req.max_new_tokens)
+                dec_rows = [i for i in range(B) if slots[i] is not None and
+                            slots[i].phase == "decode"]
+                dec_mask = np.zeros((B,), bool)
+                dec_mask[dec_rows] = True
+                remaining = np.zeros((B,), np.int32)
+                for i in dec_rows:
+                    remaining[i] = (slots[i].req.max_new_tokens -
+                                    len(slots[i].tokens))
+                first, ok_p, toks, n_valid, new_tok, new_pos, ok_d = \
+                    eng.mixed_chunk(ptoks, ppos, cur_tok, pos, dec_mask,
+                                    temps, rng, remaining=remaining,
+                                    admit_budgets=admit_budgets)
+                t_disp = time.perf_counter()
+                cur_tok, pos = new_tok, new_pos
+                for i in dec_rows:
+                    if not ok_d[i]:  # poisoned chunk: drop its tokens
+                        quarantine(i)
+                        continue
+                    consume(i, toks[i, :n_valid[i]], t_disp)
+                for i in pre_rows:
+                    s = slots[i]
+                    if not ok_p[i]:  # poisoned prefill chunk: re-queue
+                        quarantine(i)  # (the retry restarts the prompt)
+                        continue
+                    if i in completes:
+                        s.phase = "decode"
+                        cur_tok[i, 0] = first[i]
+                        pos[i] = len(s.req.prompt)
+                        consume(i, first[i:i + 1], t_disp)
+                    elif expired(s.req):
+                        finish(i, "timeout")  # timed out mid-prefill
+                sweep_queue()
+                continue
+
+            # ---- non-overlap: monolithic batched admission -------------
+            if not overlap and newly:
                 if not eng.supports_ragged:
                     P = max(len(slots[i].req.prompt) for i in newly)
                 else:
@@ -310,22 +443,31 @@ class SlotScheduler:
                     tokens[i, P - len(p):] = p
                     pads[i] = P - len(p)
                     admit[i] = True
-                    temps[i] = slots[i].req.temperature
                     budgets[i] = len(p) + slots[i].req.max_new_tokens
                 positions = (np.arange(P)[None, :] -
                              pads[:, None]).astype(np.int32)
                 tok0, ok = eng.admit(tokens, positions, admit, temps, rng,
                                      budgets=budgets)
+                t_disp = time.perf_counter()
                 for i in newly:
                     if not ok[i]:  # poisoned prefill: quarantine
                         quarantine(i)
                         continue
                     cur_tok[i, 0] = tok0[i]
                     pos[i] = len(slots[i].req.prompt)
-                    consume(i, tok0[i:i + 1])
+                    consume(i, tok0[i:i + 1], t_disp)
+                sweep_queue()
             # ---- decode one chunk --------------------------------------
             if len(free) == B:
-                continue  # everything finished at its first token
+                if queue:
+                    # every slot free but the queue head hasn't arrived
+                    # yet — sleep toward the next arrival instead of
+                    # spinning (page-blocked is impossible here: all
+                    # slots free ⇒ the whole pool free)
+                    t_next = min(t_submit[r.uid] for r in queue)
+                    time.sleep(min(max(t_next - time.perf_counter(), 0.0),
+                                   0.05))
+                continue  # or: everything finished at its first token
             remaining = np.zeros((B,), np.int32)
             for i in range(B):
                 if slots[i] is not None:
@@ -341,6 +483,7 @@ class SlotScheduler:
                 toks, new_tok, new_pos, ok = eng.decode_chunk(
                     cur_tok, pos, temps, rng, remaining=remaining)
                 n_valid = np.full((B,), toks.shape[1], np.int32)
+            t_disp = time.perf_counter()
             cur_tok, pos = new_tok, new_pos
             for i in range(B):
                 if slots[i] is None:
@@ -348,7 +491,8 @@ class SlotScheduler:
                 if not ok[i]:  # poisoned chunk: drop its tokens
                     quarantine(i)
                     continue
-                consume(i, toks[i, :n_valid[i]])
+                consume(i, toks[i, :n_valid[i]], t_disp)
+            sweep_queue()
 
         out = [done[r.uid] for r in requests]
         self.last_wall_s = time.perf_counter() - t0

@@ -1,0 +1,390 @@
+"""Chunked prefill / prefill-decode overlap: the mixed-dispatch engine.
+
+The overlap engine (the default for attn-only archs) dissolves the
+admit-then-decode round structure: each admitted prompt is prefilled in
+``prefill_chunk``-token slices fused into the decode dispatch, so
+decoding slots keep streaming while a neighbour's prompt is consumed.
+The correctness bar is **bit-identical greedy streams** against the
+non-overlapped (``overlap=False``) engine — chunked prefill writes the
+same cache bytes as a monolithic one, and batch rows are independent —
+plus byte-identical final paged pools under churn, prompt deadline
+enforcement *between* chunks, quarantine compatibility, and
+no-silent-fallback DISPATCH assertions (a B×c chunk stays on the decode
+kernel plan: keep B·c ≤ ops.DECODE_T_MAX).
+
+Also home of the deadline-sweep regression tests (deadlines are checked
+after every dispatch, not once per round) and the hypothesis-gated
+random churn traces through PageAllocator.check_invariants.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.kernels.cola_ae import ops as cao
+from repro.serve.engine import make_engine
+from repro.serve.scheduler import Request
+
+
+def _cfg(**over):
+    # f32 keeps greedy argmax robust to path-dependent rounding
+    return get_config("qwen2-1.5b").smoke().with_overrides(
+        dtype="float32", **over)
+
+
+def _prompt(rng, n, vocab=512):
+    return rng.randint(1, vocab, (n,)).astype(np.int32)
+
+
+def _mk(max_batch=2, max_seq=48, **kw):
+    kw.setdefault("decode_block", 4)
+    return make_engine(_cfg(), max_batch=max_batch, max_seq=max_seq, **kw)
+
+
+def _pool(eng):
+    """The paged KV pool minus the sacrificial page 0 (it absorbs parked
+    writes whose content is mode-dependent by design)."""
+    return [np.asarray(l)[:, eng.page_size:]
+            for l in jax.tree.leaves(eng._caches)]
+
+
+def _serve(eng, reqs):
+    resps = eng.serve(reqs)
+    return {r.uid: (r.tokens.tolist(), r.finish_reason) for r in resps}
+
+
+# churn trace: more requests than slots, ragged lengths spanning several
+# chunks, staggered arrivals, equal budgets (equal budgets keep the
+# finish order identical across modes, which the pool byte-identity
+# check needs — streams are mode-independent regardless)
+def _churn(rng, budget=6):
+    lens = [9, 5, 14, 3, 11, 7]
+    return [Request(uid=i, prompt=_prompt(rng, L), max_new_tokens=budget,
+                    arrival_s=0.02 * i) for i, L in enumerate(lens)]
+
+
+# module-scope engine pair: small page pool (10 usable pages of 4 rows —
+# the full churn trace cannot be resident at once) and a 4-token chunk so
+# every prompt above spans multiple chunks
+_GEOM = dict(page_size=4, n_pages=11, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def ov():
+    eng = _mk(**_GEOM)
+    assert eng.overlap
+    return eng
+
+
+@pytest.fixture(scope="module")
+def nov():
+    eng = _mk(overlap=False, **_GEOM)
+    assert not eng.overlap
+    return eng
+
+
+# --------------------------------------------------------------------------
+# bit-identity + pool byte-identity under churn
+# --------------------------------------------------------------------------
+def test_churn_streams_identical(ov, nov, rng):
+    """Seeded high-churn trace (staggered arrivals × ragged prompts ×
+    page-pool contention): every stream is bit-identical with overlap on
+    vs off."""
+    st = rng.get_state()
+    want = _serve(nov, _churn(rng))
+    rng.set_state(st)
+    got = _serve(ov, _churn(rng))
+    assert got == want
+    s = ov.stats()
+    assert s["mixed_dispatches"] > 0
+    # 4-token chunks: prompt L consumes ceil(L/4) chunks
+    assert s["prefill_chunks"] == sum(-(-L // 4) for L in [9, 5, 14, 3, 11, 7])
+    assert s["pages_in_use"] == 0
+    ov.alloc.check_invariants()
+    # latency accounting rode along: per-request TTFT + inter-token gaps
+    for p in (50, 95, 99):
+        assert s[f"ttft_p{p}_s"] >= 0.0
+        assert s[f"itl_p{p}_s"] >= 0.0
+
+
+def test_churn_pool_byte_identical(rng):
+    """Final paged pools match byte for byte across modes.  The pool's
+    stale bytes encode the full allocation history, so this needs a
+    finish-order-preserving trace: equal prompt lengths + equal budgets
+    keep FIFO admission order == finish order in both modes (a later
+    admission can never overtake under overlap either — its prefill
+    starts at least one dispatch behind).  Ragged traces can legitimately
+    reorder finishes (a short prompt admitted later finishes its chunked
+    prefill first), which permutes page claims without affecting any
+    stream — streams are covered by the ragged churn test above."""
+    st = rng.get_state()
+    mk_reqs = lambda r: [Request(uid=i, prompt=_prompt(r, 8),
+                                 max_new_tokens=6, arrival_s=0.02 * i)
+                         for i in range(6)]
+    a = _mk(**_GEOM)
+    got_a = _serve(a, mk_reqs(rng))
+    rng.set_state(st)
+    b = _mk(overlap=False, **_GEOM)
+    got_b = _serve(b, mk_reqs(rng))
+    assert got_a == got_b
+    assert a.stats()["mixed_dispatches"] > 0
+    for x, y in zip(_pool(a), _pool(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_chunk_width_does_not_change_streams(ov, rng):
+    """prefill_chunk is a latency knob, not a semantics knob: a 16-token
+    chunk (every churn prompt fits in one chunk) yields the same streams
+    as the module fixture's 4-token chunks."""
+    st = rng.get_state()
+    want = _serve(ov, _churn(rng))
+    rng.set_state(st)
+    wide = _mk(page_size=4, n_pages=11, prefill_chunk=16)
+    got = _serve(wide, _churn(rng))
+    assert got == want
+    assert wide.stats()["prefill_chunks"] == 6  # one chunk per prompt
+
+
+def test_eos_inside_chunk_matches_no_overlap(ov, nov, rng):
+    """EOS landing mid-stream while a neighbour is still prefilling:
+    the request truncates at the same token in both modes and the
+    follower's stream is unperturbed."""
+    p, follower = _prompt(rng, 9), _prompt(rng, 6)
+    base = ov.serve([Request(uid=0, prompt=p, max_new_tokens=8)])[0]
+    eos = int(base.tokens[3])
+    mk = lambda: [Request(uid=0, prompt=p, max_new_tokens=8, eos_id=eos),
+                  Request(uid=1, prompt=p, max_new_tokens=8, eos_id=eos),
+                  Request(uid=2, prompt=follower, max_new_tokens=8,
+                          arrival_s=0.01)]
+    want = _serve(nov, mk())
+    got = _serve(ov, mk())
+    assert got == want
+    assert got[0][1] == "eos" and got[0][0][-1] == eos
+
+
+# --------------------------------------------------------------------------
+# deadline enforcement between chunks (the sweep regression tests)
+# --------------------------------------------------------------------------
+def test_deadline_fires_mid_prefill(rng):
+    """A tight deadline on a long prompt times out *between* prefill
+    chunks: the request is finalized with zero tokens after consuming
+    only part of its prompt — admission of a long prompt can no longer
+    run to completion past its deadline."""
+    hook = lambda kind, idx: ({"delay_s": 0.03} if kind == "prefill"
+                              else None)
+    eng = _mk(max_seq=64, prefill_chunk=4)
+    eng.fault_hook = hook
+    long_req = Request(uid=0, prompt=_prompt(rng, 24), max_new_tokens=4,
+                       deadline_s=0.05)
+    ok_req = Request(uid=1, prompt=_prompt(rng, 5), max_new_tokens=4)
+    resps = eng.serve([long_req, ok_req])
+    assert resps[0].finish_reason == "timeout"
+    assert resps[0].tokens.size == 0 and resps[0].ttft_s is None
+    s = eng.stats()
+    assert s["timeouts"] == 1
+    # the 24-token prompt needed 6 chunks; the deadline cut it short
+    assert 0 < s["prefill_chunks"] - 2 < 6  # (2 chunks were uid 1's)
+    assert resps[1].finish_reason == "length" and len(resps[1].tokens) == 4
+
+
+def test_queued_deadline_swept_after_every_dispatch(rng):
+    """Regression: deadlines used to be evaluated only at round
+    boundaries, so a queued request whose deadline passed during a long
+    dispatch was finalized one full round late.  The sweep now runs after
+    every dispatch and emits a ``queue_timeout`` event — only the sweep
+    path emits it, so its presence proves the request was reaped while
+    the slot holder was still mid-generation."""
+    armed = [False]
+
+    def hook(kind, idx):
+        if armed[0] and kind == "decode":
+            return {"delay_s": 0.05}
+        return None
+
+    eng = _mk(max_batch=1, max_seq=64)
+    eng.fault_hook = hook
+    # warm every jit shape first so the timed trace sees millisecond
+    # dispatches plus exactly the injected delays
+    eng.serve([Request(uid=0, prompt=_prompt(rng, 5), max_new_tokens=13)])
+    eng.reset_stats()
+    armed[0] = True
+    resps = eng.serve([
+        Request(uid=0, prompt=_prompt(rng, 5), max_new_tokens=13),
+        Request(uid=1, prompt=_prompt(rng, 5), max_new_tokens=4,
+                deadline_s=0.02),
+    ])
+    assert resps[0].finish_reason == "length"
+    assert resps[1].finish_reason == "timeout" and resps[1].tokens.size == 0
+    assert {"kind": "queue_timeout", "uid": 1} in eng.events
+    assert resps[1].latency_s < resps[0].latency_s
+
+
+# --------------------------------------------------------------------------
+# quarantine composes with chunked prefill
+# --------------------------------------------------------------------------
+def test_poisoned_prefill_chunk_quarantined_and_retried(ov, rng):
+    """A NaN-poisoned prefill *chunk* quarantines only its slot: the
+    request is re-queued and its retry restarts the prompt from scratch,
+    the neighbour's stream is untouched, and both final streams match
+    the unpoisoned engine's."""
+    st = rng.get_state()
+    reqs = [Request(uid=0, prompt=_prompt(rng, 9), max_new_tokens=5),
+            Request(uid=1, prompt=_prompt(rng, 6), max_new_tokens=5)]
+    want = _serve(ov, reqs)
+    fired = [False]
+
+    def hook(kind, idx):
+        # one shot: poison slot 1 (the first admission pops slot 1 off
+        # the free list) in the very first prefill-tagged dispatch
+        if kind == "prefill" and not fired[0]:
+            fired[0] = True
+            return {"poison": np.array([False, True])}
+        return None
+
+    rng.set_state(st)
+    eng = _mk(**_GEOM)
+    eng.fault_hook = hook
+    got = _serve(eng, [Request(uid=0, prompt=_prompt(rng, 9),
+                               max_new_tokens=5),
+                       Request(uid=1, prompt=_prompt(rng, 6),
+                               max_new_tokens=5)])
+    assert got == want
+    s = eng.stats()
+    assert s["quarantines"] == 1 and s["requeues"] == 1
+    assert s["nonfinite_chunks"] >= 1
+    eng.alloc.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# overlap composes with speculative decoding and quantized streaming
+# --------------------------------------------------------------------------
+def test_spec_overlap_matches_spec_no_overlap(rng):
+    """Speculative decoding under overlap: draft KV prefills chunk by
+    chunk alongside the full model's, spec rounds are masked to decoding
+    rows, and greedy streams match the non-overlapped spec engine.  On a
+    finish-order-preserving trace (equal lengths/budgets) the final
+    pools — full model's AND the draft's — also match byte for byte,
+    proving rejected-draft rollback zeroed exactly the same rows."""
+    mk = lambda **kw: _mk(max_seq=64, prefill_chunk=4, speculate=True,
+                          spec_window=3, **kw)
+    st = rng.get_state()
+    even = lambda r: [Request(uid=i, prompt=_prompt(r, 9),
+                              max_new_tokens=6, arrival_s=0.01 * i)
+                      for i in range(4)]
+    ragged = lambda r: [Request(uid=i, prompt=_prompt(r, L),
+                                max_new_tokens=6, arrival_s=0.01 * i)
+                        for i, L in enumerate([9, 5, 11, 7])]
+    spec_off = mk(overlap=False)
+    want_even = _serve(spec_off, even(rng))
+    rng.set_state(st)
+    spec_on = mk()
+    assert spec_on.overlap and spec_on.speculating
+    got_even = _serve(spec_on, even(rng))
+    assert got_even == want_even
+    assert spec_on.stats()["mixed_dispatches"] > 0
+    # pool bytes compared while histories are still finish-order
+    # preserving (the even trace) — BEFORE the ragged trace below, whose
+    # legitimate finish reordering would desync the stale bytes
+    for a, b in zip(_pool(spec_on), _pool(spec_off)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(spec_on._draft_caches),
+                    jax.tree.leaves(spec_off._draft_caches)):
+        np.testing.assert_array_equal(
+            np.asarray(a)[:, spec_on.page_size:],
+            np.asarray(b)[:, spec_off.page_size:])
+    st2 = rng.get_state()
+    want_ragged = _serve(spec_off, ragged(rng))
+    rng.set_state(st2)
+    assert _serve(spec_on, ragged(rng)) == want_ragged
+    spec_on.alloc.check_invariants()
+
+
+def test_int8_overlap_matches_no_overlap(rng):
+    """Quantized weight streaming under overlap: the int8 factors are
+    dequantized in-VMEM identically for prefill chunks and decode steps,
+    so overlap on/off streams stay bit-identical."""
+    st = rng.get_state()
+    reqs = lambda r: [Request(uid=i, prompt=_prompt(r, L),
+                              max_new_tokens=4)
+                      for i, L in enumerate([7, 5])]
+    with cao.force_impl("pallas", True):
+        off = _mk(prefill_chunk=4, overlap=False, weight_dtype="int8")
+        want = _serve(off, reqs(rng))
+        rng.set_state(st)
+        on = _mk(prefill_chunk=4, weight_dtype="int8")
+        got = _serve(on, reqs(rng))
+    assert got == want
+    assert on.stats()["mixed_dispatches"] > 0
+
+
+# --------------------------------------------------------------------------
+# no silent fallback: mixed dispatches stay on the decode kernel plan
+# --------------------------------------------------------------------------
+def test_mixed_dispatch_never_takes_training_kernel(rng):
+    """With the fused path forced onto Pallas, every AE execution under
+    overlap is an infer-mode plan: the B×c prefill chunk (B·c = 8 ≤
+    DECODE_T_MAX) rides the same decode-kernel plan as the decode steps —
+    zero training-shaped kernels, zero ref fallbacks."""
+    cfg = _cfg()
+    cfg = cfg.with_overrides(cola=dataclasses.replace(
+        cfg.cola, use_fused_kernel=True))
+    cao.reset_dispatch()
+    with cao.force_impl("pallas", True):
+        eng = make_engine(cfg, max_batch=2, max_seq=48, decode_block=4,
+                          prefill_chunk=4)
+        eng.serve([Request(uid=0, prompt=_prompt(rng, 9),
+                           max_new_tokens=6),
+                   Request(uid=1, prompt=_prompt(rng, 5),
+                           max_new_tokens=6, arrival_s=0.01)])
+    assert eng.stats()["mixed_dispatches"] > 0
+    d = dict(cao.DISPATCH)
+    assert d.get("infer_decode", 0) > 0, d
+    assert d.get("infer_ref", 0) == 0, d
+    for key in ("fwd_pallas", "fwd_monolith", "fwd_staged", "bwd_pallas",
+                "bwd_monolith", "bwd_staged", "fwd_ref", "bwd_ref"):
+        assert d.get(key, 0) == 0, (key, d)
+
+
+# --------------------------------------------------------------------------
+# randomized churn traces keep the page pool coherent (hypothesis-driven
+# when available; a fixed seed sweep otherwise)
+# --------------------------------------------------------------------------
+def _check_random_trace(ov, nov, seed, n_reqs, budget):
+    """Random arrival trace (lengths, budgets, stagger) through the
+    small-pool engine pair: streams bit-identical across modes, every
+    page released at drain, allocator invariants intact."""
+    r = np.random.RandomState(seed)
+    lens = r.randint(2, 15, n_reqs)
+    arr = r.uniform(0.0, 0.04, n_reqs)
+    prompts = [r.randint(1, 512, L).astype(np.int32) for L in lens]
+    mk = lambda: [Request(uid=i, prompt=p, max_new_tokens=budget,
+                          arrival_s=float(a))
+                  for i, (p, a) in enumerate(zip(prompts, arr))]
+    want = _serve(nov, mk())
+    got = _serve(ov, mk())
+    assert got == want
+    ov.alloc.check_invariants()
+    nov.alloc.check_invariants()
+    assert ov.stats()["pages_in_use"] == 0
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+if st is not None:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 1000), n_reqs=st.integers(3, 6),
+           budget=st.integers(2, 8))
+    def test_random_traces_streams_match_and_pool_coherent(ov, nov, seed,
+                                                           n_reqs, budget):
+        _check_random_trace(ov, nov, seed, n_reqs, budget)
+else:
+    @pytest.mark.parametrize("seed,n_reqs,budget",
+                             [(0, 4, 5), (7, 3, 2), (23, 6, 8)])
+    def test_random_traces_streams_match_and_pool_coherent(ov, nov, seed,
+                                                           n_reqs, budget):
+        _check_random_trace(ov, nov, seed, n_reqs, budget)
